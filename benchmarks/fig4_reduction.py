@@ -1,0 +1,32 @@
+"""Paper Fig. 4: memory-access & computation reduction vs corpus size."""
+from repro.core import energy as en
+
+
+def run(verbose=True):
+    rows = []
+    for n in (100, 200, 500, 1000, 2000, 5000, 10000):
+        rows.append({"chunks": n,
+                     "memory_reduction": en.memory_reduction(n),
+                     "compute_reduction": en.compute_reduction(n),
+                     "candidates": en.default_candidates(n)})
+    if verbose:
+        print("== Fig. 4: reduction vs corpus size (paper: 30->~50% mem, "
+              "55->74.7% compute) ==")
+        print(f"{'chunks':>8} {'cand':>5} {'mem_red':>8} {'comp_red':>9}")
+        for r in rows:
+            print(f"{r['chunks']:>8} {r['candidates']:>5} "
+                  f"{r['memory_reduction']:>8.3f} "
+                  f"{r['compute_reduction']:>9.3f}")
+    first, last = rows[0], rows[-1]
+    checks = {
+        "mem_red@100 ~ 0.30": abs(first["memory_reduction"] - 0.30) < 0.02,
+        "mem_red@10k ~ 0.50": abs(last["memory_reduction"] - 0.495) < 0.01,
+        "comp_red@100 ~ 0.55": abs(first["compute_reduction"] - 0.55) < 0.02,
+        "comp_red@10k ~ 0.747": abs(last["compute_reduction"] - 0.745) < 0.01,
+    }
+    return {"rows": rows, "checks": checks}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(out["checks"])

@@ -1,0 +1,44 @@
+"""Paper Fig. 5(b): energy per query for INT8 / INT4 / hierarchical,
+on the three evaluation corpora (sizes matched to the BEIR subsets the
+paper's numbers imply), plus the TPU-v5e constant set for the pod-scale
+variant of the same comparison."""
+from repro.core import energy as en
+
+CORPORA = {"SciFact": 4020, "NFCorpus": 3600, "ArguAna": 8700}
+
+
+def run(verbose=True):
+    rows = []
+    for name, n in CORPORA.items():
+        row = {"corpus": name, "docs": n}
+        for label, fn in (("INT8", en.cost_int8), ("INT4", en.cost_int4),
+                          ("Hier", en.cost_hierarchical)):
+            row[label] = fn(n).total_uj
+        for label, fn in (("INT8-v5e", en.cost_int8),
+                          ("Hier-v5e", en.cost_hierarchical)):
+            row[label] = fn(n, consts=en.TPU_V5E).total_uj
+        rows.append(row)
+    if verbose:
+        print("== Fig. 5(b): energy per query (uJ) ==")
+        print(f"{'corpus':>10} {'docs':>6} {'INT8':>9} {'INT4':>9} "
+              f"{'Hier':>9} {'Hier/INT8':>10}")
+        for r in rows:
+            print(f"{r['corpus']:>10} {r['docs']:>6} {r['INT8']:>9.2f} "
+                  f"{r['INT4']:>9.2f} {r['Hier']:>9.2f} "
+                  f"{r['Hier'] / r['INT8']:>10.3f}")
+        print("(paper: hierarchical reaches INT4-level energy at INT8-level "
+              "precision; SciFact hier = 337.74 uJ in Table III)")
+    checks = {}
+    for r in rows:
+        checks[f"{r['corpus']}: int4 <= hier < int8"] = (
+            r["INT4"] <= r["Hier"] < r["INT8"])
+        checks[f"{r['corpus']}: hier close to int4"] = (
+            r["Hier"] / r["INT4"] < 1.10)
+    sci = next(r for r in rows if r["corpus"] == "SciFact")
+    checks["SciFact hier ~337.74uJ (Table III)"] = (
+        abs(sci["Hier"] - 337.74) / 337.74 < 0.05)
+    return {"rows": rows, "checks": checks}
+
+
+if __name__ == "__main__":
+    print(run()["checks"])

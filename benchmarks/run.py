@@ -1,0 +1,68 @@
+"""Benchmark orchestrator: one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (fig4_reduction, fig5_energy, kernel_bench,  # noqa: E402
+                        table1_precision, table2_energy,
+                        table3_comparison)
+
+
+def main() -> int:
+    modules = [
+        ("Fig. 4  (memory/compute reduction)", fig4_reduction),
+        ("Table I (retrieval precision protocol)", table1_precision),
+        ("Table II (module energy)", table2_energy),
+        ("Fig. 5  (energy per query by format)", fig5_energy),
+        ("Table III (accelerator comparison)", table3_comparison),
+        ("Kernel microbench", kernel_bench),
+    ]
+    failures = []
+    for name, mod in modules:
+        print("\n" + "=" * 72)
+        print(name)
+        print("=" * 72)
+        try:
+            out = mod.run(verbose=True)
+            for check, ok in out["checks"].items():
+                print(f"  [{'PASS' if ok else 'FAIL'}] {check}")
+                if not ok:
+                    failures.append(f"{name}: {check}")
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(f"{name}: exception")
+
+    # roofline table (requires results/dryrun.json from the dry-run)
+    print("\n" + "=" * 72)
+    print("Roofline (from dry-run artifacts)")
+    print("=" * 72)
+    try:
+        from benchmarks import roofline
+        if os.path.exists(roofline.RESULTS):
+            roofline.run(verbose=True)
+        else:
+            print("  (results/dryrun.json not found — run "
+                  "`python -m repro.launch.dryrun --all --mesh both` first)")
+    except Exception:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append("roofline: exception")
+
+    print("\n" + "=" * 72)
+    if failures:
+        print(f"{len(failures)} benchmark check(s) FAILED:")
+        for f in failures:
+            print("  -", f)
+        return 1
+    print("ALL BENCHMARK CHECKS PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

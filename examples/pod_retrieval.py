@@ -1,0 +1,50 @@
+"""Pod-scale sharded retrieval demo: the corpus lives row-sharded over
+every device of a mesh; one query runs the two-level top-k TOURNAMENT
+(local stage-1 -> O(k * devices) proposal gather -> owner-only stage-2 ->
+replicated rerank). Forces 8 host devices to demonstrate (must be set
+before jax imports, hence the top of this file).
+
+    PYTHONPATH=src python examples/pod_retrieval.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import (RetrievalConfig, quantize_int8)  # noqa: E402
+from repro.core.index import ShardedIndex  # noqa: E402
+from repro.data import retrieval_corpus  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
+
+
+def main():
+    mesh = make_test_mesh(data=4, model=2)
+    print(f"mesh: {dict(mesh.shape)} = {mesh.devices.size} devices")
+
+    docs, queries, gold = retrieval_corpus(num_docs=20000, dim=512,
+                                           num_queries=8, noise=0.12, seed=1)
+    t0 = time.time()
+    index = ShardedIndex.build(jnp.asarray(docs), mesh)
+    print(f"sharded {index.n_global} docs over {mesh.devices.size} shards "
+          f"in {time.time()-t0:.1f}s "
+          f"({index.db.msb_plane.sharding.spec} rows/shard)")
+
+    retrieve = index.retrieve_fn(RetrievalConfig(k=3, metric="cosine"))
+    qc, _ = quantize_int8(jnp.asarray(queries), per_vector=True)
+    res = retrieve(qc)                       # batched tournament
+    hits = int(np.sum(np.asarray(res.indices)[:, 0] == gold))
+    print(f"tournament P@1: {hits}/8 "
+          f"(cross-shard traffic per query: "
+          f"{50 * mesh.devices.size * 8} B of proposals — independent of "
+          f"corpus size)")
+    for i in range(3):
+        print(f"  q{i}: top-3 {np.asarray(res.indices)[i].tolist()} "
+              f"(gold {gold[i]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Core library: the paper's hierarchical retrieval as composable JAX modules."""
+from repro.core.quantization import (QuantizedDB, build_database, dequantize,
+                                     lsb_nibble, msb_nibble, quantize_int4,
+                                     quantize_int8, reconstruct_from_nibbles)
+from repro.core.bitplanar import (BitPlanarDB, pack_bitplanes,
+                                  pack_nibble_planes, reconstruct_int8,
+                                  unpack_bitplanes,
+                                  unpack_nibble_plane_signed,
+                                  unpack_nibble_plane_unsigned)
+from repro.core.similarity import (cosine_key_f32, fraction_greater, int_dot,
+                                   int_matvec, rerank_dense_comparator,
+                                   topk_mips)
+from repro.core.retrieval import (RetrievalConfig, RetrievalResult,
+                                  batched_retrieve, exact_retrieve,
+                                  int4_retrieve, two_stage_retrieve)
+from repro.core import energy

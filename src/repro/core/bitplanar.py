@@ -1,0 +1,147 @@
+"""Bit-planar / nibble-planar storage of INT8 embedding databases.
+
+The paper stores a 512-dim INT8 embedding as 8 DRAM rows of 512 bits — one
+row per bit position — so stage 1 can fetch only the 4 MSB rows (half the
+traffic). TPUs cannot address single bits in HBM, so the streaming path of
+this framework uses the *nibble-planar* degradation: two planes,
+
+    msb_plane: (N, D/2) uint8 — two MSB nibbles packed per byte
+    lsb_plane: (N, D/2) uint8 — two LSB nibbles packed per byte
+
+which preserves exactly the 4+4 split the paper exploits (stage 1 touches
+only msb_plane = 1/2 the bytes). The full 8-plane layout is also implemented
+(pack_bitplanes/unpack_bitplanes) for fidelity and for the energy simulator,
+which accounts traffic at bit-row granularity like the ASIC.
+
+All pack/unpack functions are exact inverses (tested by property tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Nibble planes (the TPU streaming layout)
+# ---------------------------------------------------------------------------
+
+def pack_nibble_planes(codes_int8: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split (N, D) int8 into (msb_plane, lsb_plane), each (N, D//2) uint8.
+
+    Byte j of a plane packs dims (2j, 2j+1): low nibble = dim 2j,
+    high nibble = dim 2j+1. Nibbles are stored in raw two's-complement
+    (msb nibble of value v is (v >> 4) & 0xF).
+    """
+    n, d = codes_int8.shape
+    assert d % 2 == 0, "dimension must be even to pack 2 nibbles per byte"
+    u = codes_int8.view(jnp.uint8) if codes_int8.dtype == jnp.int8 else codes_int8.astype(jnp.uint8)
+    msb = (u >> 4) & jnp.uint8(0xF)           # (N, D) raw msb nibbles
+    lsb = u & jnp.uint8(0xF)                  # (N, D) raw lsb nibbles
+
+    def _pack(nib):  # (N, D) 4-bit values -> (N, D//2) bytes
+        nib = nib.reshape(n, d // 2, 2)
+        return (nib[..., 0] | (nib[..., 1] << 4)).astype(jnp.uint8)
+
+    return _pack(msb), _pack(lsb)
+
+
+def unpack_nibble_plane_signed(plane: jax.Array) -> jax.Array:
+    """(N, D//2) uint8 msb-plane -> (N, D) int8 signed nibbles in [-8, 7]."""
+    lo = plane & jnp.uint8(0xF)
+    hi = (plane >> 4) & jnp.uint8(0xF)
+    nib = jnp.stack([lo, hi], axis=-1).reshape(plane.shape[0], -1)
+    # sign-extend 4-bit two's complement
+    return (nib.astype(jnp.int8) ^ jnp.int8(8)) - jnp.int8(8)
+
+
+def unpack_nibble_plane_unsigned(plane: jax.Array) -> jax.Array:
+    """(N, D//2) uint8 lsb-plane -> (N, D) int8 unsigned nibbles in [0, 15]."""
+    lo = plane & jnp.uint8(0xF)
+    hi = (plane >> 4) & jnp.uint8(0xF)
+    return jnp.stack([lo, hi], axis=-1).reshape(plane.shape[0], -1).astype(jnp.int8)
+
+
+def reconstruct_int8(msb_plane: jax.Array, lsb_plane: jax.Array) -> jax.Array:
+    """Exact inverse of pack_nibble_planes."""
+    msb = unpack_nibble_plane_signed(msb_plane).astype(jnp.int16)
+    lsb = unpack_nibble_plane_unsigned(lsb_plane).astype(jnp.int16)
+    return (msb * 16 + lsb).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Full 8-plane bit-planar layout (ASIC-faithful; used by the energy model)
+# ---------------------------------------------------------------------------
+
+def pack_bitplanes(codes_int8: jax.Array) -> jax.Array:
+    """(N, D) int8 -> (8, N, D//8) uint8 bit-planes.
+
+    Plane b holds bit b (b=7 is the sign/MSB bit) of all D dims, packed
+    8 dims per byte (dim k -> byte k//8, bit k%8). Mirrors one DRAM row
+    per bit position in the paper's layout.
+    """
+    n, d = codes_int8.shape
+    assert d % 8 == 0
+    u = codes_int8.view(jnp.uint8) if codes_int8.dtype == jnp.int8 else codes_int8.astype(jnp.uint8)
+    planes = []
+    shifts = jnp.arange(8, dtype=jnp.uint8)  # bit position within packed byte
+    for b in range(8):
+        bits = (u >> b) & jnp.uint8(1)                       # (N, D)
+        bits = bits.reshape(n, d // 8, 8)
+        packed = jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+        planes.append(packed)
+    return jnp.stack(planes, axis=0)
+
+
+def unpack_bitplanes(planes: jax.Array, *, num_planes: int = 8) -> jax.Array:
+    """(8, N, D//8) uint8 -> (N, D) int8.
+
+    With num_planes < 8, only the top `num_planes` bit-planes are read
+    (the rest stay "in DRAM") and the value is reconstructed with the
+    missing low bits as zero — exactly what the stage-1 MSB read does.
+    """
+    _, n, db = planes.shape
+    d = db * 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    acc = jnp.zeros((n, d), dtype=jnp.uint8)
+    for b in range(8 - num_planes, 8):
+        packed = planes[b]
+        bits = ((packed[..., None] >> shifts) & jnp.uint8(1)).reshape(n, d)
+        acc = acc | (bits << jnp.uint8(b))
+    return acc.view(jnp.int8)
+
+
+@dataclasses.dataclass(frozen=True)
+class BitPlanarDB:
+    """Nibble-planar database as streamed on TPU.
+
+    msb_plane, lsb_plane: (N, D//2) uint8.
+    norms_sq: (N,) int64 integer squared norms of the full INT8 codes.
+    scale: dequant scale (see quantization.QuantizedDB).
+    """
+
+    msb_plane: jax.Array
+    lsb_plane: jax.Array
+    norms_sq: jax.Array
+    scale: jax.Array
+
+    @property
+    def num_docs(self) -> int:
+        return self.msb_plane.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.msb_plane.shape[1] * 2
+
+    @classmethod
+    def from_quantized(cls, db) -> "BitPlanarDB":
+        msb, lsb = pack_nibble_planes(db.values)
+        return cls(msb_plane=msb, lsb_plane=lsb, norms_sq=db.norms_sq, scale=db.scale)
+
+
+jax.tree_util.register_pytree_node(
+    BitPlanarDB,
+    lambda db: ((db.msb_plane, db.lsb_plane, db.norms_sq, db.scale), None),
+    lambda _, leaves: BitPlanarDB(*leaves),
+)

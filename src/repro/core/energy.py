@@ -1,0 +1,175 @@
+"""Energy / memory-access / compute cost model (the paper's Python simulator).
+
+Reproduces:
+  * Table II  — per-module energy for a 1 MB INT8 database query,
+  * Fig. 4    — memory-access & computation reduction vs corpus size,
+  * Fig. 5(b) — energy per query for INT8 / INT4 / hierarchical formats,
+  * Table III — energy/query comparison on a SciFact-sized corpus.
+
+Accounting model (documented; the paper gives pJ/bit constants in Table II
+and we derive traffic/ops from the architecture):
+
+  DRAM bits   = bits streamed off-chip.  Stage 1 reads the 4 MSB bit-planes
+                of every document (bit-planar storage makes this exact);
+                stage 2 re-reads the full 8 bits of the C candidates.
+  SRAM bits   = 2 x DRAM bits (streaming buffers are written then read once;
+                query-stationary dataflow means the query contributes only
+                D*8 bits once — negligible and included).
+  PE bits     = MACs x (bits_a + bits_b + ACC_BITS): every MAC consumes two
+                operands and updates a 32-bit accumulator.
+  SimCalc bits= MACs x ACC_BITS  (partial-sum fusion across the 4 PEs,
+                norm handling, final similarity).
+  Rerank bits = comparisons x 2 x ACC_BITS, with the paper's streaming dense
+                comparator doing N comparisons against the running top-C in
+                stage 1 plus C*C dense comparisons in stage 2.
+
+A second constant set (TPU_V5E) reuses the same accounting at pod scale so
+the benefit of hierarchical retrieval can be stated for the TPU target
+(HBM pJ/bit derived from public v5e HBM power/bandwidth estimates).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+ACC_BITS = 32
+NORM_BITS = 32  # stored per-doc squared-norm sidecar
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConstants:
+    """pJ per bit moved/processed, per module."""
+    name: str
+    dram: float
+    sram: float
+    pe: float
+    simcalc: float
+    rerank: float
+
+
+# Paper Table II (TSMC 28 nm; DRAM constants from Horowitz / Sze et al.)
+PAPER_28NM = EnergyConstants(name="paper-28nm", dram=40.0, sram=0.2,
+                             pe=0.0078, simcalc=0.0003, rerank=0.0001)
+
+# TPU v5e-equivalent accounting: HBM2e ~= 819 GB/s; public estimates put HBM
+# power at ~3-4 W per chip => ~0.5 pJ/bit effective; VMEM ~0.05 pJ/bit; MXU
+# MAC energy folded into 'pe'. These are order-of-magnitude constants used
+# ONLY for relative comparisons (hierarchical vs INT8) at pod scale.
+TPU_V5E = EnergyConstants(name="tpu-v5e", dram=0.5, sram=0.05,
+                          pe=0.002, simcalc=0.0003, rerank=0.0001)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Per-module energy (pJ) + traffic/compute tallies for one query."""
+    dram_bits: float
+    sram_bits: float
+    pe_bits: float
+    simcalc_bits: float
+    rerank_bits: float
+    macs: float
+    dram_pj: float
+    sram_pj: float
+    pe_pj: float
+    simcalc_pj: float
+    rerank_pj: float
+
+    @property
+    def total_pj(self) -> float:
+        return (self.dram_pj + self.sram_pj + self.pe_pj
+                + self.simcalc_pj + self.rerank_pj)
+
+    @property
+    def total_uj(self) -> float:
+        return self.total_pj * 1e-6
+
+    def proportions(self) -> dict[str, float]:
+        t = self.total_pj
+        return {"DRAM": self.dram_pj / t, "SRAM": self.sram_pj / t,
+                "PE": self.pe_pj / t, "SimCalc": self.simcalc_pj / t,
+                "Rerank": self.rerank_pj / t}
+
+
+def _cost(n_docs: int, dim: int, *, doc_bits_read, mac_terms, compares,
+          consts: EnergyConstants, include_norms: bool) -> CostBreakdown:
+    dram_bits = doc_bits_read + (n_docs * NORM_BITS if include_norms else 0)
+    sram_bits = 2 * dram_bits + dim * 8  # + one query load
+    macs = sum(m for m, _, _ in mac_terms)
+    pe_bits = sum(m * (ba + bb + ACC_BITS) for m, ba, bb in mac_terms)
+    simcalc_bits = macs * ACC_BITS
+    rerank_bits = compares * 2 * ACC_BITS
+    return CostBreakdown(
+        dram_bits=dram_bits, sram_bits=sram_bits, pe_bits=pe_bits,
+        simcalc_bits=simcalc_bits, rerank_bits=rerank_bits, macs=macs,
+        dram_pj=dram_bits * consts.dram, sram_pj=sram_bits * consts.sram,
+        pe_pj=pe_bits * consts.pe, simcalc_pj=simcalc_bits * consts.simcalc,
+        rerank_pj=rerank_bits * consts.rerank,
+    )
+
+
+def default_candidates(n_docs: int, max_candidates: int = 50,
+                       frac: float = 0.2) -> int:
+    return max(1, min(max_candidates, math.ceil(frac * n_docs)))
+
+
+def cost_int8(n_docs: int, dim: int = 512, *, consts=PAPER_28NM,
+              include_norms: bool = False) -> CostBreakdown:
+    """Baseline: pure INT8 retrieval over the whole corpus."""
+    return _cost(n_docs, dim,
+                 doc_bits_read=n_docs * dim * 8,
+                 mac_terms=[(n_docs * dim, 8, 8)],
+                 compares=n_docs,
+                 consts=consts, include_norms=include_norms)
+
+
+def cost_int4(n_docs: int, dim: int = 512, *, consts=PAPER_28NM,
+              include_norms: bool = False) -> CostBreakdown:
+    """Baseline: pure INT4 (MSB nibble only) retrieval."""
+    return _cost(n_docs, dim,
+                 doc_bits_read=n_docs * dim * 4,
+                 mac_terms=[(n_docs * dim, 4, 4)],
+                 compares=n_docs,
+                 consts=consts, include_norms=include_norms)
+
+
+def cost_hierarchical(n_docs: int, dim: int = 512, *, candidates: int | None = None,
+                      consts=PAPER_28NM, include_norms: bool = False) -> CostBreakdown:
+    """The paper's two-stage scheme: MSB-INT4 over all docs + INT8 over C."""
+    c = default_candidates(n_docs) if candidates is None else candidates
+    return _cost(n_docs, dim,
+                 doc_bits_read=n_docs * dim * 4 + c * dim * 8,
+                 mac_terms=[(n_docs * dim, 4, 4), (c * dim, 8, 8)],
+                 compares=n_docs + c * c,
+                 consts=consts, include_norms=include_norms)
+
+
+# ---------------------------------------------------------------------------
+# Paper-figure helpers
+# ---------------------------------------------------------------------------
+
+def memory_reduction(n_docs: int, dim: int = 512,
+                     candidates: int | None = None) -> float:
+    """Fig. 4 memory-access reduction of hierarchical vs pure INT8."""
+    base = cost_int8(n_docs, dim).dram_bits
+    ours = cost_hierarchical(n_docs, dim, candidates=candidates).dram_bits
+    return 1.0 - ours / base
+
+
+def compute_reduction(n_docs: int, dim: int = 512,
+                      candidates: int | None = None) -> float:
+    """Fig. 4 computation reduction (nibble-MAC-equivalents: an 8x8 MAC
+    decomposes into 4 nibble MACs on the paper's 4-bit PEs)."""
+    def nibble_macs(cb: CostBreakdown, terms):
+        return sum(m * (ba // 4) * (bb // 4) for m, ba, bb in terms)
+    c = default_candidates(n_docs) if candidates is None else candidates
+    base = nibble_macs(None, [(n_docs * dim, 8, 8)])
+    ours = nibble_macs(None, [(n_docs * dim, 4, 4), (c * dim, 8, 8)])
+    return 1.0 - ours / base
+
+
+def db_bytes(n_docs: int, dim: int = 512) -> int:
+    return n_docs * dim  # INT8: 1 byte per dim
+
+
+def docs_for_db_mb(mb: float, dim: int = 512) -> int:
+    return int(mb * 1024 * 1024 // dim)

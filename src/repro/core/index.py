@@ -1,0 +1,148 @@
+"""Pod-scale sharded hierarchical retrieval index.
+
+The corpus is sharded row-wise over EVERY mesh device (the flattened
+(pod, data, model) axes). One retrieval executes as:
+
+  1. local stage-1 (MSB-nibble) scoring over the device's shard,
+  2. local top-C proposal,
+  3. all-gather of (score, global-id) proposals — O(C * devices) bytes,
+     independent of corpus size (the "tournament"),
+  4. global top-C selection (exact: the global top-C is always contained
+     in the union of local top-Cs),
+  5. stage-2 exact INT8 rescoring ONLY on the shard(s) owning each
+     candidate, combined with a psum (each row owned exactly once),
+  6. replicated final top-k via the non-division comparator.
+
+The same function runs on a 1-device test mesh and the 512-device
+production mesh (shard_map is mesh-polymorphic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import bitplanar, quantization, similarity
+from repro.core.retrieval import (RetrievalConfig, RetrievalResult,
+                                  stage1_scores_jnp, stage2_scores_jnp)
+
+
+def pad_database(db: bitplanar.BitPlanarDB, num_shards: int) -> bitplanar.BitPlanarDB:
+    """Pad row count to a multiple of num_shards with all-zero docs.
+
+    Zero docs have norm 0 => cosine similarity 0 and MIPS score 0, so they
+    never displace real results (ids >= N are also filterable downstream).
+    """
+    n = db.num_docs
+    pad = (-n) % num_shards
+    if pad == 0:
+        return db
+    zpad = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    return bitplanar.BitPlanarDB(
+        msb_plane=zpad(db.msb_plane), lsb_plane=zpad(db.lsb_plane),
+        norms_sq=zpad(db.norms_sq), scale=db.scale)
+
+
+def shard_database(db: bitplanar.BitPlanarDB, mesh: Mesh) -> bitplanar.BitPlanarDB:
+    """Place a (padded) database row-sharded over all mesh axes."""
+    axes = tuple(mesh.axis_names)
+    row_sharded = NamedSharding(mesh, P(axes))
+    replicated = NamedSharding(mesh, P())
+    return bitplanar.BitPlanarDB(
+        msb_plane=jax.device_put(db.msb_plane, row_sharded),
+        lsb_plane=jax.device_put(db.lsb_plane, row_sharded),
+        norms_sq=jax.device_put(db.norms_sq, row_sharded),
+        scale=jax.device_put(db.scale, replicated))
+
+
+def _tournament_retrieve(q: jax.Array, msb_plane: jax.Array,
+                         lsb_plane: jax.Array, norms_sq: jax.Array,
+                         *, cfg: RetrievalConfig, n_global: int,
+                         axis: str) -> RetrievalResult:
+    """Body run per-shard under shard_map. q replicated; planes sharded."""
+    n_local = msb_plane.shape[0]
+    shard_id = jax.lax.axis_index(axis)
+    offset = shard_id * n_local
+    c = min(cfg.num_candidates(n_global), n_global)
+    c_local = min(c, n_local)
+
+    # ---- Stage 1: local approximate scoring + local proposal.
+    q_msb = quantization.msb_nibble(q)
+    approx = stage1_scores_jnp(q_msb, msb_plane)             # (n_local,) i32
+    if cfg.metric == "cosine":
+        key1 = similarity.cosine_key_f32(approx, norms_sq)
+    else:
+        key1 = approx.astype(jnp.float32)
+    loc_key, loc_idx = jax.lax.top_k(key1, c_local)          # (c_local,)
+    loc_gid = (loc_idx + offset).astype(jnp.int32)
+
+    # ---- Tournament: gather proposals, pick global top-C.
+    all_key = jax.lax.all_gather(loc_key, axis).reshape(-1)   # (S*c_local,)
+    all_gid = jax.lax.all_gather(loc_gid, axis).reshape(-1)
+    top_key, sel = jax.lax.top_k(all_key, c)
+    cand_gid = all_gid[sel]                                   # (C,) global ids
+
+    # ---- Stage 2: exact rescoring by owners only, psum-combined.
+    owned = (cand_gid >= offset) & (cand_gid < offset + n_local)
+    local_rows = jnp.clip(cand_gid - offset, 0, n_local - 1)
+    msb_rows = jnp.take(msb_plane, local_rows, axis=0)
+    lsb_rows = jnp.take(lsb_plane, local_rows, axis=0)
+    exact = stage2_scores_jnp(q, msb_rows, lsb_rows)          # (C,) i32
+    nrm = jnp.take(norms_sq, local_rows, axis=0)
+    exact = jax.lax.psum(jnp.where(owned, exact, 0), axis)
+    cand_norms = jax.lax.psum(jnp.where(owned, nrm, 0), axis)
+
+    # ---- Replicated final rerank.
+    if cfg.metric == "cosine":
+        local, scores = similarity.rerank_dense_comparator(exact, cand_norms, cfg.k)
+    else:
+        scores, local = similarity.topk_mips(exact, cfg.k)
+    return RetrievalResult(indices=cand_gid[local], scores=scores,
+                           candidate_indices=cand_gid)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedIndex:
+    """A database sharded over a mesh + a jitted retrieval entry point."""
+
+    db: bitplanar.BitPlanarDB
+    mesh: Mesh
+    n_global: int
+
+    @classmethod
+    def build(cls, embeddings: jax.Array, mesh: Mesh) -> "ShardedIndex":
+        qdb = quantization.build_database(embeddings)
+        bp = bitplanar.BitPlanarDB.from_quantized(qdb)
+        n_global = bp.num_docs
+        bp = pad_database(bp, mesh.devices.size)
+        return cls(db=shard_database(bp, mesh), mesh=mesh, n_global=n_global)
+
+    def retrieve_fn(self, cfg: RetrievalConfig):
+        """Returns a jittable f(query_codes (D,) or (B, D)) -> RetrievalResult."""
+        axes = tuple(self.mesh.axis_names)
+        flat_axis = axes if len(axes) > 1 else axes[0]
+        row = P(axes)
+
+        def body(q, msb, lsb, nrm):
+            fn = partial(_tournament_retrieve, cfg=cfg,
+                         n_global=self.n_global, axis=flat_axis)
+            if q.ndim == 2:
+                fn = jax.vmap(fn, in_axes=(0, None, None, None))
+            return fn(q, msb, lsb, nrm)
+
+        shmapped = jax.shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(), row, row, row),
+            out_specs=RetrievalResult(indices=P(), scores=P(),
+                                      candidate_indices=P()),
+            check_vma=False)
+
+        @jax.jit
+        def retrieve(query_codes):
+            return shmapped(query_codes, self.db.msb_plane,
+                            self.db.lsb_plane, self.db.norms_sq)
+
+        return retrieve

@@ -1,0 +1,108 @@
+"""Symmetric INT8 / INT4 quantization for embedding databases.
+
+The paper stores every document embedding as INT8 (symmetric, zero-point 0)
+and derives the stage-1 approximate representation from the most-significant
+nibble of each INT8 value: for v in [-128, 127],
+
+    msb(v)  = v >> 4            (arithmetic shift, range [-8, 7]   -> "INT4")
+    lsb(v)  = v & 0xF           (range [0, 15], unsigned nibble)
+    v       = msb(v) * 16 + lsb(v)      (exact reconstruction)
+
+Stage 1 computes MIPS on (msb(q), msb(d)); stage 2 on the full INT8 values.
+All functions are jit-safe pure JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127
+INT4_MAX = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedDB:
+    """An INT8-quantized embedding database.
+
+    values: (N, D) int8 quantized embeddings.
+    scale:  () or (N,) float32 dequant scale (x ~= values * scale).
+    norms_sq: (N,) int32 — integer squared L2 norms of the INT8 codes,
+        precomputed offline (the paper stores document norms in DRAM).
+        Fits int32 for D <= 2**31 / 127**2 ~= 133k dims.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    norms_sq: jax.Array
+
+    @property
+    def num_docs(self) -> int:
+        return self.values.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.values.shape[1]
+
+
+def quantize_int8(x: jax.Array, *, per_vector: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Symmetric INT8 quantization. Returns (codes int8, scale f32)."""
+    x = x.astype(jnp.float32)
+    if per_vector:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / INT8_MAX
+    codes = jnp.clip(jnp.round(x / scale), -INT8_MAX - 1, INT8_MAX).astype(jnp.int8)
+    return codes, jnp.squeeze(scale, axis=-1) if per_vector else scale
+
+
+def quantize_int4(x: jax.Array, *, per_vector: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Symmetric INT4 quantization (codes stored widened to int8 in [-8, 7])."""
+    x = x.astype(jnp.float32)
+    if per_vector:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / INT4_MAX
+    codes = jnp.clip(jnp.round(x / scale), -INT4_MAX - 1, INT4_MAX).astype(jnp.int8)
+    return codes, jnp.squeeze(scale, axis=-1) if per_vector else scale
+
+
+def dequantize(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    scale = jnp.asarray(scale)
+    if scale.ndim == 1:  # per-vector
+        scale = scale[:, None]
+    return codes.astype(jnp.float32) * scale
+
+
+def msb_nibble(codes_int8: jax.Array) -> jax.Array:
+    """Most-significant nibble of INT8 codes: arithmetic >> 4, range [-8, 7]."""
+    return (codes_int8.astype(jnp.int8) >> 4).astype(jnp.int8)
+
+
+def lsb_nibble(codes_int8: jax.Array) -> jax.Array:
+    """Least-significant nibble, range [0, 15] (unsigned), returned as int8."""
+    return (codes_int8.astype(jnp.int8) & jnp.int8(0xF)).astype(jnp.int8)
+
+
+def reconstruct_from_nibbles(msb: jax.Array, lsb: jax.Array) -> jax.Array:
+    """Exact inverse of the (msb, lsb) split."""
+    return (msb.astype(jnp.int16) * 16 + lsb.astype(jnp.int16)).astype(jnp.int8)
+
+
+@partial(jax.jit, static_argnames=("per_vector",))
+def build_database(embeddings: jax.Array, *, per_vector: bool = False) -> QuantizedDB:
+    """Offline phase: quantize a float embedding matrix into a QuantizedDB."""
+    codes, scale = quantize_int8(embeddings, per_vector=per_vector)
+    norms_sq = jnp.sum(codes.astype(jnp.int32) ** 2, axis=-1)
+    return QuantizedDB(values=codes, scale=scale, norms_sq=norms_sq)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedDB,
+    lambda db: ((db.values, db.scale, db.norms_sq), None),
+    lambda _, leaves: QuantizedDB(*leaves),
+)

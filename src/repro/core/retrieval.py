@@ -1,0 +1,155 @@
+"""Quantization-aware two-stage hierarchical retrieval (the paper's core).
+
+Stage 1 — MSB-INT4 approximate retrieval: score EVERY document using only
+the most-significant nibble of both query and document codes (read from the
+nibble-planar MSB plane — half the HBM bytes), and keep an approximate
+candidate set.
+
+Stage 2 — INT8 full-precision retrieval: gather the candidates' full INT8
+codes (MSB+LSB planes), rescore exactly, and rank the final top-k with the
+non-division fraction comparator (cosine) or raw integer scores (MIPS).
+
+The candidate-set policy follows the paper's Fig. 4 operating points:
+``min(max_candidates, ceil(candidate_frac * N))`` with max 50 / frac 0.2.
+
+`backend="jnp"` uses pure-jnp reference math; `backend="pallas"` routes the
+two scoring stages through the Pallas TPU kernels in repro.kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanar, quantization, similarity
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalConfig:
+    k: int = 5
+    metric: Literal["cosine", "mips"] = "cosine"
+    max_candidates: int = 50
+    candidate_frac: float = 0.2
+    backend: Literal["jnp", "pallas"] = "jnp"
+
+    def num_candidates(self, num_docs: int) -> int:
+        return max(self.k, min(self.max_candidates,
+                               math.ceil(self.candidate_frac * num_docs)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalResult:
+    indices: jax.Array        # (k,) global document ids, best first
+    scores: jax.Array         # (k,) exact int32 dot products
+    candidate_indices: jax.Array  # (C,) stage-1 candidate ids (diagnostics)
+
+
+jax.tree_util.register_pytree_node(
+    RetrievalResult,
+    lambda r: ((r.indices, r.scores, r.candidate_indices), None),
+    lambda _, leaves: RetrievalResult(*leaves),
+)
+
+
+# ---------------------------------------------------------------------------
+# Stage primitives (pure-jnp reference path; kernels mirror these)
+# ---------------------------------------------------------------------------
+
+def stage1_scores_jnp(q_msb: jax.Array, msb_plane: jax.Array) -> jax.Array:
+    """Approximate MIPS on MSB nibbles. q_msb (D,) int8 in [-8,7];
+    msb_plane (N, D//2) uint8 packed. Returns (N,) int32."""
+    d_msb = bitplanar.unpack_nibble_plane_signed(msb_plane)   # (N, D)
+    return similarity.int_matvec(d_msb, q_msb)
+
+
+def stage2_scores_jnp(q: jax.Array, msb_rows: jax.Array,
+                      lsb_rows: jax.Array) -> jax.Array:
+    """Exact INT8 rescoring of gathered candidate rows. q (D,) int8."""
+    docs = bitplanar.reconstruct_int8(msb_rows, lsb_rows)     # (C, D) int8
+    return similarity.int_matvec(docs, q)
+
+
+def _stage_fns(backend: str):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.stage1_scores, kops.stage2_scores
+    return stage1_scores_jnp, stage2_scores_jnp
+
+
+# ---------------------------------------------------------------------------
+# Full two-stage retrieval (single shard)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def two_stage_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                       cfg: RetrievalConfig) -> RetrievalResult:
+    """Run the hierarchical retrieval for one query over one DB shard.
+
+    query_codes: (D,) int8 (already quantized by the embedder front-end).
+    """
+    n = db.num_docs
+    c = cfg.num_candidates(n)
+    stage1, stage2 = _stage_fns(cfg.backend)
+
+    # ---- Stage 1: MSB-nibble approximate scoring over the whole corpus.
+    q_msb = quantization.msb_nibble(query_codes)
+    approx = stage1(q_msb, db.msb_plane)                       # (N,) int32
+    if cfg.metric == "cosine":
+        # Approximate cosine key; norms are tiny sidecar reads (paper stores
+        # doc norms in DRAM alongside the planes).
+        key1 = similarity.cosine_key_f32(approx, db.norms_sq)
+    else:
+        key1 = approx
+    _, cand = jax.lax.top_k(key1, c)                           # (C,) ids
+
+    # ---- Stage 2: exact INT8 rescoring of the candidate set only.
+    msb_rows = jnp.take(db.msb_plane, cand, axis=0)
+    lsb_rows = jnp.take(db.lsb_plane, cand, axis=0)
+    exact = stage2(query_codes, msb_rows, lsb_rows)            # (C,) int32
+    cand_norms = jnp.take(db.norms_sq, cand, axis=0)
+
+    if cfg.metric == "cosine":
+        local, scores = similarity.rerank_dense_comparator(exact, cand_norms, cfg.k)
+    else:
+        scores, local = similarity.topk_mips(exact, cfg.k)
+    return RetrievalResult(indices=cand[local], scores=scores,
+                           candidate_indices=cand)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def exact_retrieve(query_codes: jax.Array, db: quantization.QuantizedDB,
+                   cfg: RetrievalConfig) -> RetrievalResult:
+    """Single-stage full-precision INT8 retrieval (the paper's baseline)."""
+    scores = similarity.int_matvec(db.values, query_codes)
+    if cfg.metric == "cosine":
+        key = similarity.cosine_key_f32(scores, db.norms_sq)
+    else:
+        key = scores
+    _, idx = jax.lax.top_k(key, cfg.k)
+    return RetrievalResult(indices=idx, scores=scores[idx],
+                           candidate_indices=idx)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def int4_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                  cfg: RetrievalConfig) -> RetrievalResult:
+    """Pure-INT4 baseline: rank directly on MSB-nibble scores (no stage 2)."""
+    q_msb = quantization.msb_nibble(query_codes)
+    approx = stage1_scores_jnp(q_msb, db.msb_plane)
+    if cfg.metric == "cosine":
+        key = similarity.cosine_key_f32(approx, db.norms_sq)
+    else:
+        key = approx
+    _, idx = jax.lax.top_k(key, cfg.k)
+    return RetrievalResult(indices=idx, scores=approx[idx],
+                           candidate_indices=idx)
+
+
+def batched_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                     cfg: RetrievalConfig) -> RetrievalResult:
+    """vmap over a batch of queries: (B, D) int8 -> batched RetrievalResult."""
+    return jax.vmap(lambda q: two_stage_retrieve(q, db, cfg))(query_codes)

@@ -1,0 +1,111 @@
+"""Similarity computation: integer MIPS / cosine + non-division comparator.
+
+The paper's rerank unit compares cosine similarities WITHOUT division or
+sqrt: to order  s_a / sqrt(n_a)  vs  s_b / sqrt(n_b)  (s = integer dot
+product, n = integer squared doc norm; the query norm is common and
+cancels), it cross-multiplies squares:
+
+    sign-aware compare of   s_a^2 * n_b   vs   s_b^2 * n_a
+
+With D = 512 and INT8 codes, s^2*n needs up to ~69 bits, which overflows
+int64. The hardware uses a wide comparator; here we emulate the 128-bit
+product exactly with 32-bit limbs (no float, no division — faithful to the
+paper's integer-only rerank pipeline). A float32 fast path (score/sqrt(norm))
+is also provided; property tests assert both produce the same ordering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int_dot(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact integer dot product of int8 codes -> int32. a:(...,D) b:(...,D)."""
+    return jnp.sum(a.astype(jnp.int32) * b.astype(jnp.int32), axis=-1)
+
+
+def int_matvec(db: jax.Array, q: jax.Array) -> jax.Array:
+    """(N, D) int8 x (D,) int8 -> (N,) int32 scores (MIPS)."""
+    return jax.lax.dot_general(
+        db.astype(jnp.int8), q.astype(jnp.int8),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _mul_69bit(s_sq: jax.Array, n: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact (hi, lo) limbs of s_sq * n where s_sq < 2**47, n < 2**24.
+
+    s_sq = h*2^32 + l;  s_sq*n = (h*n + (l*n >> 32)) * 2^32 + (l*n & M).
+    All partials fit comfortably in int64. Must be called inside an
+    enable_x64 scope (s_sq, n already int64).
+    """
+    mask32 = jnp.int64(0xFFFFFFFF)
+    h = s_sq >> 32
+    l = s_sq & mask32
+    ln = l * n
+    hi = h * n + (ln >> 32)
+    lo = ln & mask32
+    return hi, lo
+
+
+def fraction_greater(s_a: jax.Array, n_a: jax.Array,
+                     s_b: jax.Array, n_b: jax.Array) -> jax.Array:
+    """Non-division comparator:  s_a/sqrt(n_a) > s_b/sqrt(n_b)  (elementwise).
+
+    s_*: int32 dot products (may be negative); n_*: int32 squared norms >= 0.
+    Zero norms are treated as similarity 0 (degenerate all-zero code).
+    Pure integer arithmetic — no division, sqrt, or floats. The 69-bit
+    cross products are computed in a scoped x64 region (the process default
+    stays 32-bit for the rest of the framework).
+    """
+    with jax.enable_x64(True):
+        s_a = jnp.asarray(s_a).astype(jnp.int64)
+        s_b = jnp.asarray(s_b).astype(jnp.int64)
+        n_a = jnp.asarray(n_a).astype(jnp.int64)
+        n_b = jnp.asarray(n_b).astype(jnp.int64)
+        sign_a = jnp.where(n_a > 0, jnp.sign(s_a), 0)
+        sign_b = jnp.where(n_b > 0, jnp.sign(s_b), 0)
+
+        hi_a, lo_a = _mul_69bit(s_a * s_a, jnp.maximum(n_b, 1))
+        hi_b, lo_b = _mul_69bit(s_b * s_b, jnp.maximum(n_a, 1))
+        mag_gt = (hi_a > hi_b) | ((hi_a == hi_b) & (lo_a > lo_b))
+        mag_lt = (hi_a < hi_b) | ((hi_a == hi_b) & (lo_a < lo_b))
+
+        both_pos = (sign_a > 0) & (sign_b > 0)
+        both_neg = (sign_a < 0) & (sign_b < 0)
+        return jnp.where(
+            sign_a != sign_b, sign_a > sign_b,
+            jnp.where(both_pos, mag_gt, jnp.where(both_neg, mag_lt, False)),
+        )
+
+
+def cosine_key_f32(scores: jax.Array, norms_sq: jax.Array) -> jax.Array:
+    """Float fast-path monotone key for cosine ranking: s / sqrt(n)."""
+    n = jnp.maximum(norms_sq.astype(jnp.float32), 1.0)
+    key = scores.astype(jnp.float32) * jax.lax.rsqrt(n)
+    return jnp.where(norms_sq > 0, key, 0.0)
+
+
+def rerank_dense_comparator(scores: jax.Array, norms_sq: jax.Array,
+                            k: int) -> tuple[jax.Array, jax.Array]:
+    """Paper-style dense-comparison rerank using the non-division comparator.
+
+    Builds the full pairwise 'greater' matrix over K candidates (the paper's
+    dense comparator array), ranks by win count with index tie-break, and
+    returns (top-k indices into the candidate set, their int32 scores).
+    Intended for candidate sets (K ~ 50), not the full corpus.
+    """
+    kk = scores.shape[0]
+    gt = fraction_greater(scores[:, None], norms_sq[:, None],
+                          scores[None, :], norms_sq[None, :])
+    wins = jnp.sum(gt, axis=1)                       # (K,) number of candidates beaten
+    # Higher wins = better. Tie-break on lower index (stable, deterministic).
+    order_key = wins.astype(jnp.int32) * kk - jnp.arange(kk, dtype=jnp.int32)
+    _, idx = jax.lax.top_k(order_key, k)
+    return idx, scores[idx]
+
+
+def topk_mips(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Top-k by raw integer dot product (MIPS). Returns (values, indices)."""
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (LMTaskConfig, lm_batches, retrieval_corpus,
+                                  shard_batch)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused stage-1 scoring + per-block top-k (beyond-paper).
+
+The baseline stage-1 writes all N int32 scores back to HBM and then runs a
+global top-k — an N*4-byte writeback plus an N*4-byte re-read. This kernel
+keeps each block's scores in VMEM and emits only that block's top-k
+(score, global-id) pairs, shrinking the score writeback from N to
+(N / block_n) * k entries (e.g. 256x smaller for block_n=512, k=8 — see
+EXPERIMENTS.md §Perf).
+
+Selection is an unrolled-scan iterative argmax (k is small and static),
+with ties broken toward the lower index — matching ref.fused_topk_ref
+bit-exactly. The final cross-block top-C reduction happens in the wrapper
+on (N/block_n)*k entries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stage1_int4 import unpack_plane_even_odd
+
+DEFAULT_BLOCK_N = 512
+INT32_MIN = jnp.iinfo(jnp.int32).min
+
+
+def _fused_kernel(q_ref, plane_ref, out_s_ref, out_i_ref, *, k: int,
+                  block_n: int):
+    even, odd = unpack_plane_even_odd(plane_ref[...])
+    q = q_ref[...]
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(even, q[0], dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(odd, q[1], dn, preferred_element_type=jnp.int32)
+
+    base = pl.program_id(0) * block_n
+    iota = jax.lax.iota(jnp.int32, block_n)
+
+    def step(work, _):
+        idx = jnp.argmax(work)                  # lowest index on ties
+        val = jnp.max(work)
+        work = jnp.where(iota == idx, INT32_MIN, work)
+        return work, (val, idx.astype(jnp.int32))
+
+    _, (vals, idxs) = jax.lax.scan(step, s, None, length=k)
+    out_s_ref[0, :] = vals
+    out_i_ref[0, :] = base + idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def fused_topk_pallas(q_eo: jax.Array, msb_plane: jax.Array, *, k: int = 8,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """q_eo: (2, D//2) int8 signed MSB nibbles; msb_plane: (N, D//2) uint8.
+    Returns (scores, global_ids), each (N // block_n, k) int32."""
+    n, d2 = msb_plane.shape
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    kernel = functools.partial(_fused_kernel, k=k, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((2, d2), lambda i: (0, 0)),        # query: stationary
+            pl.BlockSpec((block_n, d2), lambda i: (i, 0)),  # docs: streamed
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, k), jnp.int32),
+            jax.ShapeDtypeStruct((nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_eo, msb_plane)

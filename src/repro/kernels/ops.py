@@ -1,0 +1,95 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These expose the same signatures the pure-jnp reference engine uses
+(repro.core.retrieval stage functions), handling query even/odd packing,
+row padding to block multiples, and interpret-mode selection (interpret on
+CPU, compiled Mosaic on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import fused_topk as _fk
+from repro.kernels import stage1_int4 as _s1
+from repro.kernels import stage2_int8 as _s2
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pack_query_even_odd(q: jax.Array) -> jax.Array:
+    """(D,) int8 -> (2, D//2) int8: row 0 = even dims, row 1 = odd dims."""
+    return jnp.stack([q[0::2], q[1::2]]).astype(jnp.int8)
+
+
+def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[0]) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def stage1_scores(q_msb: jax.Array, msb_plane: jax.Array,
+                  block_n: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+    """Kernel-backed drop-in for retrieval.stage1_scores_jnp.
+
+    q_msb: (D,) int8 signed MSB nibbles of the query.
+    msb_plane: (N, D//2) packed uint8. Returns (N,) int32.
+    """
+    n = msb_plane.shape[0]
+    block_n = min(block_n, max(8, n))
+    plane = _pad_rows(msb_plane, block_n)
+    q_eo = pack_query_even_odd(q_msb)
+    out = _s1.stage1_int4_pallas(q_eo, plane, block_n=block_n,
+                                 interpret=_interpret())
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def stage2_scores(q: jax.Array, msb_rows: jax.Array, lsb_rows: jax.Array,
+                  block_c: int = _s2.DEFAULT_BLOCK_C) -> jax.Array:
+    """Kernel-backed drop-in for retrieval.stage2_scores_jnp.
+
+    q: (D,) int8 full-precision query codes.
+    msb_rows/lsb_rows: (C, D//2) packed uint8 gathered candidates.
+    Returns (C,) int32 exact scores.
+    """
+    c = msb_rows.shape[0]
+    block_c = min(block_c, max(8, c))
+    msb = _pad_rows(msb_rows, block_c)
+    lsb = _pad_rows(lsb_rows, block_c)
+    q_eo8 = pack_query_even_odd(q)
+    out = _s2.stage2_int8_pallas(q_eo8, msb, lsb, block_c=block_c,
+                                 interpret=_interpret())
+    return out[:c]
+
+
+@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
+def fused_candidates(q_msb: jax.Array, msb_plane: jax.Array, *, c: int,
+                     k_per_block: int = 8,
+                     block_n: int = _fk.DEFAULT_BLOCK_N) -> jax.Array:
+    """Stage-1 candidate generation via the fused score+top-k kernel.
+
+    Returns (c,) int32 global doc ids (approximate top-c). Exact whenever
+    c <= k_per_block * num_blocks and no block contributes more than
+    k_per_block of the true top-c (guaranteed when k_per_block >= c or by
+    choosing k_per_block >= c / num_blocks safety factor — see tests).
+    """
+    n = msb_plane.shape[0]
+    block_n = min(block_n, max(8, n))
+    plane = _pad_rows(msb_plane, block_n)
+    q_eo = pack_query_even_odd(q_msb)
+    scores, ids = _fk.fused_topk_pallas(q_eo, plane, k=k_per_block,
+                                        block_n=block_n,
+                                        interpret=_interpret())
+    flat_s = scores.reshape(-1)
+    flat_i = ids.reshape(-1)
+    # padded rows score 0 with id >= n; mask them out
+    flat_s = jnp.where(flat_i < n, flat_s, jnp.iinfo(jnp.int32).min)
+    _, sel = jax.lax.top_k(flat_s, c)
+    return flat_i[sel]

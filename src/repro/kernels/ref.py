@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function computes exactly what the corresponding kernel computes,
+with no Pallas involvement. Kernel tests sweep shapes/dtypes and
+assert_allclose (exact equality for the integer kernels) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sext4(nib_u8: jax.Array) -> jax.Array:
+    """Sign-extend a 4-bit two's-complement nibble held in uint8 -> int32."""
+    n = nib_u8.astype(jnp.int32)
+    return jnp.where(n >= 8, n - 16, n)
+
+
+def unpack_even_odd_signed(plane: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(N, D//2) packed uint8 -> signed nibbles of (even dims, odd dims)."""
+    even = _sext4(plane & jnp.uint8(0xF))
+    odd = _sext4((plane >> 4) & jnp.uint8(0xF))
+    return even, odd
+
+
+def unpack_even_odd_unsigned(plane: jax.Array) -> tuple[jax.Array, jax.Array]:
+    even = (plane & jnp.uint8(0xF)).astype(jnp.int32)
+    odd = ((plane >> 4) & jnp.uint8(0xF)).astype(jnp.int32)
+    return even, odd
+
+
+def stage1_scores_ref(q_eo: jax.Array, msb_plane: jax.Array) -> jax.Array:
+    """Oracle for the stage-1 MSB-nibble MIPS kernel.
+
+    q_eo: (2, D//2) int32/int8 — row 0 = query MSB nibbles of even dims,
+          row 1 = odd dims (signed values in [-8, 7]).
+    msb_plane: (N, D//2) uint8 packed MSB nibbles.
+    Returns (N,) int32 approximate scores.
+    """
+    even, odd = unpack_even_odd_signed(msb_plane)       # (N, D//2) int32
+    q = q_eo.astype(jnp.int32)
+    return even @ q[0] + odd @ q[1]
+
+
+def stage2_scores_ref(q_eo8: jax.Array, msb_rows: jax.Array,
+                      lsb_rows: jax.Array) -> jax.Array:
+    """Oracle for the stage-2 full-INT8 rescoring kernel.
+
+    q_eo8: (2, D//2) int32/int8 — full INT8 query values (even, odd dims).
+    msb_rows/lsb_rows: (C, D//2) uint8 packed candidate planes.
+    Returns (C,) int32 exact INT8 dot products.
+    """
+    me, mo = unpack_even_odd_signed(msb_rows)
+    le, lo_ = unpack_even_odd_unsigned(lsb_rows)
+    de = me * 16 + le                                    # int32 values [-128,127]
+    do = mo * 16 + lo_
+    q = q_eo8.astype(jnp.int32)
+    return de @ q[0] + do @ q[1]
+
+
+def fused_topk_ref(q_eo: jax.Array, msb_plane: jax.Array, block_n: int,
+                   k: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused stage-1 score + per-block top-k kernel.
+
+    Returns (scores, ids): each (num_blocks, k); ids are GLOBAL row
+    indices. Ties broken toward the lower index (matches the kernel's
+    iterative argmax).
+    """
+    n = msb_plane.shape[0]
+    assert n % block_n == 0
+    scores = stage1_scores_ref(q_eo, msb_plane)          # (N,)
+    sb = scores.reshape(n // block_n, block_n)
+    # iterative argmax with low-index tie-break == top_k on (score, -idx)
+    out_s, out_i = [], []
+    work = sb
+    idx_base = jnp.arange(n, dtype=jnp.int32).reshape(n // block_n, block_n)
+    for _ in range(k):
+        j = jnp.argmax(work, axis=1)
+        rows = jnp.arange(work.shape[0])
+        out_s.append(work[rows, j])
+        out_i.append(idx_base[rows, j])
+        work = work.at[rows, j].set(jnp.iinfo(jnp.int32).min)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: stage-2 full-INT8 exact rescoring of candidates.
+
+The candidate rows (top-C from stage 1, C ~ 50) have been gathered into
+dense (C, D//2) MSB and LSB planes. The kernel reconstructs the INT8
+values in-register (msb*16 + lsb, exactly inverting the nibble split) and
+runs the exact int8 MAC on the MXU. The query is again pinned in VMEM.
+
+On the paper's 4-bit PEs an 8x8 multiply is decomposed into 4 nibble
+products (their refs [24][25]); on TPU the MXU natively does int8, so the
+reconstruction happens in VREG and the MAC is a single int8 dot — same
+arithmetic result, hardware-appropriate mapping (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stage1_int4 import _sext4_i8
+
+DEFAULT_BLOCK_C = 64
+
+
+def _reconstruct_even_odd(msb: jax.Array, lsb: jax.Array):
+    """Packed planes -> (even-dim, odd-dim) int8 value matrices."""
+    me = _sext4_i8(msb & jnp.uint8(0xF)).astype(jnp.int16)
+    mo = _sext4_i8((msb >> 4) & jnp.uint8(0xF)).astype(jnp.int16)
+    le = (lsb & jnp.uint8(0xF)).astype(jnp.int16)
+    lo = ((lsb >> 4) & jnp.uint8(0xF)).astype(jnp.int16)
+    de = (me * 16 + le).astype(jnp.int8)
+    do = (mo * 16 + lo).astype(jnp.int8)
+    return de, do
+
+
+def _stage2_kernel(q_ref, msb_ref, lsb_ref, out_ref):
+    """q_ref: (2, D2) int8 pinned; planes: (BC, D2) uint8; out: (1, BC)."""
+    de, do = _reconstruct_even_odd(msb_ref[...], lsb_ref[...])
+    q = q_ref[...]
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(de, q[0], dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(do, q[1], dn, preferred_element_type=jnp.int32)
+    out_ref[0, :] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def stage2_int8_pallas(q_eo8: jax.Array, msb_rows: jax.Array,
+                       lsb_rows: jax.Array, *,
+                       block_c: int = DEFAULT_BLOCK_C,
+                       interpret: bool = True) -> jax.Array:
+    """q_eo8: (2, D//2) int8 full query values (even dims; odd dims).
+    msb_rows/lsb_rows: (C, D//2) uint8, C % block_c == 0. Returns (C,) int32."""
+    c, d2 = msb_rows.shape
+    assert c % block_c == 0, (c, block_c)
+    nb = c // block_c
+    out = pl.pallas_call(
+        _stage2_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((2, d2), lambda i: (0, 0)),        # query: stationary
+            pl.BlockSpec((block_c, d2), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, d2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block_c), jnp.int32),
+        interpret=interpret,
+    )(q_eo8, msb_rows, lsb_rows)
+    return out.reshape(c)

@@ -1,0 +1,77 @@
+"""Assigned input-shape cells + abstract input builders for the dry-run.
+
+Every (arch x shape) cell lowers ONE step function with ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, no allocation):
+
+  train_4k     -> train_step   (loss + grads + optimizer update)
+  prefill_32k  -> prefill      (prompt pass, returns primed cache)
+  decode_32k   -> decode_step  (1 new token, KV/SSM cache of seq_len)
+  long_500k    -> decode_step  (sub-quadratic archs only: ssm / hybrid —
+                  pure full-attention archs are skipped per the
+                  assignment; see DESIGN.md §5)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelApi, get_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("skipped: 500k-token decode needs sub-quadratic "
+                       f"attention; {cfg.family} is full-attention")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_batch(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """Training/prefill batch stand-ins for one global batch."""
+    b, s = case.batch, case.seq
+    if cfg.family == "encdec":
+        return {"frames": _sds((b, s, cfg.d_model), jnp.bfloat16),
+                "tokens": _sds((b, s), jnp.int32),
+                "labels": _sds((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_embeds
+        return {"tokens": _sds((b, s - p), jnp.int32),
+                "labels": _sds((b, s - p), jnp.int32),
+                "prefix_embeds": _sds((b, p, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, api: ModelApi, case: ShapeCase):
+    """Abstract KV/SSM cache of seq_len for decode cells."""
+    kw = {"src_len": case.seq} if cfg.family == "encdec" else {}
+    return jax.eval_shape(
+        lambda: api.init_cache(case.batch, case.seq, **kw))
+
+
+def abstract_decode_tokens(case: ShapeCase):
+    return _sds((case.batch, 1), jnp.int32)

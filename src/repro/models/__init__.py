@@ -1,0 +1,4 @@
+"""Model library: dense GQA, MoE, Mamba2 (SSD), Zamba2 hybrid, enc-dec,
+VLM backbone, and the paper's MiniLM-style embedder."""
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelApi, get_model

@@ -1,0 +1,129 @@
+"""Attention: GQA with naive, chunked-causal (flash-style), and decode paths.
+
+The chunked path never materializes the (S, S) score matrix: a static
+Python loop walks query chunks; for query chunk i only key chunks 0..i are
+touched (a STATIC slice — the compiled HLO does strictly causal work, no
+masked-out upper-triangle FLOPs), with an online-softmax scan over key
+chunks. Softmax statistics are f32; dots run in the compute dtype.
+
+Shapes: q (B, S, H, hd); k, v (B, T, KH, hd); GQA groups G = H // KH.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import constrain
+
+NEG_INF = -1e30
+
+
+def _split_groups(q: jax.Array, kh: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KH, G, hd)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, kh, h // kh, d)
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    scale: float | None = None,
+                    causal: bool = True) -> jax.Array:
+    """Reference O(S^2)-memory masked attention (tests / tiny shapes)."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    scale = scale or hd ** -0.5
+    qg = _split_groups(q, kh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool))
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def naive_causal_attention(q, k, v, scale=None):
+    return naive_attention(q, k, v, scale, causal=True)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      chunk: int = 2048, scale: float | None = None,
+                      causal: bool = True) -> jax.Array:
+    """Flash-style attention; never materializes the (S, T) score matrix.
+
+    Causal: query chunk i touches only key chunks 0..i (static slice — no
+    masked-out upper-triangle FLOPs in the compiled HLO). Non-causal
+    (encoder): every query chunk scans all key chunks. S (and T) must be
+    multiples of chunk, else the naive path is used."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    if s <= chunk or s % chunk != 0 or t % chunk != 0:
+        return naive_attention(q, k, v, scale, causal)
+    nq = s // chunk
+    nk = t // chunk
+    scale = scale or hd ** -0.5
+    qg = _split_groups(q, kh)                                  # (B,S,KH,G,hd)
+    pos = jnp.arange(chunk, dtype=jnp.int32)
+
+    def kv_step(carry, xs):
+        acc, m, denom, qc = carry                              # qc (B,KH,G,C,hd)
+        kc, vc, diag = xs                                      # (B,C,KH,hd)
+        srs = jnp.einsum("bkgcd,btkd->bkgct", qc.astype(jnp.float32),
+                         kc.astype(jnp.float32)) * scale       # (B,KH,G,C,C)
+        srs = jnp.where(diag & (pos[None, :] > pos[:, None])[None, None, None],
+                        NEG_INF, srs)
+        new_m = jnp.maximum(m, jnp.max(srs, axis=-1))
+        p = jnp.exp(srs - new_m[..., None])
+        alpha = jnp.exp(m - new_m)
+        denom = denom * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgct,btkd->bkgcd", p, vc.astype(jnp.float32))
+        return (acc, new_m, denom, qc), None
+
+    outs = []
+    for i in range(nq):                                        # static loop
+        # NOTE (§Perf A2, refuted hypothesis): pinning qc/ks/vs/acc to the
+        # batch axes here ADDED 0.7-1.6 TB/step of resharding all-gathers
+        # (train AND prefill) with no FLOP benefit — GSPMD already
+        # propagates the batch sharding through this scan. All pins
+        # removed; measurements in EXPERIMENTS.md §Perf.
+        qc = jnp.moveaxis(qg[:, i * chunk:(i + 1) * chunk], 1, 3)
+        n_kv = (i + 1) if causal else nk
+        ks = k[:, :n_kv * chunk].reshape(b, n_kv, chunk, kh, hd)
+        vs = v[:, :n_kv * chunk].reshape(b, n_kv, chunk, kh, hd)
+        diag = (jnp.arange(n_kv) == i) if causal else jnp.zeros((n_kv,), bool)
+        acc0 = jnp.zeros((b, kh, h // kh, chunk, hd), jnp.float32)
+        m0 = jnp.full((b, kh, h // kh, chunk), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((b, kh, h // kh, chunk), jnp.float32)
+        (acc, _, denom, _), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0, qc),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0), diag))
+        outs.append(acc / jnp.maximum(denom[..., None], 1e-30))
+    out = jnp.concatenate(outs, axis=3)                        # (B,KH,G,S,hd)
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd).astype(q.dtype)
+
+
+def chunked_causal_attention(q, k, v, chunk: int = 2048, scale=None):
+    return chunked_attention(q, k, v, chunk, scale, causal=True)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array,
+                     scale: float | None = None) -> jax.Array:
+    """One-token attention against a (possibly partially filled) KV cache.
+
+    q: (B, 1, H, hd); k_cache/v_cache: (B, T, KH, hd); length: () or (B,)
+    int32 count of valid cache positions (new token already written).
+    """
+    b, _, h, hd = q.shape
+    t, kh = k_cache.shape[1], k_cache.shape[2]
+    scale = scale or hd ** -0.5
+    qg = _split_groups(q, kh)[:, 0]                            # (B,KH,G,hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(t, dtype=jnp.int32)[None, :] < jnp.reshape(
+        length, (-1, 1)).astype(jnp.int32)                     # (B or 1, T)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

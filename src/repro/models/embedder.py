@@ -1,0 +1,91 @@
+"""MiniLM-style sentence embedder (the paper's embedding model).
+
+A small bidirectional transformer encoder + masked mean pooling + linear
+projection to `pooled_dim` (512 in the paper) + L2 normalization — the
+Sentence-BERT recipe with MiniLM-L6 dimensions. Produces the normalized
+float embeddings that repro.core quantizes into the INT8 database, and is
+trainable with an in-batch-negative contrastive (InfoNCE) loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.common import (ModelConfig, Params, apply_rope, dense_init,
+                                 embed_init, rmsnorm, rope_tables, swiglu)
+
+MINILM_CFG = ModelConfig(
+    name="minilm-embedder", family="dense", num_layers=6, d_model=384,
+    num_heads=12, num_kv_heads=12, d_ff=1536, vocab_size=30522,
+    pooled_dim=512, rope_theta=1e4, compute_dtype="float32", remat=False)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    l, d, h, hd, f = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.hd,
+                      cfg.d_ff)
+    ks = jax.random.split(key, 10)
+    dt = cfg.pdtype
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab_size, d), dt),
+        "blocks": {
+            "ln1": jnp.ones((l, d), dt),
+            "wq": dense_init(ks[1], (l, d, h * hd), dt),
+            "wk": dense_init(ks[2], (l, d, h * hd), dt),
+            "wv": dense_init(ks[3], (l, d, h * hd), dt),
+            "wo": dense_init(ks[4], (l, h * hd, d), dt, scale=(h * hd) ** -0.5),
+            "ln2": jnp.ones((l, d), dt),
+            "w_gate": dense_init(ks[5], (l, d, f), dt),
+            "w_up": dense_init(ks[6], (l, d, f), dt),
+            "w_down": dense_init(ks[7], (l, f, d), dt, scale=f ** -0.5),
+        },
+        "final_norm": jnp.ones((d,), dt),
+        "proj": dense_init(ks[8], (d, cfg.pooled_dim), dt),
+    }
+
+
+def encode(params: Params, tokens: jax.Array, cfg: ModelConfig,
+           mask: jax.Array | None = None) -> jax.Array:
+    """tokens (B, S) [+ mask (B, S) bool] -> L2-normalized (B, pooled_dim)."""
+    if mask is None:
+        mask = jnp.ones(tokens.shape, bool)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    s = x.shape[1]
+    cos, sin = rope_tables(jnp.arange(s, dtype=jnp.int32), cfg.hd,
+                           cfg.rope_theta)
+
+    def block(h, p):
+        hn = rmsnorm(h, p["ln1"], cfg.norm_eps)
+        b = h.shape[0]
+        q = jnp.einsum("bsd,de->bse", hn, p["wq"].astype(h.dtype)
+                       ).reshape(b, s, cfg.num_heads, cfg.hd)
+        k = jnp.einsum("bsd,de->bse", hn, p["wk"].astype(h.dtype)
+                       ).reshape(b, s, cfg.num_heads, cfg.hd)
+        v = jnp.einsum("bsd,de->bse", hn, p["wv"].astype(h.dtype)
+                       ).reshape(b, s, cfg.num_heads, cfg.hd)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        o = attn.naive_attention(q, k, v, causal=False)
+        h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                           p["wo"].astype(h.dtype))
+        hn = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        return h + swiglu(hn, p["w_gate"], p["w_up"], p["w_down"]), None
+
+    x, _ = jax.lax.scan(block, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    m = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(x.astype(jnp.float32) * m, axis=1) / jnp.maximum(
+        jnp.sum(m, axis=1), 1.0)
+    emb = pooled @ params["proj"].astype(jnp.float32)
+    return emb / jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True),
+                             1e-9)
+
+
+def info_nce_loss(params: Params, batch: dict, cfg: ModelConfig,
+                  temperature: float = 0.05) -> jax.Array:
+    """In-batch-negative contrastive loss over (query, positive-doc) pairs."""
+    q = encode(params, batch["query_tokens"], cfg, batch.get("query_mask"))
+    d = encode(params, batch["doc_tokens"], cfg, batch.get("doc_mask"))
+    logits = (q @ d.T) / temperature                  # (B, B)
+    labels = jnp.arange(q.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    return jnp.mean(logz - logits[labels, labels])

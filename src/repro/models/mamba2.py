@@ -1,0 +1,292 @@
+"""Mamba2 (SSD — state-space duality) in pure JAX.
+
+Implements the chunked SSD algorithm (quadratic intra-chunk attention-like
+form + linear inter-chunk state recurrence) for training/prefill, and the
+O(1)-per-token recurrent form for decode. The chunked and recurrent paths
+are numerically equivalent (tested).
+
+Per-block dataflow (mamba_ssm reference layout, ngroups = 1):
+
+    in_proj: d -> [z (d_in), xBC (d_in + 2n), dt (H)]
+    causal depthwise conv(width w) + silu on xBC
+    SSD over heads H = d_in / P with A = -exp(A_log) per head
+    gated RMSNorm: norm(y * silu(z)); out_proj: d_in -> d
+
+State for decode: ssm (B, H, P, N) f32 + conv tail (B, w-1, conv_dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, Params, constrain,
+                                 cross_entropy_loss, dense_init, embed_init,
+                                 residual_pattern, rmsnorm)
+
+
+@dataclasses.dataclass
+class SSMCache:
+    state: jax.Array   # (L, B, H, P, N) f32
+    conv: jax.Array    # (L, B, W-1, conv_dim)
+    length: jax.Array  # (B,) int32
+
+
+jax.tree_util.register_dataclass(
+    SSMCache, data_fields=["state", "conv", "length"], meta_fields=[])
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_block(cfg: ModelConfig, key) -> Params:
+    d, din, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_heads, cfg.ssm_conv_width)
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    cd = conv_dim(cfg)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "in_proj": dense_init(ks[0], (d, 2 * din + 2 * n + h), dt),
+        "conv_w": (jax.random.normal(ks[1], (w, cd), jnp.float32)
+                   * (w * cd) ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((cd,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((din,), dt),
+        "out_proj": dense_init(ks[2], (din, d), dt, scale=din ** -0.5),
+    }
+
+
+def _split_in_proj(zxbcdt, cfg: ModelConfig):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * n]
+    dt_raw = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence. xbc (B, L, C); w (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None].astype(out.dtype))
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., T) -> (..., T, T) with S[i, j] = sum a[j+1..i] (j<=i), -inf above."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, initial_state: jax.Array | None = None):
+    """Chunked SSD scan.
+
+    x (B, L, H, P) — inputs ALREADY multiplied by dt;
+    a (B, L, H)    — dt * A (negative decay log);
+    b, c (B, L, N) — shared across heads (ngroups=1).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)); f32 math.
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    x = x.astype(jnp.float32).reshape(bs, nc, chunk, h, p)
+    a = a.astype(jnp.float32).reshape(bs, nc, chunk, h).transpose(0, 3, 1, 2)
+    b = b.astype(jnp.float32).reshape(bs, nc, chunk, n)
+    c = c.astype(jnp.float32).reshape(bs, nc, chunk, n)
+
+    a_cs = jnp.cumsum(a, axis=-1)                         # (B, H, NC, Q)
+    ldec = jnp.exp(_segsum(a))                            # (B, H, NC, Q, Q)
+    # intra-chunk (quadratic) term
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", c, b, ldec, x)
+    # per-chunk input -> end-of-chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)         # (B, H, NC, Q)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", b, decay_states, x)
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])                  # (B, H, NC)
+    s0 = (jnp.zeros((bs, h, p, n), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(prev, xs):
+        st, dec = xs                                      # (B,H,P,N), (B,H)
+        new = st + dec[..., None, None] * prev
+        return new, prev                                  # emit state BEFORE chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B, NC, H, P, N)
+    # contribution of carried-in state to each position
+    state_decay = jnp.exp(a_cs)                           # (B, H, NC, Q)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", c, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(bs, l, h, p)
+    return y, final
+
+
+def block_fwd(p: Params, x: jax.Array, cfg: ModelConfig,
+              initial_state=None, conv_init=None):
+    """Full-sequence mamba2 block. Returns (x_out, (final_state, conv_tail))."""
+    h_heads, pdim, n, w = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                           cfg.ssm_conv_width)
+    res = x
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = constrain(
+        jnp.einsum("bld,de->ble", xn, p["in_proj"].astype(xn.dtype)),
+        "dp", None, None)
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    if conv_init is not None:
+        ext = jnp.concatenate([conv_init.astype(xbc.dtype), xbc], axis=1)
+        xbc_c = _causal_conv(ext, p["conv_w"], p["conv_b"])[:, w - 1:]
+    else:
+        xbc_c = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc_c[..., :cfg.d_inner]
+    b_in = xbc_c[..., cfg.d_inner:cfg.d_inner + n]
+    c_in = xbc_c[..., cfg.d_inner + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                              # (H,)
+    xh = xs.reshape(*xs.shape[:2], h_heads, pdim)
+    bs, l = xh.shape[0], xh.shape[1]
+    chunk = min(cfg.ssm_chunk, l)
+    if l % chunk:
+        chunk = l                                         # tiny smoke shapes
+    y, final = ssd_chunked(xh.astype(jnp.float32) * dt[..., None],
+                           dt * a[None, None], b_in, c_in, chunk,
+                           initial_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bs, l, -1).astype(x.dtype)
+    y = constrain(rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps),
+                  "dp", None, "mp")
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(y.dtype))
+    conv_tail = xbc[:, -(w - 1):] if l >= w - 1 else jnp.pad(
+        xbc, ((0, 0), (w - 1 - l, 0), (0, 0)))
+    return constrain(res + out, *residual_pattern(cfg)), (final, conv_tail)
+
+
+def block_decode(p: Params, x: jax.Array, state: jax.Array,
+                 conv_cache: jax.Array, cfg: ModelConfig):
+    """One-token recurrent step. x (B, 1, D); state (B, H, P, N);
+    conv_cache (B, W-1, conv_dim). Returns (x_out, new_state, new_conv)."""
+    h_heads, pdim, n, w = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                           cfg.ssm_conv_width)
+    res = x
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bld,de->ble", xn, p["in_proj"].astype(xn.dtype))
+    z, xbc, dt_raw = _split_in_proj(zxbcdt, cfg)
+    buf = jnp.concatenate([conv_cache.astype(xbc.dtype), xbc], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))[:, None]
+    new_conv = buf[:, 1:]
+    xs = xbc_c[..., :cfg.d_inner]
+    b_in = xbc_c[..., cfg.d_inner:cfg.d_inner + n][:, 0]   # (B, N)
+    c_in = xbc_c[..., cfg.d_inner + n:][:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(xs.shape[0], h_heads, pdim).astype(jnp.float32)
+    da = jnp.exp(dt * a[None])                             # (B, H)
+    state = constrain(state * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, b_in), "dp", "mp", None, None)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in) + p["D"][None, :, None] * xh
+    y = y.reshape(y.shape[0], 1, -1).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(y.dtype))
+    return res + out, state, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 3)
+    sub = [init_block(cfg, jax.random.fold_in(ks[0], i))
+           for i in range(cfg.num_layers)]
+    blocks = jax.tree.map(lambda *a: jnp.stack(a), *sub)
+    params = {
+        "embed": embed_init(ks[1], (cfg.vocab_size, cfg.d_model), cfg.pdtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.vocab_size),
+                                       cfg.pdtype)
+    return params
+
+
+def _logits(params, x, cfg):
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return constrain(jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype)),
+                     "dp", None, "mp")
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds=None) -> jax.Array:
+    x = constrain(jnp.take(params["embed"], tokens, axis=0).astype(
+        cfg.cdtype), "dp", None, None)
+
+    def step(h, p):
+        h2, _ = block_fwd(p, h, cfg)
+        return h2, None
+
+    fn = jax.checkpoint(step) if cfg.remat else step
+    x, _ = jax.lax.scan(lambda c, p: fn(c, p), x, params["blocks"])
+    return _logits(params, x, cfg)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    return cross_entropy_loss(forward(params, batch["tokens"], cfg),
+                              batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0) -> SSMCache:
+    l, h, pd, n, w = (cfg.num_layers, cfg.ssm_heads, cfg.ssm_head_dim,
+                      cfg.ssm_state, cfg.ssm_conv_width)
+    return SSMCache(
+        state=jnp.zeros((l, batch, h, pd, n), jnp.float32),
+        conv=jnp.zeros((l, batch, w - 1, conv_dim(cfg)), cfg.cdtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len=None, lengths=None, prefix_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+
+    def step(h, p):
+        h2, (st, conv) = block_fwd(p, h, cfg)
+        return h2, (st, conv)
+
+    fn = jax.checkpoint(step) if cfg.remat else step
+    x, (states, convs) = jax.lax.scan(lambda c, p: fn(c, p), x,
+                                      params["blocks"])
+    logits = _logits(params, x, cfg)
+    b = tokens.shape[0]
+    if lengths is None:
+        lengths = jnp.full((b,), tokens.shape[1], jnp.int32)
+    return logits, SSMCache(state=states, conv=convs, length=lengths)
+
+
+def decode_step(params: Params, cache: SSMCache, tokens: jax.Array,
+                cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+
+    def step(h, xs):
+        p, st, conv = xs
+        h2, st2, conv2 = block_decode(p, h, st, conv, cfg)
+        return h2, (st2, conv2)
+
+    x, (states, convs) = jax.lax.scan(step, x,
+                                      (params["blocks"], cache.state,
+                                       cache.conv))
+    return _logits(params, x, cfg), SSMCache(state=states, conv=convs,
+                                             length=cache.length + 1)

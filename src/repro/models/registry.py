@@ -1,0 +1,78 @@
+"""Uniform model API: family dispatch for init / loss / prefill / decode.
+
+`get_model(cfg)` returns a ModelApi whose members close over cfg, so the
+launcher, trainer, server, and dry-run treat every architecture the same
+way. The `vlm` family is the dense model fed stub patch embeddings
+(prefix_embeds); `encdec` carries its own batch layout (frames + tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.models import dense, encdec, mamba2, moe, zamba2
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]          # (params, batch) -> scalar
+    prefill: Callable[..., Any]          # (params, batch, max_len) -> (logits, cache)
+    decode_step: Callable[..., Any]      # (params, cache, tokens) -> (logits, cache)
+    init_cache: Callable[..., Any]       # (batch_size, max_len, ...) -> cache
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        mod = dense
+    elif fam == "moe":
+        mod = moe
+    elif fam == "ssm":
+        mod = mamba2
+    elif fam == "hybrid":
+        mod = zamba2
+    elif fam == "encdec":
+        return _encdec_api(cfg)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def loss(params, batch):
+        return mod.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch, max_len=None):
+        return mod.prefill(params, batch["tokens"], cfg, max_len=max_len,
+                           lengths=batch.get("lengths"),
+                           prefix_embeds=batch.get("prefix_embeds"))
+
+    def decode(params, cache, tokens):
+        return mod.decode_step(params, cache, tokens, cfg)
+
+    def init_cache(batch_size, max_len, **kw):
+        return mod.init_cache(cfg, batch_size, max_len)
+
+    return ModelApi(cfg=cfg, init=lambda key: mod.init_params(cfg, key),
+                    loss_fn=loss, prefill=prefill, decode_step=decode,
+                    init_cache=init_cache)
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelApi:
+    def loss(params, batch):
+        return encdec.loss_fn(params, batch, cfg)
+
+    def prefill(params, batch, max_len=None):
+        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg,
+                              max_len=max_len, lengths=batch.get("lengths"))
+
+    def decode(params, cache, tokens):
+        return encdec.decode_step(params, cache, tokens, cfg)
+
+    def init_cache(batch_size, max_len, src_len=None, **kw):
+        return encdec.init_cache(cfg, batch_size, max_len,
+                                 src_len or max_len)
+
+    return ModelApi(cfg=cfg, init=lambda key: encdec.init_params(cfg, key),
+                    loss_fn=loss, prefill=prefill, decode_step=decode,
+                    init_cache=init_cache)

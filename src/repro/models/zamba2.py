@@ -1,0 +1,163 @@
+"""Zamba2: Mamba2 backbone + SHARED attention blocks (hybrid).
+
+Every `hybrid_attn_period` Mamba2 layers, one shared transformer block
+(GQA attention + SwiGLU MLP) is applied. All applications reuse ONE set
+of attention-block weights (Zamba's parameter-sharing trick); each
+application keeps its OWN KV cache. (The upstream model also applies
+per-application LoRA deltas to the shared block; that specialization is
+omitted — recorded in DESIGN.md.)
+
+Cache = SSM states for every Mamba layer + a KV cache with a leading
+"application" axis (num_apps, B, T, KH, hd).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, mamba2
+from repro.models.common import (ModelConfig, Params, cross_entropy_loss,
+                                 dense_init, embed_init, rmsnorm, rope_tables)
+
+
+@dataclasses.dataclass
+class HybridCache:
+    state: jax.Array   # (L, B, H, P, N) f32 — mamba states
+    conv: jax.Array    # (L, B, W-1, conv_dim)
+    k: jax.Array       # (APPS, B, T, KH, hd)
+    v: jax.Array       # (APPS, B, T, KH, hd)
+    length: jax.Array  # (B,)
+
+
+jax.tree_util.register_dataclass(
+    HybridCache, data_fields=["state", "conv", "k", "v", "length"],
+    meta_fields=[])
+
+
+def num_apps(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.hybrid_attn_period == 0
+    return cfg.num_layers // cfg.hybrid_attn_period
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 4)
+    sub = [mamba2.init_block(cfg, jax.random.fold_in(ks[0], i))
+           for i in range(cfg.num_layers)]
+    blocks = jax.tree.map(lambda *a: jnp.stack(a), *sub)
+    # shared attention block: reuse dense's per-layer layout with L=1, squeezed
+    shared_full = dense.init_params(cfg.with_(num_layers=1), ks[1])
+    shared = jax.tree.map(lambda a: a[0], shared_full["blocks"])
+    params = {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), cfg.pdtype),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                       cfg.pdtype)
+    return params
+
+
+def _grouped(params, cfg):
+    apps = num_apps(cfg)
+    per = cfg.hybrid_attn_period
+    return jax.tree.map(
+        lambda a: a.reshape(apps, per, *a.shape[1:]), params["blocks"])
+
+
+def _run(params, x, cfg: ModelConfig, collect: bool):
+    s = x.shape[1]
+    cos, sin = rope_tables(jnp.arange(s, dtype=jnp.int32), cfg.hd,
+                           cfg.rope_theta)
+    shared = params["shared"]
+
+    def superblock(h, mp):
+        def mstep(hh, p):
+            h2, (st, conv) = mamba2.block_fwd(p, hh, cfg)
+            return h2, (st, conv)
+        h, (states, convs) = jax.lax.scan(mstep, h, mp)
+        h, (k, v) = dense.block_fwd(shared, h, cos, sin, cfg)
+        if collect:
+            return h, (states, convs, k, v)
+        return h, None
+
+    fn = jax.checkpoint(superblock) if cfg.remat else superblock
+    return jax.lax.scan(fn, x, _grouped(params, cfg))
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds=None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    x, _ = _run(params, x, cfg, collect=False)
+    return mamba2._logits(params, x, cfg)
+
+
+def loss_fn(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    return cross_entropy_loss(forward(params, batch["tokens"], cfg),
+                              batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> HybridCache:
+    l, h, pd, n, w = (cfg.num_layers, cfg.ssm_heads, cfg.ssm_head_dim,
+                      cfg.ssm_state, cfg.ssm_conv_width)
+    apps = num_apps(cfg)
+    kv_shape = (apps, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return HybridCache(
+        state=jnp.zeros((l, batch, h, pd, n), jnp.float32),
+        conv=jnp.zeros((l, batch, w - 1, mamba2.conv_dim(cfg)), cfg.cdtype),
+        k=jnp.zeros(kv_shape, cfg.cdtype), v=jnp.zeros(kv_shape, cfg.cdtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig,
+            max_len=None, lengths=None, prefix_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    b, s = tokens.shape
+    x, (states, convs, ks, vs) = _run(params, x, cfg, collect=True)
+    states = states.reshape(cfg.num_layers, *states.shape[2:])
+    convs = convs.reshape(cfg.num_layers, *convs.shape[2:])
+    logits = mamba2._logits(params, x, cfg)
+    t = max_len or s
+    if t > s:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, t - s), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, t - s), (0, 0), (0, 0)))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    return logits, HybridCache(state=states, conv=convs, k=ks, v=vs,
+                               length=lengths)
+
+
+def decode_step(params: Params, cache: HybridCache, tokens: jax.Array,
+                cfg: ModelConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+    length = cache.length + 1
+    pos = (length - 1).astype(jnp.int32)[:, None]
+    cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta)
+    shared = params["shared"]
+    apps = num_apps(cfg)
+    l = cfg.num_layers
+    grp = lambda a: a.reshape(apps, l // apps, *a.shape[1:])
+
+    def superblock(h, xs):
+        mp, st, cv, kc, vc = xs
+
+        def mstep(hh, inner):
+            p, s_, c_ = inner
+            h2, s2, c2 = mamba2.block_decode(p, hh, s_, c_, cfg)
+            return h2, (s2, c2)
+        h, (st2, cv2) = jax.lax.scan(mstep, h, (mp, st, cv))
+        h, kc2, vc2 = dense.block_decode(shared, h, kc, vc, length,
+                                         cos, sin, cfg)
+        return h, (st2, cv2, kc2, vc2)
+
+    x, (states, convs, ks, vs) = jax.lax.scan(
+        superblock, x,
+        (_grouped(params, cfg), grp(cache.state), grp(cache.conv),
+         cache.k, cache.v))
+    states = states.reshape(l, *states.shape[2:])
+    convs = convs.reshape(l, *convs.shape[2:])
+    return mamba2._logits(params, x, cfg), HybridCache(
+        state=states, conv=convs, k=ks, v=vs, length=length)

@@ -1,0 +1,3 @@
+from repro.runtime.fault import HeartbeatMonitor, StragglerDetector
+from repro.runtime.elastic import (ElasticTrainer, FailureInjector,
+                                   WorkerFailure, build_mesh_from)

@@ -1,0 +1,99 @@
+"""End-to-end RAG pipeline (Fig. 1 of the paper).
+
+offline:  doc tokens --MiniLM embedder--> float embeddings --INT8 quant-->
+          nibble-planar DB (optionally sharded over a mesh)
+online:   query tokens -> query embedding -> INT8 codes
+          -> TWO-STAGE HIERARCHICAL RETRIEVAL (the paper's core)
+          -> augmented prompt = [retrieved doc tokens; query tokens]
+          -> generator prefill + decode
+
+The pipeline also reports the retrieval energy ledger per query batch via
+the paper-calibrated cost model (core.energy), so serving logs expose the
+same numbers the paper's Table II does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (BitPlanarDB, RetrievalConfig, batched_retrieve,
+                        build_database, energy, quantize_int8)
+from repro.core.index import ShardedIndex
+from repro.models import embedder as emb_mod
+from repro.models.common import ModelConfig
+from repro.models.registry import ModelApi
+from repro.serve.sampler import generate
+
+
+@dataclasses.dataclass
+class RAGPipeline:
+    emb_cfg: ModelConfig
+    emb_params: Any
+    gen_api: ModelApi
+    gen_params: Any
+    retrieval_cfg: RetrievalConfig
+    doc_tokens: jax.Array                  # (N, doc_len) int32
+    db: BitPlanarDB | None = None          # single-host DB
+    index: ShardedIndex | None = None      # pod-sharded DB (preferred)
+
+    @classmethod
+    def build(cls, emb_cfg, emb_params, gen_api, gen_params, doc_tokens,
+              retrieval_cfg: RetrievalConfig | None = None, mesh=None,
+              encode_batch: int = 64):
+        """Offline phase: embed + quantize the document corpus."""
+        retrieval_cfg = retrieval_cfg or RetrievalConfig()
+        n = doc_tokens.shape[0]
+        chunks = []
+        enc = jax.jit(lambda p, t: emb_mod.encode(p, t, emb_cfg))
+        for i in range(0, n, encode_batch):
+            chunks.append(enc(emb_params, doc_tokens[i:i + encode_batch]))
+        embs = jnp.concatenate(chunks, axis=0)
+        if mesh is not None:
+            index = ShardedIndex.build(embs, mesh)
+            db = None
+        else:
+            index = None
+            db = BitPlanarDB.from_quantized(build_database(embs))
+        return cls(emb_cfg=emb_cfg, emb_params=emb_params, gen_api=gen_api,
+                   gen_params=gen_params, retrieval_cfg=retrieval_cfg,
+                   doc_tokens=doc_tokens, db=db, index=index)
+
+    # -- retrieval ---------------------------------------------------------
+
+    def retrieve(self, query_tokens: jax.Array):
+        """query_tokens (B, L) -> (indices (B, k), energy ledger)."""
+        q_emb = emb_mod.encode(self.emb_params, query_tokens, self.emb_cfg)
+        q_codes, _ = quantize_int8(q_emb, per_vector=True)
+        if self.index is not None:
+            fn = self.index.retrieve_fn(self.retrieval_cfg)
+            res = fn(q_codes)
+            n_docs = self.index.n_global
+        else:
+            res = batched_retrieve(q_codes, self.db, self.retrieval_cfg)
+            n_docs = self.db.num_docs
+        dim = q_emb.shape[-1]
+        ledger = energy.cost_hierarchical(n_docs, dim)
+        return res, ledger
+
+    # -- generation --------------------------------------------------------
+
+    def answer(self, query_tokens: jax.Array, *, max_new: int = 32,
+               temperature: float = 0.0, key=None):
+        """Full RAG answer: retrieve, augment, generate.
+
+        Returns (generated tokens (B, max_new), retrieved ids (B, k),
+        energy ledger for the retrieval stage)."""
+        res, ledger = self.retrieve(query_tokens)
+        ids = res.indices                                 # (B, k)
+        b, k = ids.shape
+        docs = jnp.take(self.doc_tokens, ids.reshape(-1), axis=0)
+        docs = docs.reshape(b, k * self.doc_tokens.shape[1])
+        prompt = jnp.concatenate([docs, query_tokens], axis=1)
+        vocab = self.gen_api.cfg.vocab_size
+        prompt = jnp.clip(prompt, 0, vocab - 1)
+        out, _ = generate(self.gen_api, self.gen_params, {"tokens": prompt},
+                          max_new=max_new, temperature=temperature, key=key)
+        return out, ids, ledger

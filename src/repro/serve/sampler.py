@@ -1,0 +1,45 @@
+"""Batched autoregressive sampling loop over any ModelApi."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelApi
+
+
+def sample_tokens(logits: jax.Array, key, temperature: float = 0.0
+                  ) -> jax.Array:
+    """logits (B, 1, V) -> next tokens (B, 1)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    scaled = logits[:, -1].astype(jnp.float32) / temperature
+    return jax.random.categorical(key, scaled)[:, None].astype(jnp.int32)
+
+
+def generate(api: ModelApi, params: Any, batch: dict, *, max_new: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             key=None, jit: bool = True):
+    """Prefill the prompt batch, then decode `max_new` tokens.
+
+    Returns (generated (B, max_new) int32, final cache). Lockstep batched
+    decoding (continuous batching handled one level up in rag.serve_loop).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prompt_len = batch["tokens"].shape[1]
+    total = max_len or (prompt_len + max_new)
+
+    prefill = jax.jit(api.prefill, static_argnames=("max_len",)) if jit \
+        else api.prefill
+    decode = jax.jit(api.decode_step) if jit else api.decode_step
+
+    logits, cache = prefill(params, batch, max_len=total)
+    tok = sample_tokens(logits[:, -1:], key, temperature)
+    outs = [tok]
+    for i in range(max_new - 1):
+        key = jax.random.fold_in(key, i)
+        logits, cache = decode(params, cache, tok)
+        tok = sample_tokens(logits, key, temperature)
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1), cache

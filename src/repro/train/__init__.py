@@ -1,0 +1,3 @@
+from repro.train.optim import Optimizer, adafactor, adamw, get_optimizer
+from repro.train.step import (clip_by_global_norm, global_norm,
+                              make_train_step)

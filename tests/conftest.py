@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests see the default 1 CPU device (the 512-device override lives ONLY in
+# launch/dryrun.py, per the dry-run spec)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,53 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplanar as bp
+
+
+def codes(seed=0, n=37, d=64):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(-128, 128, (n, d)).astype(
+            np.int8))
+
+
+def test_nibble_roundtrip():
+    c = codes()
+    msb, lsb = bp.pack_nibble_planes(c)
+    assert msb.shape == (37, 32) and msb.dtype == jnp.uint8
+    rec = bp.reconstruct_int8(msb, lsb)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(c))
+
+
+def test_msb_plane_halves_bytes():
+    c = codes(n=10, d=512)
+    msb, _ = bp.pack_nibble_planes(c)
+    assert msb.size == c.size // 2          # the paper's 50% traffic saving
+
+
+def test_8plane_roundtrip():
+    c = codes(1)
+    planes = bp.pack_bitplanes(c)
+    assert planes.shape == (8, 37, 8)
+    np.testing.assert_array_equal(np.asarray(bp.unpack_bitplanes(planes)),
+                                  np.asarray(c))
+
+
+def test_partial_planes_equal_msb_truncation():
+    c = codes(2)
+    planes = bp.pack_bitplanes(c)
+    got = np.asarray(bp.unpack_bitplanes(planes, num_planes=4), np.int8)
+    want = ((np.asarray(c, np.int8) >> 4) << 4).astype(np.int8)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_nibble_roundtrip_property(seed, half_d):
+    c = codes(seed % 1000, n=5, d=2 * half_d)
+    msb, lsb = bp.pack_nibble_planes(c)
+    np.testing.assert_array_equal(
+        np.asarray(bp.reconstruct_int8(msb, lsb)), np.asarray(c))
+    signed = np.asarray(bp.unpack_nibble_plane_signed(msb), np.int32)
+    np.testing.assert_array_equal(signed,
+                                  np.asarray(c, np.int8).astype(np.int32) >> 4)

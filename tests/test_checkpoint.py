@@ -1,0 +1,61 @@
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(5), "d": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 7, t)
+    got, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, tree(s))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_00000003", "step_00000004"]
+
+
+def test_crash_mid_save_never_corrupts_latest(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree(1))
+    # simulate a crash: a stale .tmp dir with garbage
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    with open(tmp_path / "step_00000002.tmp" / "junk", "w") as f:
+        f.write("partial")
+    assert latest_step(str(tmp_path)) == 1
+    got, step = restore_checkpoint(str(tmp_path), tree(1))
+    assert step == 1
+
+
+def test_restore_with_resharding(tmp_path):
+    t = tree(3)
+    save_checkpoint(str(tmp_path), 1, t)
+    sh = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+    got, _ = restore_checkpoint(str(tmp_path), t, shardings=sh)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path / "nope"), tree())

@@ -1,0 +1,51 @@
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze, parse_module
+
+
+def _compile(f, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+    c = _compile(f, (128, 128), (128, 128))
+    r = analyze(c.as_text())
+    assert r["dot_flops"] == 10 * 2 * 128 ** 3
+
+
+def test_nested_scan_flops():
+    def g(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+    c = _compile(g, (64, 64), (64, 64))
+    r = analyze(c.as_text())
+    assert r["dot_flops"] == 12 * 2 * 64 ** 3
+
+
+def test_plain_dot_flops():
+    c = _compile(lambda a, b: a @ b, (32, 64), (64, 16))
+    r = analyze(c.as_text())
+    assert r["dot_flops"] == 2 * 32 * 64 * 16
+
+
+def test_parse_module_splits_computations():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+    c = _compile(f, (8,))
+    comps = parse_module(c.as_text())
+    assert len(comps) >= 2          # entry + loop body/cond

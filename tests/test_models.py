@@ -1,0 +1,181 @@
+"""Model-library equivalence tests (small configs, CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models import dense, embedder, encdec, mamba2, moe, zamba2
+from repro.models.common import ModelConfig
+
+
+def test_chunked_attention_matches_naive():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 2, 16))
+    for chunk in (8, 16, 32):
+        o = A.chunked_attention(q, k, v, chunk=chunk, causal=True)
+        np.testing.assert_allclose(np.asarray(o),
+                                   np.asarray(A.naive_attention(q, k, v)),
+                                   atol=2e-5)
+    o = A.chunked_attention(q, k, v, chunk=16, causal=False)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(A.naive_attention(q, k, v, causal=False)),
+        atol=2e-5)
+
+
+def test_dense_decode_equals_teacher_forcing():
+    cfg = ModelConfig(name="t", family="dense", num_layers=3, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=97,
+                      qkv_bias=True, attn_chunk=8,
+                      compute_dtype="float32", remat=True)
+    params = dense.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    full = dense.forward(params, toks, cfg)
+    _, cache = dense.prefill(params, toks[:, :10], cfg, max_len=16)
+    outs = []
+    for i in range(6):
+        lg, cache = dense.decode_step(params, cache, toks[:, 10 + i:11 + i],
+                                      cfg)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 10:16]),
+                               atol=1e-4)
+
+
+def test_ssd_chunked_matches_recurrence():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 24, 4, 8))
+    a = -jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (2, 24, 4))) * 0.5
+    b = jax.random.normal(jax.random.PRNGKey(4), (2, 24, 16))
+    c = jax.random.normal(jax.random.PRNGKey(5), (2, 24, 16))
+    y8, f8 = mamba2.ssd_chunked(x, a, b, c, 8)
+    y24, f24 = mamba2.ssd_chunked(x, a, b, c, 24)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y24), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f8), np.asarray(f24), atol=1e-4)
+    st = jnp.zeros((2, 4, 8, 16))
+    ys = []
+    for t in range(24):
+        st = st * jnp.exp(a[:, t])[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x[:, t], b[:, t])
+        ys.append(jnp.einsum("bhpn,bn->bhp", st, c[:, t]))
+    np.testing.assert_allclose(np.asarray(y8),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f8), np.asarray(st), atol=1e-4)
+
+
+def test_mamba2_decode_continues_prefill():
+    cfg = ModelConfig(name="m", family="ssm", num_layers=3, d_model=64,
+                      num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=89,
+                      ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                      compute_dtype="float32", remat=False)
+    params = mamba2.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 89)
+    full = mamba2.forward(params, toks, cfg)
+    lg, cache = mamba2.prefill(params, toks[:, :16], cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, :16]),
+                               atol=1e-4)
+    outs = []
+    for i in range(8):
+        lg, cache = mamba2.decode_step(params, cache, toks[:, 16 + i:17 + i],
+                                       cfg)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full[:, 16:24]), atol=1e-4)
+
+
+@pytest.mark.parametrize("period", [1, 2])
+def test_moe_decode_equals_forward_when_no_drop(period):
+    cfg = ModelConfig(name="mo", family="moe", num_layers=4, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=96, vocab_size=101,
+                      num_experts=8, moe_layer_period=period,
+                      shared_expert=True, capacity_factor=16.0,
+                      attn_chunk=8, remat=True)
+    params = moe.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 101)
+    full = moe.forward(params, toks[:, :14], cfg)
+    _, cache = moe.prefill(params, toks[:, :10], cfg, max_len=20)
+    outs = []
+    for i in range(4):
+        lg, cache = moe.decode_step(params, cache, toks[:, 10 + i:11 + i],
+                                    cfg)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(full[:, 10:14], np.float32),
+                               atol=1e-2)
+
+
+def test_moe_dispatch_conserves_tokens():
+    cfg = ModelConfig(name="x", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=11,
+                      num_experts=4, capacity_factor=8.0)
+    p = moe.init_moe_ffn(cfg, jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 16))
+    y = moe.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape and bool(jnp.isfinite(y).all())
+    # with capacity 8x nothing is dropped: permutation-invariance of batch
+    y2 = moe.moe_ffn(p, x[::-1], cfg)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y[::-1]),
+                               atol=1e-5)
+
+
+def test_zamba2_decode_continues_prefill():
+    cfg = ModelConfig(name="z", family="hybrid", num_layers=4, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=83,
+                      ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+                      hybrid_attn_period=2, compute_dtype="float32",
+                      attn_chunk=8, remat=False)
+    params = zamba2.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, 83)
+    full = zamba2.forward(params, toks, cfg)
+    _, cache = zamba2.prefill(params, toks[:, :16], cfg, max_len=24)
+    outs = []
+    for i in range(8):
+        lg, cache = zamba2.decode_step(params, cache, toks[:, 16 + i:17 + i],
+                                       cfg)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full[:, 16:24]), atol=1e-4)
+
+
+def test_zamba2_shared_block_is_shared():
+    cfg = ModelConfig(name="z", family="hybrid", num_layers=4, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=50,
+                      ssm_state=8, ssm_head_dim=8, hybrid_attn_period=2)
+    params = zamba2.init_params(cfg, jax.random.PRNGKey(0))
+    # one attention block's worth of params, not num_apps copies
+    assert params["shared"]["wq"].ndim == 2
+
+
+def test_encdec_decode_continues_prefill():
+    cfg = ModelConfig(name="s", family="encdec", num_layers=3,
+                      encoder_layers=3, d_model=64, num_heads=4,
+                      num_kv_heads=4, d_ff=128, vocab_size=97,
+                      compute_dtype="float32", attn_chunk=8, remat=False)
+    p = encdec.init_params(cfg, jax.random.PRNGKey(0))
+    frames = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 64))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 20), 0, 97)
+    full = encdec.forward(p, frames, toks, cfg)
+    _, cache = encdec.prefill(p, frames, toks[:, :12], cfg, max_len=20)
+    outs = []
+    for i in range(8):
+        lg, cache = encdec.decode_step(p, cache, toks[:, 12 + i:13 + i], cfg)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full[:, 12:20]), atol=1e-4)
+
+
+def test_embedder_normalized_and_mask_aware():
+    cfg = embedder.MINILM_CFG.with_(num_layers=2, d_model=32, num_heads=4,
+                                    num_kv_heads=4, d_ff=64, vocab_size=50,
+                                    pooled_dim=16)
+    p = embedder.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 10), 0, 50)
+    e = embedder.encode(p, toks, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(e, axis=-1)),
+                               np.ones(3), atol=1e-5)
+    mask = jnp.ones((3, 10), bool).at[:, 5:].set(False)
+    e_m = embedder.encode(p, toks, cfg, mask)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(e_m, axis=-1)),
+                               np.ones(3), atol=1e-5)
+    assert float(jnp.max(jnp.abs(e - e_m))) > 1e-4   # pooling mask matters

@@ -1,0 +1,59 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+
+def rand(shape, seed=0, scale=3.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+        * scale)
+
+
+def test_int8_roundtrip_error_bound():
+    x = rand((64, 128))
+    codes, scale = q.quantize_int8(x)
+    err = jnp.max(jnp.abs(q.dequantize(codes, scale) - x))
+    assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+def test_per_vector_scale_shape():
+    x = rand((32, 64))
+    codes, scale = q.quantize_int8(x, per_vector=True)
+    assert scale.shape == (32,)
+    err = jnp.abs(q.dequantize(codes, scale) - x)
+    assert float(jnp.max(err)) <= float(jnp.max(scale)) * 0.5 + 1e-6
+
+
+def test_int4_range():
+    codes, _ = q.quantize_int4(rand((16, 32)))
+    assert int(codes.min()) >= -8 and int(codes.max()) <= 7
+
+
+@given(st.lists(st.integers(-128, 127), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_nibble_split_exact(vals):
+    v = jnp.asarray(vals, jnp.int8)
+    msb, lsb = q.msb_nibble(v), q.lsb_nibble(v)
+    assert int(msb.min()) >= -8 and int(msb.max()) <= 7
+    assert int(lsb.min()) >= 0 and int(lsb.max()) <= 15
+    rec = q.reconstruct_from_nibbles(msb, lsb)
+    np.testing.assert_array_equal(np.asarray(rec), np.asarray(v))
+
+
+def test_msb_is_coarse_quant():
+    """msb*16 must be within 16 of the original value (floor to 16s)."""
+    v = jnp.arange(-128, 128, dtype=jnp.int8)
+    approx = q.msb_nibble(v).astype(np.int32) * 16
+    diff = np.asarray(v, np.int32) - np.asarray(approx)
+    assert diff.min() >= 0 and diff.max() <= 15
+
+
+def test_build_database():
+    db = q.build_database(rand((100, 512)))
+    assert db.values.shape == (100, 512) and db.values.dtype == jnp.int8
+    assert db.norms_sq.shape == (100,)
+    expect = (np.asarray(db.values, np.int64) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(db.norms_sq, np.int64), expect)

@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BitPlanarDB, RetrievalConfig, batched_retrieve,
+                        build_database, exact_retrieve, int4_retrieve,
+                        quantize_int8, two_stage_retrieve)
+from repro.data import retrieval_corpus
+
+
+def make_db(n=500, d=512, seed=0):
+    docs, queries, gold = retrieval_corpus(n, d, num_queries=32, seed=seed)
+    qdb = build_database(jnp.asarray(docs))
+    return qdb, BitPlanarDB.from_quantized(qdb), queries, gold
+
+
+def p_at_1(retrieve_fn, queries, gold):
+    hits = 0
+    for i in range(queries.shape[0]):
+        qc, _ = quantize_int8(jnp.asarray(queries[i]))
+        res = retrieve_fn(qc)
+        hits += int(np.asarray(res.indices)[0] == gold[i])
+    return hits / queries.shape[0]
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+def test_two_stage_matches_exact_top1(metric):
+    """On a planted corpus the hierarchical retrieval's top-1 matches pure
+    INT8 retrieval for the overwhelming majority of queries (paper Table I:
+    hierarchical ~ INT8)."""
+    qdb, bpdb, queries, gold = make_db()
+    cfg = RetrievalConfig(k=5, metric=metric)
+    agree = 0
+    for i in range(queries.shape[0]):
+        qc, _ = quantize_int8(jnp.asarray(queries[i]))
+        r2 = two_stage_retrieve(qc, bpdb, cfg)
+        r8 = exact_retrieve(qc, qdb, cfg)
+        agree += int(np.asarray(r2.indices)[0] == np.asarray(r8.indices)[0])
+    assert agree >= 31  # >=97% top-1 agreement with pure INT8
+
+
+def test_precision_ordering_hier_close_to_int8_above_int4():
+    """The paper's Table I ordering: P@1(hier) ~= P@1(INT8) > P@1(INT4),
+    in the clustered near-duplicate regime where precision decides top-1."""
+    docs, queries, gold = retrieval_corpus(
+        800, 512, num_queries=64, seed=3, noise=0.15, cluster_size=16,
+        cluster_spread=0.15)
+    qdb = build_database(jnp.asarray(docs))
+    bpdb = BitPlanarDB.from_quantized(qdb)
+    cfg = RetrievalConfig(k=5, metric="cosine")
+    p_hier = p_at_1(lambda q: two_stage_retrieve(q, bpdb, cfg), queries, gold)
+    p_int8 = p_at_1(lambda q: exact_retrieve(q, qdb, cfg), queries, gold)
+    p_int4 = p_at_1(lambda q: int4_retrieve(q, bpdb, cfg), queries, gold)
+    assert p_hier >= p_int8 - 0.05   # hierarchical ~ INT8
+    assert p_int4 <= p_int8 - 0.05   # INT4 visibly worse
+    assert p_int8 > 0.9
+
+
+def test_candidate_policy():
+    cfg = RetrievalConfig(k=5)
+    assert cfg.num_candidates(100) == 20       # 20% at small corpora
+    assert cfg.num_candidates(10000) == 50     # capped at 50
+    assert cfg.num_candidates(10) == 5         # never below k
+
+
+def test_batched_retrieve():
+    _, bpdb, queries, _ = make_db(n=200)
+    qc, _ = quantize_int8(jnp.asarray(queries[:8]), per_vector=True)
+    res = batched_retrieve(qc, bpdb, RetrievalConfig(k=3))
+    assert res.indices.shape == (8, 3)
+    single = two_stage_retrieve(qc[0], bpdb, RetrievalConfig(k=3))
+    np.testing.assert_array_equal(np.asarray(res.indices[0]),
+                                  np.asarray(single.indices))
+
+
+def test_pallas_backend_equals_jnp_backend():
+    _, bpdb, queries, _ = make_db(n=300)
+    qc, _ = quantize_int8(jnp.asarray(queries[0]))
+    for metric in ("cosine", "mips"):
+        rj = two_stage_retrieve(qc, bpdb,
+                                RetrievalConfig(k=5, metric=metric))
+        rp = two_stage_retrieve(qc, bpdb,
+                                RetrievalConfig(k=5, metric=metric,
+                                                backend="pallas"))
+        np.testing.assert_array_equal(np.asarray(rj.indices),
+                                      np.asarray(rp.indices))
+        np.testing.assert_array_equal(np.asarray(rj.scores),
+                                      np.asarray(rp.scores))

@@ -1,0 +1,101 @@
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.models import get_model
+from repro.runtime import (ElasticTrainer, FailureInjector, HeartbeatMonitor,
+                           StragglerDetector, build_mesh_from)
+from repro.train import adamw, make_train_step
+
+
+def test_heartbeat_failure_detection():
+    clock = iter(float(i) for i in itertools.count())
+    now = [0.0]
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=lambda: now[0])
+    mon.beat("w0"); mon.beat("w1")
+    now[0] = 3.0
+    mon.beat("w0")
+    now[0] = 7.0
+    assert mon.failed() == ["w1"]
+    assert mon.alive() == ["w0"]
+
+
+def test_straggler_detection():
+    det = StragglerDetector(k_sigma=2.0, min_steps=5)
+    for i in range(10):
+        for w in ("w0", "w1", "w2", "w3"):
+            det.record(w, 1.0 + 0.01 * i)
+        det.record("slow", 3.0)
+    assert det.stragglers() == ["slow"]
+
+
+def test_build_mesh_from_survivors():
+    devs = jax.devices()
+    mesh = build_mesh_from(devs, model_parallel=1)
+    assert mesh.devices.size == len(devs)
+
+
+def _make_state_factory(cfg, api, opt):
+    def make_state(mesh):
+        params = api.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        raw = make_train_step(api.loss_fn, opt)
+
+        def step_fn(params, opt_state, batch, mesh):
+            return jax.jit(raw)(params, opt_state, batch)
+
+        return params, opt_state, step_fn, None
+    return make_state
+
+
+def test_elastic_trainer_restarts_after_failure(tmp_path):
+    """Inject a failure at step 12: driver must checkpoint-restart, resume
+    from step 10 (last save), and finish all 20 steps."""
+    cfg = get_config("qwen2-0.5b", smoke=True).with_(vocab_size=64)
+    api = get_model(cfg)
+    opt = adamw(lr=1e-3)
+    toks = np.random.default_rng(0).integers(0, 64, (4, 16)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    batches = itertools.repeat(batch)
+
+    trainer = ElasticTrainer(
+        make_state=_make_state_factory(cfg, api, opt),
+        ckpt=CheckpointManager(str(tmp_path), keep=2), save_every=5)
+
+    class FakeDev:
+        def __init__(self, i):
+            self.id = i
+
+    devs = [FakeDev(0), FakeDev(1)]
+
+    # monkeypatch build: our fake devices can't build a real mesh; use the
+    # real device for compute, fakes only for failure bookkeeping
+    import repro.runtime.elastic as el
+    orig = el.build_mesh_from
+    el.build_mesh_from = lambda d, mp: orig(jax.devices(), 1)
+    try:
+        out = trainer.run(batches, num_steps=20,
+                          injector=FailureInjector({12: 1}), devices=devs)
+    finally:
+        el.build_mesh_from = orig
+    assert out["restarts"] == 1
+    assert out["final_devices"] == 1
+    # steps 10..20 re-run after restore: total recorded >= 20
+    assert len(out["losses"]) >= 20
+
+
+def test_elastic_trainer_no_failure(tmp_path):
+    cfg = get_config("qwen2-0.5b", smoke=True).with_(vocab_size=64)
+    api = get_model(cfg)
+    opt = adamw(lr=1e-3)
+    toks = np.random.default_rng(0).integers(0, 64, (4, 16)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    trainer = ElasticTrainer(
+        make_state=_make_state_factory(cfg, api, opt),
+        ckpt=CheckpointManager(str(tmp_path)), save_every=4)
+    out = trainer.run(itertools.repeat(batch), num_steps=8)
+    assert out["restarts"] == 0 and len(out["losses"]) == 8

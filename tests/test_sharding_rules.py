@@ -1,0 +1,111 @@
+"""PartitionSpec construction for every assigned arch (no devices needed:
+specs are pure metadata; validity on 256/512-device meshes is proven by
+the dry-run)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AxisType, Mesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as sh
+from repro.models import get_model
+from repro.train import get_optimizer
+
+
+def fake_mesh(shape, names):
+    """An abstract single-device-backed mesh is enough for spec logic; use
+    mesh.shape via a stub object."""
+    class M:
+        axis_names = names
+        def __init__(self):
+            self.shape = dict(zip(names, shape))
+            self.devices = np.empty(shape, object)
+    return M()
+
+
+MESHES = [((16, 16), ("data", "model")),
+          ((2, 16, 16), ("pod", "data", "model"))]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mshape,mnames", MESHES)
+def test_param_specs_divisible(arch, mshape, mnames):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    mesh = fake_mesh(mshape, mnames)
+    aparams = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+    def check(path, leaf):
+        spec = sh.param_spec(path, leaf.shape, mesh, cfg)
+        assert len(spec) <= leaf.ndim
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % total == 0, (path, leaf.shape, spec)
+        # each mesh axis used at most once
+        used = [a for e in spec if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))]
+        assert len(used) == len(set(used)), (path, spec)
+
+    jax.tree_util.tree_map_with_path(check, aparams)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "llama4-scout-17b-a16e",
+                                  "mamba2-2.7b"])
+def test_opt_state_specs_rank_match(arch):
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    aparams = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    opt = get_optimizer(cfg.optimizer)
+    astate = jax.eval_shape(opt.init, aparams)
+
+    # NamedSharding needs a real mesh; validate specs via param_spec-based
+    # resolution by monkey-wrapping NamedSharding out of the path
+    import repro.distributed.sharding as S
+
+    captured = []
+    orig = S.NamedSharding
+    S.NamedSharding = lambda m, spec: spec
+    try:
+        specs = S.opt_state_shardings(astate, aparams, mesh, cfg)
+    finally:
+        S.NamedSharding = orig
+
+    def check(path, leaf):
+        spec = specs
+        for e in path:
+            key = getattr(e, "key", getattr(e, "idx", None))
+            spec = spec[key]
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % total == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, astate)
+
+
+def test_kv_cache_context_parallel_fallback():
+    """deepseek-67b decode: KH=8 < model=16 -> cache shards the SEQ dim."""
+    cfg = get_config("deepseek-67b")
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    shape = (95, 128, 32768, 8, 128)   # (L, B, T, KH, hd)
+    from jax.tree_util import DictKey
+    spec = sh.cache_spec((DictKey("k"),), shape, mesh, cfg)
+    assert spec[2] == "model" and spec[3] is None
+    assert spec[1] == "data"
+
+
+def test_kv_cache_batch1_long_context():
+    cfg = get_config("zamba2-2.7b")
+    mesh = fake_mesh((16, 16), ("data", "model"))
+    shape = (9, 1, 524288, 32, 80)
+    from jax.tree_util import DictKey
+    spec = sh.cache_spec((DictKey("k"),), shape, mesh, cfg)
+    # batch=1 unshardable; KH=32 divisible by model; T picks up data
+    assert spec[3] == "model" or spec[2] is not None

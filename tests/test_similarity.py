@@ -1,0 +1,66 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import similarity as sim
+
+D = 512
+SMAX = D * 127 * 127            # max |dot| for D int8 dims
+NMAX = D * 127 * 127            # max squared norm
+
+score = st.integers(-SMAX, SMAX)
+norm = st.integers(0, NMAX)
+
+
+@given(score, norm, score, norm)
+@settings(max_examples=300, deadline=None)
+def test_fraction_greater_matches_exact_math(sa, na, sb, nb):
+    """The integer non-division comparator must agree with exact rational
+    comparison of sa/sqrt(na) vs sb/sqrt(nb) (computed in python ints)."""
+    def key(s, n):
+        if n == 0:
+            return (0, 0)
+        return (1 if s > 0 else (-1 if s < 0 else 0), s * s * (1 if s >= 0 else -1), n)
+
+    def exact_gt(sa, na, sb, nb):
+        ka, kb = key(sa, na), key(sb, nb)
+        if ka[0] != kb[0]:
+            return ka[0] > kb[0]
+        if ka[0] == 0:
+            return False
+        # same sign, nonzero: compare sa^2/na vs sb^2/nb with sign
+        lhs = sa * sa * nb
+        rhs = sb * sb * na
+        if ka[0] > 0:
+            return lhs > rhs
+        return lhs < rhs
+
+    got = bool(sim.fraction_greater(jnp.int32(sa), jnp.int32(na),
+                                    jnp.int32(sb), jnp.int32(nb)))
+    assert got == exact_gt(sa, na, sb, nb), (sa, na, sb, nb)
+
+
+def test_int_matvec_exact():
+    rng = np.random.default_rng(0)
+    db = rng.integers(-128, 128, (100, D)).astype(np.int8)
+    qv = rng.integers(-128, 128, (D,)).astype(np.int8)
+    got = np.asarray(sim.int_matvec(jnp.asarray(db), jnp.asarray(qv)))
+    want = db.astype(np.int64) @ qv.astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+def test_rerank_dense_comparator_matches_float_sort():
+    rng = np.random.default_rng(1)
+    scores = jnp.asarray(rng.integers(-10**6, 10**6, 50).astype(np.int32))
+    norms = jnp.asarray(rng.integers(1, 10**6, 50).astype(np.int32))
+    idx, _ = sim.rerank_dense_comparator(scores, norms, 10)
+    fkey = np.asarray(scores, np.float64) / np.sqrt(np.asarray(norms,
+                                                               np.float64))
+    want = np.argsort(-fkey, kind="stable")[:10]
+    np.testing.assert_array_equal(np.asarray(idx), want)
+
+
+def test_cosine_key_zero_norm():
+    key = sim.cosine_key_f32(jnp.asarray([5, -3]), jnp.asarray([0, 0]))
+    np.testing.assert_array_equal(np.asarray(key), [0.0, 0.0])
