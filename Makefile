@@ -1,0 +1,26 @@
+# Tier-1 verify + benchmark entry points. PYTHONPATH is set per-target so
+# `make test` matches the ROADMAP.md command exactly.
+PY ?= python
+
+.PHONY: test test-fast bench-smoke bench example trace
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# quick structural checks: tenancy arena + kernel traffic model
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.tenancy_bench --smoke
+
+# the full paper-table benchmark sweep
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+example:
+	PYTHONPATH=src $(PY) examples/multi_user_agent.py
+
+trace:
+	PYTHONPATH=src $(PY) -m repro.launch.serve_tenants --tenants 6 \
+		--capacity 512 --steps 30

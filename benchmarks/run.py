@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (fig4_reduction, fig5_energy, kernel_bench,  # noqa: E402
                         table1_precision, table2_energy,
-                        table3_comparison)
+                        table3_comparison, tenancy_bench)
 
 
 def main() -> int:
@@ -23,6 +23,8 @@ def main() -> int:
         ("Fig. 5  (energy per query by format)", fig5_energy),
         ("Table III (accelerator comparison)", table3_comparison),
         ("Kernel microbench", kernel_bench),
+        ("Multi-tenant arena (batched serving + online ingest)",
+         tenancy_bench),
     ]
     failures = []
     for name, mod in modules:

@@ -1,0 +1,205 @@
+"""Multi-tenant arena benchmark: batched cross-tenant serving + online ingest.
+
+Two claims measured (CPU wall-clock is dispatch-dominated here, which is
+exactly the effect batching removes; on TPU the batched path additionally
+amortizes the HBM stream of the MSB plane across the whole batch):
+
+  1. QUERIES: one vmapped segment-masked two-stage retrieval over the
+     shared arena vs. the naive baseline — a sequential loop of
+     two_stage_retrieve calls, one per tenant over that tenant's own
+     BitPlanarDB. Acceptance: >= 5x queries/sec at B=16 tenants.
+  2. INGEST: streaming 1k docs into the arena (quantize + pack into free
+     slots, O(rows) per chunk) vs. the seed's only alternative — rebuild
+     the tenant's database from scratch on every chunk. The arena path
+     must issue ZERO rebuilds (arena.stats.rebuilds == 0 by construction).
+
+    PYTHONPATH=src python -m benchmarks.tenancy_bench [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.core import (BitPlanarDB, QuantizedDB,              # noqa: E402
+                        RetrievalConfig, build_database,
+                        quantize_int8, two_stage_retrieve)
+from repro.data import retrieval_corpus                        # noqa: E402
+from repro.tenancy import MultiTenantIndex                     # noqa: E402
+
+
+def _compare(fn_a, fn_b, rounds=12, reps_a=3, reps_b=10):
+    """Paired comparison robust to machine-speed drift: each round times
+    both paths back-to-back (same machine state), and the reported
+    speedup is the MEDIAN of per-round ratios — a slow round slows both
+    sides and leaves its ratio intact, unlike timing the two paths in
+    separate windows. Returns (t_a, t_b, speedup=median(a/b))."""
+    fn_a(), fn_b()                         # warm both outside the clock
+    ratios, ts_a, ts_b = [], [], []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        for _ in range(reps_a):
+            out = fn_a()
+        jax.block_until_ready(out)
+        ta = (time.perf_counter() - t0) / reps_a
+        t0 = time.perf_counter()
+        for _ in range(reps_b):
+            out = fn_b()
+        jax.block_until_ready(out)
+        tb = (time.perf_counter() - t0) / reps_b
+        ratios.append(ta / tb)
+        ts_a.append(ta)
+        ts_b.append(tb)
+    ratios.sort()
+    return (sorted(ts_a)[len(ts_a) // 2], sorted(ts_b)[len(ts_b) // 2],
+            ratios[len(ratios) // 2])
+
+
+def _per_tenant_db(codes: jnp.ndarray, scale) -> BitPlanarDB:
+    """A standalone BitPlanarDB over one tenant's fixed-scale codes."""
+    norms = jnp.sum(codes.astype(jnp.int32) ** 2, axis=-1)
+    return BitPlanarDB.from_quantized(
+        QuantizedDB(values=codes, scale=jnp.float32(scale), norms_sq=norms))
+
+
+def bench_queries(num_tenants: int, docs_per_tenant: int, dim: int,
+                  cfg: RetrievalConfig):
+    """Batched cross-tenant vs sequential per-tenant retrieval."""
+    index = MultiTenantIndex(num_tenants * docs_per_tenant, dim, cfg)
+    dbs, queries, slot0 = [], [], []
+    for t in range(num_tenants):
+        docs, qs, gold = retrieval_corpus(docs_per_tenant, dim,
+                                          num_queries=1, seed=t, noise=0.08)
+        codes = index.arena.quantize(jnp.asarray(docs))
+        slots = index.ingest_codes(t, codes)
+        dbs.append(_per_tenant_db(codes, index.arena.scale))
+        qc, _ = quantize_int8(jnp.asarray(qs[0]))
+        queries.append(np.asarray(qc))
+        slot0.append(int(slots[0]))
+
+    tids = np.arange(num_tenants, dtype=np.int32)   # host-side on purpose
+
+    # Both paths receive HOST-side query codes (as a server does) and pay
+    # their own host->device transfers: one for the batch, B for the loop.
+    def sequential():
+        res = [two_stage_retrieve(jnp.asarray(queries[t]), dbs[t], cfg)
+               for t in range(num_tenants)]
+        return res[-1].indices
+
+    def batched():
+        return index.retrieve(jnp.asarray(np.stack(queries)), tids).indices
+
+    t_seq, t_bat, speedup = _compare(sequential, batched)
+
+    # isolation sanity on the measured path: every valid hit is the caller's
+    res = index.retrieve(jnp.asarray(np.stack(queries)), tids)
+    owner = np.asarray(index.arena.owner)
+    idx = np.asarray(res.indices)
+    isolated = all(owner[i] == t for t, row in enumerate(idx)
+                   for i in row if i >= 0)
+    # the batched path agrees with per-tenant top-1 (slot offset removed)
+    seq_top1 = [int(np.asarray(two_stage_retrieve(
+        jnp.asarray(queries[t]), dbs[t], cfg).indices)[0])
+        for t in range(num_tenants)]
+    agree = all(idx[t, 0] - slot0[t] == seq_top1[t]
+                for t in range(num_tenants))
+    return {
+        "seq_ms": t_seq * 1e3, "batched_ms": t_bat * 1e3,
+        "seq_qps": num_tenants / t_seq, "batched_qps": num_tenants / t_bat,
+        "speedup": speedup, "isolated": isolated, "agree": agree,
+    }
+
+
+def bench_ingest(total_docs: int, chunk: int, dim: int):
+    """Streaming arena ingest vs naive rebuild-per-chunk."""
+    docs, _, _ = retrieval_corpus(total_docs, dim, num_queries=1, seed=9)
+    docs = jnp.asarray(docs)
+    chunks = [docs[i:i + chunk] for i in range(0, total_docs, chunk)]
+
+    index = MultiTenantIndex(total_docs, dim)
+    t0 = time.perf_counter()
+    for c in chunks:
+        index.ingest(0, c)
+    jax.block_until_ready(index.arena.msb_plane)
+    t_online = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for i in range(1, len(chunks) + 1):
+        # the seed's only path: re-embedless rebuild of EVERYTHING so far
+        db = build_database(jnp.concatenate(chunks[:i], axis=0))
+        bp = BitPlanarDB.from_quantized(db)
+    jax.block_until_ready(bp.msb_plane)
+    t_rebuild = time.perf_counter() - t0
+
+    return {
+        "online_s": t_online, "rebuild_s": t_rebuild,
+        "online_rows_per_s": total_docs / t_online,
+        "rebuild_rows_per_s": total_docs / t_rebuild,
+        "rebuilds_issued": index.arena.stats.rebuilds,
+        "inserted": index.num_live,
+    }
+
+
+# Wall-clock gate; on --smoke (CI on shared runners) it is reported but
+# excluded from the exit code — structural checks always gate.
+TIMING_CHECK = "batched >= 5x sequential queries/sec at B=16"
+
+
+def run(verbose=True, smoke=False):
+    # The wearable operating point: each user carries a PERSONAL corpus of
+    # tens of records (EdgeRAG regime), so serving B users sequentially is
+    # dispatch-bound — exactly what cross-tenant batching removes.
+    b = 16
+    n_per = 32
+    dim = 128 if smoke else 512
+    # max_candidates=10 is the small-corpus operating point (the paper's
+    # frac-0.2 rule gives 7 for 32 docs anyway); it applies to BOTH paths,
+    # keeping the arena's stage-2 budget comparable to the per-tenant DBs'.
+    cfg = RetrievalConfig(k=5, metric="cosine", max_candidates=10)
+    q = bench_queries(b, n_per, dim, cfg)
+    ing = bench_ingest(256 if smoke else 1024, 64, dim)
+
+    if verbose:
+        print(f"== cross-tenant serving (B={b} tenants x {n_per} docs, "
+              f"D={dim}) ==")
+        print(f"  sequential per-tenant loop: {q['seq_ms']:8.2f} ms/batch "
+              f"({q['seq_qps']:8.1f} q/s)")
+        print(f"  batched shared arena:       {q['batched_ms']:8.2f} ms/batch "
+              f"({q['batched_qps']:8.1f} q/s)")
+        print(f"  speedup: {q['speedup']:.1f}x   isolation: {q['isolated']}   "
+              f"top-1 agreement: {q['agree']}")
+        print(f"== online ingest ({ing['inserted']} docs, chunk=64, "
+              f"D={dim}) ==")
+        print(f"  arena online insert: {ing['online_s']:6.2f} s "
+              f"({ing['online_rows_per_s']:8.0f} rows/s), "
+              f"rebuilds issued: {ing['rebuilds_issued']}")
+        print(f"  naive rebuild/chunk: {ing['rebuild_s']:6.2f} s "
+              f"({ing['rebuild_rows_per_s']:8.0f} rows/s)")
+
+    checks = {
+        TIMING_CHECK:
+            q["speedup"] >= 5.0,
+        "batched results match per-tenant retrieval":
+            q["agree"] and q["isolated"],
+        "1k-doc online ingest issued zero rebuilds":
+            ing["rebuilds_issued"] == 0 and ing["inserted"] >= (
+                256 if smoke else 1024),
+        "online ingest beats naive rebuild-per-chunk":
+            ing["online_s"] < ing["rebuild_s"],
+    }
+    return {"queries": q, "ingest": ing, "checks": checks}
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    out = run(verbose=True, smoke=smoke)
+    print(out["checks"])
+    gating = {k: v for k, v in out["checks"].items()
+              if not (smoke and k == TIMING_CHECK)}
+    sys.exit(0 if all(gating.values()) else 1)

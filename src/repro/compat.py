@@ -1,0 +1,60 @@
+"""JAX version-compatibility shims.
+
+The framework targets the modern JAX API surface (`jax.shard_map`,
+`jax.set_mesh`, `jax.sharding.get_abstract_mesh`, shard_map's `check_vma`
+flag), but edge deployments often pin older runtimes (the container ships
+0.4.x). Each shim resolves to whatever the installed version provides and
+degrades explicitly:
+
+  * get_abstract_mesh() -> None where abstract-mesh tracking does not
+    exist; callers treat that as "no ambient mesh" and skip GSPMD
+    activation hints (a performance hint, never a correctness change).
+  * shard_map() -> jax.experimental.shard_map with check_vma mapped onto
+    the old check_rep flag.
+  * set_mesh() -> the Mesh object's own context manager (legacy
+    resource-env activation) when jax.set_mesh is absent.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or None when this JAX can't track one."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    return None if fn is None else fn()
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """jax.shard_map across versions (old spelling: experimental, check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh` (jax.set_mesh where available)."""
+    fn = getattr(jax, "set_mesh", None)
+    return mesh if fn is None else fn(mesh)  # Mesh is a context manager
+
+
+def _auto_axis_types(n: int) -> dict:
+    """axis_types kwarg ({(}AxisType.Auto,)*n) where AxisType exists."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return {} if axis_type is None else {
+        "axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh with Auto axis types on versions that take them."""
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices,
+                         **_auto_axis_types(len(axis_names)))
+
+
+def mesh_from_device_array(devices, axis_names):
+    """jax.sharding.Mesh(...) with Auto axis types where supported."""
+    return jax.sharding.Mesh(devices, axis_names,
+                             **_auto_axis_types(len(axis_names)))

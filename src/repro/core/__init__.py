@@ -1,7 +1,9 @@
 """Core library: the paper's hierarchical retrieval as composable JAX modules."""
 from repro.core.quantization import (QuantizedDB, build_database, dequantize,
                                      lsb_nibble, msb_nibble, quantize_int4,
-                                     quantize_int8, reconstruct_from_nibbles)
+                                     quantize_int8, quantize_int8_fixed,
+                                     reconstruct_from_nibbles,
+                                     unit_norm_scale)
 from repro.core.bitplanar import (BitPlanarDB, pack_bitplanes,
                                   pack_nibble_planes, reconstruct_int8,
                                   unpack_bitplanes,
@@ -10,7 +12,10 @@ from repro.core.bitplanar import (BitPlanarDB, pack_bitplanes,
 from repro.core.similarity import (cosine_key_f32, fraction_greater, int_dot,
                                    int_matvec, rerank_dense_comparator,
                                    topk_mips)
-from repro.core.retrieval import (RetrievalConfig, RetrievalResult,
-                                  batched_retrieve, exact_retrieve,
-                                  int4_retrieve, two_stage_retrieve)
+from repro.core.retrieval import (NO_TENANT, RetrievalConfig, RetrievalResult,
+                                  batched_retrieve, batched_retrieve_masked,
+                                  exact_retrieve, int4_retrieve,
+                                  two_stage_retrieve,
+                                  two_stage_retrieve_masked,
+                                  windowed_retrieve_masked)
 from repro.core import energy

@@ -133,7 +133,8 @@ class ShardedIndex:
                 fn = jax.vmap(fn, in_axes=(0, None, None, None))
             return fn(q, msb, lsb, nrm)
 
-        shmapped = jax.shard_map(
+        from repro.compat import shard_map
+        shmapped = shard_map(
             body, mesh=self.mesh,
             in_specs=(P(), row, row, row),
             out_specs=RetrievalResult(indices=P(), scores=P(),

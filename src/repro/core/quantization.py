@@ -14,6 +14,7 @@ All functions are jit-safe pure JAX.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -69,6 +70,28 @@ def quantize_int4(x: jax.Array, *, per_vector: bool = False) -> tuple[jax.Array,
     scale = jnp.maximum(amax, 1e-12) / INT4_MAX
     codes = jnp.clip(jnp.round(x / scale), -INT4_MAX - 1, INT4_MAX).astype(jnp.int8)
     return codes, jnp.squeeze(scale, axis=-1) if per_vector else scale
+
+
+def unit_norm_scale(dim: int) -> float:
+    """Default fixed scale for L2-normalized embeddings of dimension `dim`.
+
+    The max-abs coordinate of a random unit vector concentrates near
+    sqrt(2 ln D / D); 4/sqrt(D) covers it with slack, so codes use most of
+    the INT8 range and only extreme outlier coordinates saturate.
+    """
+    return 4.0 / (INT8_MAX * math.sqrt(dim))
+
+
+def quantize_int8_fixed(x: jax.Array, scale) -> jax.Array:
+    """Symmetric INT8 quantization with a FIXED, caller-supplied scale.
+
+    The streaming/online path quantizes rows at different times into one
+    shared arena, so the scale cannot be re-derived from each batch (rows
+    must stay mutually comparable). Values beyond scale*127 saturate.
+    """
+    x = jnp.asarray(x).astype(jnp.float32)
+    return jnp.clip(jnp.round(x / scale),
+                    -INT8_MAX - 1, INT8_MAX).astype(jnp.int8)
 
 
 def dequantize(codes: jax.Array, scale: jax.Array) -> jax.Array:

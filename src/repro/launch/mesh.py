@@ -2,8 +2,7 @@
 module never touches jax device state)."""
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -11,14 +10,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     leading pod axis: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests/examples)."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def make_train_opt_mesh(*, multi_pod: bool = False):
@@ -29,5 +26,4 @@ def make_train_opt_mesh(*, multi_pod: bool = False):
     60-400B dense models (napkin + measurement in EXPERIMENTS.md)."""
     shape = (2, 64, 4) if multi_pod else (64, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

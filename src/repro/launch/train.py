@@ -72,7 +72,8 @@ def main(argv=None):
         jitted = jax.jit(raw)
 
         def step_fn(p, o, b, mesh):
-            with jax.set_mesh(mesh):
+            from repro.compat import set_mesh
+            with set_mesh(mesh):
                 return jitted(p, o, b)
 
         return params, opt_state, step_fn, (pspec, ospec)

@@ -24,7 +24,9 @@ from typing import Any, Callable, Sequence
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.compat import mesh_from_device_array
 
 from repro.checkpoint import CheckpointManager
 from repro.runtime.fault import HeartbeatMonitor, StragglerDetector
@@ -57,8 +59,7 @@ def build_mesh_from(devices: Sequence, model_parallel: int) -> Mesh:
         mp //= 2
     dp = n // mp
     devs = np.asarray(devices[:dp * mp]).reshape(dp, mp)
-    return Mesh(devs, ("data", "model"),
-                axis_types=(AxisType.Auto, AxisType.Auto))
+    return mesh_from_device_array(devs, ("data", "model"))
 
 
 @dataclasses.dataclass

@@ -1,3 +1,3 @@
 from repro.serve.sampler import generate, sample_tokens
-from repro.serve.rag import RAGPipeline
+from repro.serve.rag import MultiTenantRAGPipeline, RAGPipeline
 from repro.serve import sparse_kv

@@ -1,4 +1,4 @@
-"""End-to-end RAG pipeline (Fig. 1 of the paper).
+"""End-to-end RAG pipelines (Fig. 1 of the paper; single- and multi-tenant).
 
 offline:  doc tokens --MiniLM embedder--> float embeddings --INT8 quant-->
           nibble-planar DB (optionally sharded over a mesh)
@@ -7,9 +7,14 @@ online:   query tokens -> query embedding -> INT8 codes
           -> augmented prompt = [retrieved doc tokens; query tokens]
           -> generator prefill + decode
 
-The pipeline also reports the retrieval energy ledger per query batch via
-the paper-calibrated cost model (core.energy), so serving logs expose the
-same numbers the paper's Table II does.
+`MultiTenantRAGPipeline` is the streaming/wearable variant: there is no
+offline phase — per-user corpora are ingested online into a shared
+fixed-capacity arena (repro.tenancy) and a mixed batch of users is served
+by ONE segment-masked retrieval launch.
+
+Both pipelines report the retrieval energy ledger per query batch via the
+paper-calibrated cost model (core.energy), so serving logs expose the same
+numbers the paper's Table II does.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (BitPlanarDB, RetrievalConfig, batched_retrieve,
                         build_database, energy, quantize_int8)
@@ -26,6 +32,7 @@ from repro.models import embedder as emb_mod
 from repro.models.common import ModelConfig
 from repro.models.registry import ModelApi
 from repro.serve.sampler import generate
+from repro.tenancy import MultiTenantIndex
 
 
 @dataclasses.dataclass
@@ -38,6 +45,11 @@ class RAGPipeline:
     doc_tokens: jax.Array                  # (N, doc_len) int32
     db: BitPlanarDB | None = None          # single-host DB
     index: ShardedIndex | None = None      # pod-sharded DB (preferred)
+    # index.retrieve_fn wraps shard_map in a FRESH jax.jit each time it is
+    # called, so it must be built once and cached here — rebuilding it per
+    # query forced a retrace+recompile on every request.
+    _sharded_retrieve: Any = dataclasses.field(default=None, repr=False,
+                                               compare=False)
 
     @classmethod
     def build(cls, emb_cfg, emb_params, gen_api, gen_params, doc_tokens,
@@ -68,8 +80,10 @@ class RAGPipeline:
         q_emb = emb_mod.encode(self.emb_params, query_tokens, self.emb_cfg)
         q_codes, _ = quantize_int8(q_emb, per_vector=True)
         if self.index is not None:
-            fn = self.index.retrieve_fn(self.retrieval_cfg)
-            res = fn(q_codes)
+            if self._sharded_retrieve is None:
+                self._sharded_retrieve = self.index.retrieve_fn(
+                    self.retrieval_cfg)
+            res = self._sharded_retrieve(q_codes)
             n_docs = self.index.n_global
         else:
             res = batched_retrieve(q_codes, self.db, self.retrieval_cfg)
@@ -92,6 +106,107 @@ class RAGPipeline:
         docs = jnp.take(self.doc_tokens, ids.reshape(-1), axis=0)
         docs = docs.reshape(b, k * self.doc_tokens.shape[1])
         prompt = jnp.concatenate([docs, query_tokens], axis=1)
+        vocab = self.gen_api.cfg.vocab_size
+        prompt = jnp.clip(prompt, 0, vocab - 1)
+        out, _ = generate(self.gen_api, self.gen_params, {"tokens": prompt},
+                          max_new=max_new, temperature=temperature, key=key)
+        return out, ids, ledger
+
+
+@dataclasses.dataclass
+class MultiTenantRAGPipeline:
+    """Streaming RAG serving many per-user corpora from ONE shared arena.
+
+    No offline build: tenants ingest documents online (encode -> fixed-scale
+    INT8 quantize -> pack into free arena slots, O(rows) per ingest) and a
+    mixed batch of tenants' queries runs as one vmapped segment-masked
+    two-stage retrieval. Document tokens live in a host-side slot-addressed
+    store kept in lockstep with the arena (including across compactions).
+
+    The retrieval entry points are top-level jitted functions, so repeat
+    calls at the same batch shape reuse the compiled executable — no
+    per-request retrace.
+    """
+
+    emb_cfg: ModelConfig
+    emb_params: Any
+    gen_api: ModelApi | None
+    gen_params: Any
+    index: MultiTenantIndex
+    doc_tokens: np.ndarray                 # (capacity, doc_len) int32
+    _encode: Any = dataclasses.field(default=None, repr=False, compare=False)
+
+    @classmethod
+    def create(cls, emb_cfg, emb_params, gen_api, gen_params, *,
+               capacity: int, doc_len: int,
+               retrieval_cfg: RetrievalConfig | None = None):
+        index = MultiTenantIndex(capacity, emb_cfg.pooled_dim,
+                                 retrieval_cfg or RetrievalConfig())
+        return cls(emb_cfg=emb_cfg, emb_params=emb_params, gen_api=gen_api,
+                   gen_params=gen_params, index=index,
+                   doc_tokens=np.zeros((capacity, doc_len), np.int32))
+
+    def _embed(self, tokens: jax.Array) -> jax.Array:
+        if self._encode is None:
+            cfg = self.emb_cfg
+            self._encode = jax.jit(lambda p, t: emb_mod.encode(p, t, cfg))
+        return self._encode(self.emb_params, tokens)
+
+    # -- online corpus mutation -------------------------------------------
+
+    def ingest(self, tenant_id: int, doc_tokens) -> np.ndarray:
+        """Add (B, doc_len) docs to one tenant's corpus; returns slot ids."""
+        doc_tokens = np.asarray(doc_tokens, np.int32)
+        embs = self._embed(jnp.asarray(doc_tokens))
+        slots = self.index.ingest(tenant_id, embs)
+        self.doc_tokens[slots] = doc_tokens
+        return slots
+
+    def delete(self, tenant_id: int, slots) -> None:
+        self.index.delete(tenant_id, slots)
+
+    def compact(self) -> np.ndarray:
+        """Reclaim tombstones; remaps the token store with the arena."""
+        mapping = self.index.compact()
+        moved = np.nonzero(mapping >= 0)[0]
+        new_tokens = np.zeros_like(self.doc_tokens)
+        new_tokens[mapping[moved]] = self.doc_tokens[moved]
+        self.doc_tokens = new_tokens
+        return mapping
+
+    # -- query -------------------------------------------------------------
+
+    def retrieve(self, tenant_ids, query_tokens: jax.Array):
+        """(B,) tenant ids + (B, L) query tokens -> (results, energy ledger).
+
+        Queries of DIFFERENT tenants batch together: one embedder forward,
+        one segment-masked retrieval launch over the shared arena."""
+        q_emb = self._embed(jnp.asarray(query_tokens))
+        # Per-vector query quantization: only the DOC rows must share the
+        # arena's fixed scale; a query-side scale rescales all of one
+        # query's scores equally and cannot change its ranking.
+        q_codes, _ = quantize_int8(q_emb, per_vector=True)
+        res = self.index.retrieve(q_codes, tenant_ids)
+        ledger = energy.cost_hierarchical(self.index.capacity,
+                                          q_emb.shape[-1])
+        return res, ledger
+
+    def answer(self, tenant_ids, query_tokens: jax.Array, *,
+               max_new: int = 32, temperature: float = 0.0, key=None):
+        """Retrieve per-tenant context and generate, one mixed batch.
+
+        Invalid hits (tenant owns fewer than k live docs) contribute
+        all-zero context tokens. Returns (tokens, slot ids, ledger)."""
+        if self.gen_api is None:
+            raise ValueError("pipeline was created without a generator")
+        res, ledger = self.retrieve(tenant_ids, query_tokens)
+        ids = np.asarray(res.indices)                     # (B, k)
+        b, k = ids.shape
+        flat = ids.reshape(-1)
+        docs = np.where((flat >= 0)[:, None],
+                        self.doc_tokens[np.maximum(flat, 0)], 0)
+        docs = jnp.asarray(docs.reshape(b, k * self.doc_tokens.shape[1]))
+        prompt = jnp.concatenate([docs, jnp.asarray(query_tokens)], axis=1)
         vocab = self.gen_api.cfg.vocab_size
         prompt = jnp.clip(prompt, 0, vocab - 1)
         out, _ = generate(self.gen_api, self.gen_params, {"tokens": prompt},

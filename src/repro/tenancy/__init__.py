@@ -1,0 +1,10 @@
+"""Multi-tenant streaming index: shared arenas, online ingest, batch serving.
+
+The subsystem the wearable deployment needs on top of the paper's two-stage
+retrieval: many per-user corpora packed into one pre-allocated nibble-planar
+arena, online insert/delete without rebuild, and a scheduler that turns a
+mixed batch of users' queries into a single vmapped kernel launch.
+"""
+from repro.tenancy.arena import Arena, ArenaFull, ArenaStats, FREE
+from repro.tenancy.tenants import MultiTenantIndex, TenantTable
+from repro.tenancy.scheduler import CrossTenantBatchScheduler

@@ -1,0 +1,88 @@
+"""Cross-tenant batch scheduler: many users, one kernel launch.
+
+Requests from different tenants accumulate in a host-side queue; flush()
+packs up to `max_batch` of them into ONE vmapped segment-masked two-stage
+retrieval over the shared arena. A mixed batch of B users therefore costs
+one launch (stage 1 streams the MSB plane once per query lane, all lanes
+in the same program) instead of B sequential dispatches over B per-user
+databases.
+
+Partial batches are padded up to the next power of two with NO_TENANT
+lanes (a sentinel matching no arena slot, so padding returns all-invalid
+results and costs no extra compilation): jit caches one executable per
+bucket, not one per queue length.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retrieval import NO_TENANT, RetrievalResult
+from repro.tenancy.tenants import MultiTenantIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pending:
+    request_id: int
+    tenant_id: int
+    query_codes: np.ndarray          # (D,) int8
+
+
+def _bucket(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 1 else 1
+
+
+class CrossTenantBatchScheduler:
+    """Queue + flush loop around MultiTenantIndex.retrieve."""
+
+    def __init__(self, index: MultiTenantIndex, *, max_batch: int = 16):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.index = index
+        self.max_batch = max_batch
+        self._queue: list[_Pending] = []
+        self._next_id = 0
+        self.launches = 0             # batched launches issued (diagnostics)
+
+    def submit(self, tenant_id: int, query_codes) -> int:
+        """Enqueue one request; returns a ticket id resolved by flush()."""
+        if int(tenant_id) < 0:
+            raise ValueError(f"tenant id must be >= 0, got {tenant_id}")
+        q = np.asarray(query_codes, np.int8)
+        if q.ndim != 1 or q.shape[0] != self.index.arena.dim:
+            raise ValueError(f"query must be ({self.index.arena.dim},) int8")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(rid, int(tenant_id), q))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> dict[int, RetrievalResult]:
+        """Drain the queue in max_batch groups; one launch per group.
+
+        Returns {ticket id -> per-request RetrievalResult} with batch lanes
+        sliced back out (padding lanes are dropped)."""
+        out: dict[int, RetrievalResult] = {}
+        while self._queue:
+            group = self._queue[:self.max_batch]
+            del self._queue[:len(group)]
+            b = len(group)
+            pb = _bucket(b)
+            queries = np.zeros((pb, self.index.arena.dim), np.int8)
+            tids = np.full((pb,), NO_TENANT, np.int32)
+            for i, req in enumerate(group):
+                queries[i] = req.query_codes
+                tids[i] = req.tenant_id
+            # tids stay host-side: index.retrieve derives the windowed
+            # layout from them before anything touches the device.
+            res = self.index.retrieve(jnp.asarray(queries), tids)
+            self.launches += 1
+            for i, req in enumerate(group):
+                out[req.request_id] = RetrievalResult(
+                    indices=res.indices[i], scores=res.scores[i],
+                    candidate_indices=res.candidate_indices[i])
+        return out

@@ -1,0 +1,213 @@
+"""Tenant table + the multi-tenant index facade.
+
+`TenantTable` is pure host-side metadata: tenant_id -> the arena slots the
+tenant owns (insertion order preserved) plus the derived contiguous
+row-slot segments. The device-side source of truth for query masking is
+the arena's `owner` array — the table exists for allocation accounting,
+compaction ordering (rows regrouped per tenant so each tenant is one
+contiguous segment afterwards) and diagnostics.
+
+`MultiTenantIndex` glues arena + table into the object the serving layer
+holds: ingest (quantize + pack into free slots), delete (tombstone),
+compact (repack + remap) and retrieve (segment-masked batched two-stage
+retrieval over the shared slab — one launch for a mixed batch of tenants).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import retrieval
+from repro.tenancy.arena import Arena
+
+
+class TenantTable:
+    """tenant_id -> live arena slots (and their contiguous segments)."""
+
+    def __init__(self):
+        self._slots: dict[int, list[int]] = {}
+        self._segments: dict[int, list[tuple[int, int]]] = {}  # cache
+
+    def add(self, tenant_id: int) -> None:
+        self._slots.setdefault(int(tenant_id), [])
+
+    @property
+    def tenant_ids(self) -> list[int]:
+        return sorted(self._slots)
+
+    def slots(self, tenant_id: int) -> list[int]:
+        return list(self._slots.get(int(tenant_id), ()))
+
+    def num_docs(self, tenant_id: int) -> int:
+        return len(self._slots.get(int(tenant_id), ()))
+
+    def record_insert(self, tenant_id: int, slots) -> None:
+        self.add(tenant_id)
+        self._slots[int(tenant_id)].extend(int(s) for s in np.atleast_1d(slots))
+        self._segments.pop(int(tenant_id), None)
+
+    def record_delete(self, tenant_id: int, slots) -> None:
+        dead = {int(s) for s in np.atleast_1d(slots)}
+        mine = self._slots.get(int(tenant_id))
+        if mine is None or not dead <= set(mine):
+            raise KeyError(f"tenant {tenant_id} does not own slots "
+                           f"{sorted(dead - set(mine or ()))}")
+        self._slots[int(tenant_id)] = [s for s in mine if s not in dead]
+        self._segments.pop(int(tenant_id), None)
+
+    def segments(self, tenant_id: int) -> list[tuple[int, int]]:
+        """The tenant's slots as sorted half-open [start, stop) runs.
+
+        Cached per tenant (invalidated by inserts/deletes/remaps): the
+        batched query path reads this on every request."""
+        tenant_id = int(tenant_id)
+        cached = self._segments.get(tenant_id)
+        if cached is not None:
+            return cached
+        slots = sorted(self._slots.get(tenant_id, ()))
+        runs: list[tuple[int, int]] = []
+        for s in slots:
+            if runs and runs[-1][1] == s:
+                runs[-1] = (runs[-1][0], s + 1)
+            else:
+                runs.append((s, s + 1))
+        self._segments[tenant_id] = runs
+        return runs
+
+    def compaction_order(self) -> np.ndarray:
+        """Live slots grouped by tenant — compacting in this order leaves
+        every tenant as ONE contiguous segment."""
+        order = [s for t in self.tenant_ids for s in self._slots[t]]
+        return np.asarray(order, np.int64)
+
+    def remap(self, mapping: np.ndarray) -> None:
+        """Apply a compaction's old->new slot mapping."""
+        for t, slots in self._slots.items():
+            moved = [int(mapping[s]) for s in slots]
+            if any(m < 0 for m in moved):
+                raise ValueError(f"compaction dropped live slots of tenant {t}")
+            self._slots[t] = moved
+        self._segments.clear()
+
+
+class MultiTenantIndex:
+    """Shared-arena index serving many per-user corpora.
+
+    One retrieval config (and thus one compiled retrieval program per batch
+    shape) serves every tenant; per-request tenant ids select the segments.
+    """
+
+    def __init__(self, capacity: int, dim: int,
+                 cfg: retrieval.RetrievalConfig | None = None,
+                 *, scale: float | None = None):
+        self.arena = Arena(capacity, dim, scale=scale)
+        self.table = TenantTable()
+        self.cfg = cfg or retrieval.RetrievalConfig()
+        # (arena generation, tenant-id bytes) -> windowed-layout or None;
+        # schedulers re-issue the same tenant groupings between mutations.
+        self._layout_cache: dict = {}
+
+    # -- ingestion / deletion ------------------------------------------------
+
+    def ingest(self, tenant_id: int, embeddings) -> np.ndarray:
+        """Online-ingest (B, D) float embeddings for one tenant.
+
+        Quantizes under the arena's fixed scale and packs into free slots —
+        no rebuild of existing rows. Returns assigned slot ids (B,)."""
+        return self.ingest_codes(tenant_id, self.arena.quantize(embeddings))
+
+    def ingest_codes(self, tenant_id: int, codes) -> np.ndarray:
+        slots = self.arena.insert(codes, int(tenant_id))
+        self.table.record_insert(tenant_id, slots)
+        return slots
+
+    def delete(self, tenant_id: int, slots) -> None:
+        """Tombstone a tenant's documents (checked against ownership)."""
+        self.table.record_delete(tenant_id, slots)
+        self.arena.delete(slots)
+
+    def compact(self) -> np.ndarray:
+        """Reclaim tombstones; returns old->new slot mapping (-1 = dead)."""
+        mapping = self.arena.compact(self.table.compaction_order())
+        self.table.remap(mapping)
+        return mapping
+
+    # -- query ---------------------------------------------------------------
+
+    def _contiguous_layout(self, tenant_ids) -> tuple[jnp.ndarray, int] | None:
+        """(per-lane segment starts, pow2 window) when every requested
+        tenant is ONE contiguous slot run; None when fragmented (then only
+        the full-arena masked scan is correct). Cached per (arena
+        generation, tenant-id tuple)."""
+        key = (self.arena.generation, tenant_ids.tobytes())
+        if key in self._layout_cache:
+            return self._layout_cache[key]
+        # window >= k keeps the in-window candidate budget well-posed even
+        # for tenants holding fewer than k docs (lanes pad with -1).
+        starts, longest = [], max(1, self.cfg.k)
+        layout = None
+        for t in tenant_ids:
+            segs = self.table.segments(int(t))
+            if len(segs) > 1:
+                break
+            start, stop = segs[0] if segs else (0, 0)
+            starts.append(start)
+            longest = max(longest, stop - start)
+        else:
+            window = 1 << (longest - 1).bit_length()  # bucket recompiles
+            if window < self.arena.capacity:          # else: full scan
+                layout = (jnp.asarray(np.asarray(starts, np.int32)),
+                          jnp.asarray(tenant_ids, jnp.int32), window)
+        if len(self._layout_cache) > 512:
+            self._layout_cache.clear()
+        self._layout_cache[key] = layout
+        return layout
+
+    def retrieve(self, query_codes, tenant_ids) -> retrieval.RetrievalResult:
+        """Segment-masked retrieval; single query or mixed cross-tenant batch.
+
+        A batch takes the windowed fast path (each lane streams only its
+        tenant's contiguous segment) whenever the layout allows — after
+        interleaved ingests fragment a tenant, it falls back to the
+        full-arena masked scan until compact() restores contiguity. The
+        underlying functions are top-level jax.jit-compiled, so repeat
+        calls at the same (batch, window) shape reuse the executable.
+        """
+        query_codes = jnp.asarray(query_codes)
+        db = self.arena.db()
+        if query_codes.ndim == 1:
+            if int(tenant_ids) < 0:
+                raise ValueError(f"tenant id must be >= 0, got {tenant_ids}")
+            return retrieval.two_stage_retrieve_masked(
+                query_codes, db, self.arena.owner,
+                jnp.int32(tenant_ids), self.cfg)
+        tids_host = np.atleast_1d(np.asarray(tenant_ids, np.int32))
+        # Negative ids are sentinels (-1 = FREE/tombstone owner, -2 =
+        # NO_TENANT padding); only the padding sentinel may be queried —
+        # anything else negative is a caller bug that must not match rows.
+        bad = tids_host[(tids_host < 0) & (tids_host != retrieval.NO_TENANT)]
+        if bad.size:
+            raise ValueError(f"tenant ids must be >= 0 (or NO_TENANT for "
+                             f"padding lanes), got {bad.tolist()}")
+        layout = self._contiguous_layout(tids_host)
+        if layout is not None:
+            starts, tids, window = layout
+            return retrieval.windowed_retrieve_masked(
+                query_codes, db, self.arena.owner, tids, starts,
+                self.cfg, window)
+        return retrieval.batched_retrieve_masked(
+            query_codes, db, self.arena.owner,
+            jnp.asarray(tids_host), self.cfg)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.arena.capacity
+
+    @property
+    def num_live(self) -> int:
+        return self.arena.num_live
+
+    def utilization(self) -> float:
+        return self.arena.num_live / self.arena.capacity

@@ -1,8 +1,14 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import bitplanar as bp
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -r "
+                         "requirements.txt); the rest of the suite runs "
+                         "without it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import bitplanar as bp  # noqa: E402
 
 
 def codes(seed=0, n=37, d=64):

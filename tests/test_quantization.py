@@ -1,7 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+pytest.importorskip("hypothesis", reason="property tests need hypothesis; see requirements.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import quantization as q
 

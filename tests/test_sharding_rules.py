@@ -4,7 +4,7 @@ the dry-run)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AxisType, Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P  # noqa: F401
 
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed import sharding as sh

@@ -1,7 +1,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis; see requirements.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import similarity as sim
 

@@ -1,0 +1,282 @@
+"""Multi-tenant streaming index: arena, isolation, scheduler, pipeline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BitPlanarDB, QuantizedDB, RetrievalConfig,
+                        two_stage_retrieve)
+from repro.core.quantization import quantize_int8
+from repro.core.retrieval import two_stage_retrieve_masked
+from repro.data import retrieval_corpus
+from repro.tenancy import (Arena, ArenaFull, CrossTenantBatchScheduler,
+                           MultiTenantIndex)
+
+DIM = 64
+
+
+def build_index(num_tenants=3, docs_per_tenant=40, capacity=256, k=3,
+                noise=0.05, metric="cosine"):
+    """Planted corpora for several tenants packed into one arena. Returns
+    (index, per-tenant dict of (docs, queries, gold, slots))."""
+    idx = MultiTenantIndex(capacity, DIM,
+                           RetrievalConfig(k=k, metric=metric))
+    data = {}
+    for t in range(num_tenants):
+        docs, queries, gold = retrieval_corpus(
+            docs_per_tenant, DIM, num_queries=6, seed=t, noise=noise)
+        slots = idx.ingest(t, jnp.asarray(docs))
+        data[t] = (docs, queries, gold, slots)
+    return idx, data
+
+
+def quantize_query(idx, q):
+    codes, _ = quantize_int8(jnp.asarray(q))
+    return codes
+
+
+def test_insert_retrieve_roundtrip():
+    idx, data = build_index()
+    for t, (docs, queries, gold, slots) in data.items():
+        for j in range(3):
+            res = idx.retrieve(quantize_query(idx, queries[j]), t)
+            assert int(np.asarray(res.indices)[0]) == int(slots[gold[j]])
+
+
+def test_online_insert_visible_without_rebuild():
+    idx, data = build_index()
+    new_doc = retrieval_corpus(1, DIM, num_queries=1, seed=99)[0]
+    (slot,) = idx.ingest(1, jnp.asarray(new_doc))
+    res = idx.retrieve(quantize_query(idx, new_doc[0]), 1)
+    assert int(np.asarray(res.indices)[0]) == int(slot)
+    assert idx.arena.stats.rebuilds == 0
+
+
+def test_tombstoned_doc_never_returned():
+    idx, data = build_index()
+    docs, queries, gold, slots = data[0]
+    victim = int(slots[gold[0]])
+    q = quantize_query(idx, queries[0])
+    assert int(np.asarray(idx.retrieve(q, 0).indices)[0]) == victim
+    idx.delete(0, [victim])
+    res = idx.retrieve(q, 0)
+    assert victim not in np.asarray(res.indices)
+    assert victim not in np.asarray(res.candidate_indices)
+
+
+def test_segment_isolation_even_for_identical_docs():
+    """Tenant B holds an EXACT copy of tenant A's best document; A's query
+    must still resolve inside A's segments only."""
+    docs, queries, gold = retrieval_corpus(30, DIM, num_queries=4, seed=0)
+    idx = MultiTenantIndex(128, DIM, RetrievalConfig(k=3))
+    slots_a = idx.ingest(0, jnp.asarray(docs))
+    slots_b = idx.ingest(1, jnp.asarray(docs))       # identical corpus!
+    owner = np.asarray(idx.arena.owner)
+    for j in range(4):
+        for tenant, slots in ((0, slots_a), (1, slots_b)):
+            res = idx.retrieve(quantize_query(idx, queries[j]), tenant)
+            got = np.asarray(res.indices)
+            got = got[got >= 0]
+            assert np.all(owner[got] == tenant)
+            assert int(got[0]) == int(slots[gold[j]])
+
+
+def test_unknown_tenant_gets_nothing():
+    idx, _ = build_index()
+    q = quantize_query(idx, retrieval_corpus(1, DIM, 1, seed=5)[1][0])
+    res = idx.retrieve(q, 42)
+    assert np.all(np.asarray(res.indices) == -1)
+    assert np.all(np.asarray(res.scores) == 0)
+
+
+def test_tenant_with_fewer_docs_than_k_pads_invalid():
+    idx = MultiTenantIndex(64, DIM, RetrievalConfig(k=5))
+    docs = retrieval_corpus(2, DIM, num_queries=1, seed=3)[0]
+    slots = idx.ingest(0, jnp.asarray(docs))
+    res = idx.retrieve(quantize_query(idx, docs[0]), 0)
+    got = np.asarray(res.indices)
+    assert set(got[got >= 0]) <= {int(s) for s in slots}
+    assert np.sum(got >= 0) == 2 and np.sum(got == -1) == 3
+
+
+def test_compaction_preserves_results():
+    idx, data = build_index(num_tenants=3, docs_per_tenant=30)
+    # tombstone a few docs of each tenant (never the gold ones)
+    for t, (docs, queries, gold, slots) in data.items():
+        victims = [int(s) for i, s in enumerate(slots)
+                   if i not in set(gold[:4])][:5]
+        idx.delete(t, victims)
+    before = {(t, j): np.asarray(
+        idx.retrieve(quantize_query(idx, data[t][1][j]), t).indices)
+        for t in data for j in range(4)}
+    live_before = idx.num_live
+    mapping = idx.compact()
+    assert idx.num_live == live_before          # compaction drops nothing
+    # each tenant is now ONE contiguous segment
+    for t in data:
+        assert len(idx.table.segments(t)) == 1
+    for (t, j), old in before.items():
+        after = np.asarray(
+            idx.retrieve(quantize_query(idx, data[t][1][j]), t).indices)
+        expect = np.where(old >= 0, mapping[np.maximum(old, 0)], -1)
+        np.testing.assert_array_equal(after, expect)
+
+
+def test_mixed_batch_scheduler_equivalence():
+    """One flush over a mixed batch == per-request sequential masked
+    retrieval == per-tenant standalone two_stage_retrieve (slot-shifted)."""
+    idx, data = build_index(num_tenants=4, docs_per_tenant=40)
+    sched = CrossTenantBatchScheduler(idx, max_batch=8)
+    requests = []
+    for t in (2, 0, 3, 1, 2, 0):                 # interleaved tenants
+        j = len(requests) % 4
+        q = np.asarray(quantize_query(idx, data[t][1][j]))
+        requests.append((sched.submit(t, q), t, j, q))
+    out = sched.flush()
+    assert sched.pending() == 0 and sched.launches == 1
+
+    db = idx.arena.db()
+    for rid, t, j, q in requests:
+        got = out[rid]
+        # (a) identical to the sequential masked call
+        seq = two_stage_retrieve_masked(jnp.asarray(q), db, idx.arena.owner,
+                                        jnp.int32(t), idx.cfg)
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(seq.indices))
+        np.testing.assert_array_equal(np.asarray(got.scores),
+                                      np.asarray(seq.scores))
+        # (b) top-1 matches a standalone per-tenant database built from
+        # the same fixed-scale codes
+        docs, _, gold, slots = data[t]
+        codes = idx.arena.quantize(jnp.asarray(docs))
+        bp = BitPlanarDB.from_quantized(QuantizedDB(
+            values=codes, scale=idx.arena.scale,
+            norms_sq=jnp.sum(codes.astype(jnp.int32) ** 2, -1)))
+        solo = two_stage_retrieve(jnp.asarray(q), bp, idx.cfg)
+        assert (int(np.asarray(got.indices)[0]) - int(slots[0])
+                == int(np.asarray(solo.indices)[0]))
+
+
+def test_scheduler_pads_partial_batches_with_no_tenant():
+    idx, data = build_index(num_tenants=2)
+    sched = CrossTenantBatchScheduler(idx, max_batch=8)
+    rid = sched.submit(0, np.asarray(quantize_query(idx, data[0][1][0])))
+    out = sched.flush()                          # batch of 1, padded to 1
+    assert int(np.asarray(out[rid].indices)[0]) == int(
+        data[0][3][data[0][2][0]])
+
+
+def test_windowed_and_fullscan_paths_agree():
+    """The contiguous-segment fast path must return exactly what the
+    general full-arena masked scan returns."""
+    from repro.core.retrieval import batched_retrieve_masked
+    idx, data = build_index(num_tenants=4, docs_per_tenant=40,
+                            capacity=4096)      # window << capacity
+    tids = np.asarray([0, 1, 2, 3], np.int32)
+    Q = jnp.asarray(np.stack(
+        [np.asarray(quantize_query(idx, data[t][1][0])) for t in tids]))
+    fast = idx.retrieve(Q, tids)                 # windowed (contiguous)
+    slow = batched_retrieve_masked(Q, idx.arena.db(), idx.arena.owner,
+                                   jnp.asarray(tids), idx.cfg)
+    np.testing.assert_array_equal(np.asarray(fast.indices)[:, 0],
+                                  np.asarray(slow.indices)[:, 0])
+    for t in range(4):
+        f = np.asarray(fast.scores[t])
+        s = np.asarray(slow.scores[t])
+        np.testing.assert_array_equal(f[f != 0], s[:len(f[f != 0])])
+
+
+def test_mips_metric_masked():
+    idx, data = build_index(metric="mips")
+    for t in (0, 1):
+        docs, queries, gold, slots = data[t]
+        res = idx.retrieve(quantize_query(idx, queries[0]), t)
+        assert int(np.asarray(res.indices)[0]) == int(slots[gold[0]])
+
+
+def test_arena_full_and_compaction_reclaims():
+    arena = Arena(8, DIM)
+    codes = jnp.ones((8, DIM), jnp.int8)
+    slots = arena.insert(codes, 0)
+    with pytest.raises(ArenaFull):
+        arena.insert(codes[:1], 0)
+    arena.delete(slots[:4])
+    with pytest.raises(ArenaFull):               # tombstones NOT yet free
+        arena.insert(codes[:1], 0)
+    arena.compact()
+    arena.insert(codes[:4], 1)                   # reclaimed after compact
+    assert arena.num_live == 8
+    assert arena.stats.rebuilds == 0
+
+
+def test_arena_rejects_negative_tenant_and_bad_dims():
+    arena = Arena(8, DIM)
+    with pytest.raises(ValueError):
+        arena.insert(jnp.ones((1, DIM), jnp.int8), -1)
+    with pytest.raises(ValueError):
+        arena.insert(jnp.ones((1, DIM + 2), jnp.int8), 0)
+    with pytest.raises(ValueError):                  # float rows: quantize!
+        arena.insert(jnp.ones((1, DIM), jnp.float32), 0)
+
+
+def test_duplicate_and_repeated_delete_keeps_num_live_truthful():
+    arena = Arena(8, DIM)
+    slots = arena.insert(jnp.ones((4, DIM), jnp.int8), 0)
+    arena.delete([int(slots[0]), int(slots[0])])     # duplicate ids
+    assert arena.num_live == 3
+    arena.delete([int(slots[0])])                    # already dead
+    assert arena.num_live == 3
+
+
+def test_sentinel_tenant_ids_cannot_resurrect_tombstones():
+    """Querying as 'tenant -1' (the FREE/tombstone owner value) must be
+    rejected, not return deleted rows."""
+    idx, data = build_index()
+    idx.delete(0, data[0][3][:4])
+    q = quantize_query(idx, data[0][1][0])
+    with pytest.raises(ValueError):
+        idx.retrieve(q, -1)
+    with pytest.raises(ValueError):
+        idx.retrieve(jnp.stack([q]), np.asarray([-1], np.int32))
+    sched = CrossTenantBatchScheduler(idx)
+    with pytest.raises(ValueError):
+        sched.submit(-1, np.asarray(q))
+
+
+def test_multi_tenant_rag_pipeline_end_to_end():
+    import jax
+    from repro.configs import get_config
+    from repro.models import embedder, get_model
+    from repro.serve import MultiTenantRAGPipeline
+
+    gcfg = get_config("qwen2-0.5b", smoke=True)
+    api = get_model(gcfg)
+    gparams = api.init(jax.random.PRNGKey(0))
+    ecfg = embedder.MINILM_CFG.with_(num_layers=2, d_model=32, num_heads=4,
+                                     num_kv_heads=4, d_ff=64,
+                                     vocab_size=gcfg.vocab_size,
+                                     pooled_dim=32)
+    eparams = embedder.init_params(ecfg, jax.random.PRNGKey(7))
+    pipe = MultiTenantRAGPipeline.create(
+        ecfg, eparams, api, gparams, capacity=128, doc_len=10,
+        retrieval_cfg=RetrievalConfig(k=2))
+    rng = np.random.default_rng(0)
+    tok = {t: rng.integers(0, gcfg.vocab_size, (20, 10)).astype(np.int32)
+           for t in range(3)}
+    slots = {t: pipe.ingest(t, tok[t]) for t in range(3)}
+
+    tids = np.asarray([0, 1, 2], np.int32)
+    q = jnp.asarray(np.stack([tok[t][4] for t in range(3)]))
+    res, ledger = pipe.retrieve(tids, q)
+    for t in range(3):
+        assert int(np.asarray(res.indices)[t, 0]) == int(slots[t][4])
+    assert ledger.total_uj > 0
+    out, ids, _ = pipe.answer(tids, q, max_new=4)
+    assert out.shape == (3, 4)
+
+    # delete + compact keeps the token store slot-aligned
+    pipe.delete(0, slots[0][:3])
+    pipe.compact()
+    res, _ = pipe.retrieve(np.asarray([0], np.int32),
+                           jnp.asarray(tok[0][4][None]))
+    top = int(np.asarray(res.indices)[0, 0])
+    assert np.array_equal(pipe.doc_tokens[top], tok[0][4])
