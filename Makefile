@@ -10,9 +10,10 @@ test:
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
 
-# quick structural checks: tenancy arena + kernel traffic model
+# quick structural checks: tenancy arena + batched-kernel parity/traffic
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.tenancy_bench --smoke
+	PYTHONPATH=src $(PY) -m benchmarks.retrieval_bench --smoke
 
 # the full paper-table benchmark sweep
 bench:

@@ -1,0 +1,23 @@
+"""Shared wall-clock timer for the benchmark modules.
+
+One methodology everywhere: the warmup call is BLOCKED (so the first
+timed rep never absorbs a still-executing async dispatch tail), then the
+reported figure is the median of `reps` fully-blocked timings — robust to
+the occasional preemption spike on shared machines.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def median_ms(fn, *args, reps: int = 5) -> float:
+    """Median wall-clock of ``fn(*args)`` over `reps` runs, in ms."""
+    jax.block_until_ready(fn(*args))       # compile/warm outside the clock
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e3

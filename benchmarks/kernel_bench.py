@@ -6,24 +6,13 @@ not TPU performance. The structural metrics (HBM bytes touched per query,
 VMEM block residency) are the TPU-relevant output; wall times are labeled
 as CPU-indicative only.
 """
-import time
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._timing import median_ms
 from repro.core import BitPlanarDB, build_database, msb_nibble, quantize_int8
 from repro.core.retrieval import stage1_scores_jnp, stage2_scores_jnp
 from repro.kernels import ops
-
-
-def timeit(fn, *args, reps=5):
-    fn(*args)                      # compile/warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        r = fn(*args)
-    jax.block_until_ready(r)
-    return (time.perf_counter() - t0) / reps
 
 
 def traffic_model(n, d, c):
@@ -50,13 +39,13 @@ def run(verbose=True):
     lr = jnp.take(bp.lsb_plane, cand, axis=0)
 
     rows = {
-        "stage1_jnp_ms": timeit(stage1_scores_jnp, q_msb, bp.msb_plane) * 1e3,
-        "stage1_pallas_ms": timeit(ops.stage1_scores, q_msb, bp.msb_plane) * 1e3,
-        "stage2_jnp_ms": timeit(stage2_scores_jnp, q, mr, lr) * 1e3,
-        "stage2_pallas_ms": timeit(ops.stage2_scores, q, mr, lr) * 1e3,
-        "fused_pallas_ms": timeit(
+        "stage1_jnp_ms": median_ms(stage1_scores_jnp, q_msb, bp.msb_plane),
+        "stage1_pallas_ms": median_ms(ops.stage1_scores, q_msb, bp.msb_plane),
+        "stage2_jnp_ms": median_ms(stage2_scores_jnp, q, mr, lr),
+        "stage2_pallas_ms": median_ms(ops.stage2_scores, q, mr, lr),
+        "fused_pallas_ms": median_ms(
             lambda a, b: ops.fused_candidates(a, b, c=c, k_per_block=8),
-            q_msb, bp.msb_plane) * 1e3,
+            q_msb, bp.msb_plane),
     }
     tm = traffic_model(n, d, c)
     if verbose:
@@ -76,7 +65,14 @@ def run(verbose=True):
         "fused writeback >= 32x smaller":
             tm["dense_score_writeback"] / tm["fused_topk_writeback"] >= 32,
     }
-    return {"times": rows, "traffic": tm, "checks": checks}
+    records = {
+        name: {"median_ms": rows[f"{name}_pallas_ms"],
+               "ref_median_ms": rows[f"{name}_jnp_ms"],
+               "ratio": rows[f"{name}_jnp_ms"] / rows[f"{name}_pallas_ms"]}
+        for name in ("stage1", "stage2")
+    }
+    return {"times": rows, "traffic": tm, "checks": checks,
+            "records": records}
 
 
 if __name__ == "__main__":

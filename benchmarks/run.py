@@ -1,9 +1,14 @@
 """Benchmark orchestrator: one module per paper table/figure + roofline.
 
+Also emits BENCH_retrieval.json — a machine-readable record of every
+timed benchmark (median ms + ratio vs its reference path) so the perf
+trajectory is tracked across PRs instead of living in scrollback.
+
     PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
@@ -11,8 +16,11 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (fig4_reduction, fig5_energy, kernel_bench,  # noqa: E402
-                        table1_precision, table2_energy,
+                        retrieval_bench, table1_precision, table2_energy,
                         table3_comparison, tenancy_bench)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_retrieval.json")
 
 
 def main() -> int:
@@ -23,16 +31,21 @@ def main() -> int:
         ("Fig. 5  (energy per query by format)", fig5_energy),
         ("Table III (accelerator comparison)", table3_comparison),
         ("Kernel microbench", kernel_bench),
+        ("Batched retrieval engine (batched vs vmapped-scalar)",
+         retrieval_bench),
         ("Multi-tenant arena (batched serving + online ingest)",
          tenancy_bench),
     ]
     failures = []
+    records: dict[str, dict] = {}
     for name, mod in modules:
         print("\n" + "=" * 72)
         print(name)
         print("=" * 72)
         try:
             out = mod.run(verbose=True)
+            if out.get("records"):
+                records[mod.__name__.split(".")[-1]] = out["records"]
             for check, ok in out["checks"].items():
                 print(f"  [{'PASS' if ok else 'FAIL'}] {check}")
                 if not ok:
@@ -40,6 +53,11 @@ def main() -> int:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures.append(f"{name}: exception")
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump(records, f, indent=2, sort_keys=True)
+    print(f"\nwrote {os.path.normpath(BENCH_JSON)} "
+          f"({sum(len(v) for v in records.values())} benchmark records)")
 
     # roofline table (requires results/dryrun.json from the dry-run)
     print("\n" + "=" * 72)

@@ -193,7 +193,16 @@ def run(verbose=True, smoke=False):
         "online ingest beats naive rebuild-per-chunk":
             ing["online_s"] < ing["rebuild_s"],
     }
-    return {"queries": q, "ingest": ing, "checks": checks}
+    records = {
+        f"cross_tenant_B{b}": {"median_ms": q["batched_ms"],
+                               "ref_median_ms": q["seq_ms"],
+                               "ratio": q["speedup"]},
+        "online_ingest": {"median_ms": ing["online_s"] * 1e3,
+                          "ref_median_ms": ing["rebuild_s"] * 1e3,
+                          "ratio": ing["rebuild_s"] / ing["online_s"]},
+    }
+    return {"queries": q, "ingest": ing, "checks": checks,
+            "records": records}
 
 
 if __name__ == "__main__":

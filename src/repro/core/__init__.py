@@ -18,4 +18,6 @@ from repro.core.retrieval import (NO_TENANT, RetrievalConfig, RetrievalResult,
                                   two_stage_retrieve,
                                   two_stage_retrieve_masked,
                                   windowed_retrieve_masked)
+from repro.core.engine import (MaskedPolicy, PlainPolicy, RetrievalEngine,
+                               SchedulePlan, WindowedPolicy)
 from repro.core import energy

@@ -47,6 +47,19 @@ def pack_nibble_planes(codes_int8: jax.Array) -> tuple[jax.Array, jax.Array]:
     return _pack(msb), _pack(lsb)
 
 
+def split_nibbles_signed(plane: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Packed plane -> (lo, hi) SIGNED int8 nibble matrices, NOT interleaved.
+
+    lo holds even dims (2j), hi holds odd dims (2j+1), each same shape as
+    `plane`. This is the hot-path split-query view: scoring runs directly
+    on the packed layout (lo . q_even + hi . q_odd) with the nibbles
+    sign-extended by two arithmetic int8 shifts — the (.., D) interleaved
+    unpack is never materialized.
+    """
+    b = plane.view(jnp.int8)
+    return (b << 4) >> 4, b >> 4
+
+
 def unpack_nibble_plane_signed(plane: jax.Array) -> jax.Array:
     """(N, D//2) uint8 msb-plane -> (N, D) int8 signed nibbles in [-8, 7]."""
     lo = plane & jnp.uint8(0xF)

@@ -1,0 +1,364 @@
+"""Batch-native retrieval engine: ONE two-stage core behind every variant.
+
+The paper's memory-access argument — stream the MSB nibble plane once and
+touch full INT8 codes only for candidates — only survives batch serving if
+batching is first-class all the way down. Previously each retrieval variant
+(plain / segment-masked / windowed) vmapped a single-query path, so a mixed
+batch of B tenants streamed the arena planes B times and the kernels ran
+MXU-wasting matvecs. This module is the single batched implementation all
+of them now share, layered as:
+
+  policy   — WHICH rows each batch lane may touch, expressed as data:
+             `PlainPolicy` (every row), `MaskedPolicy` (rows whose arena
+             owner matches the lane's tenant), `WindowedPolicy` (a per-lane
+             contiguous arena window, masked inside the window). Adding a
+             visibility rule means adding a policy, not a retrieval path.
+  schedule — the shared two-stage body `_two_stage_batched`: batched
+             stage-1 scan over the policy's row view, per-lane candidate
+             top-C, batched stage-2 gather + exact INT8 rescore, metric
+             rerank (non-division comparator for cosine, top-k for MIPS).
+  backend  — the three stage primitives the schedule calls, selected by
+             `RetrievalConfig.backend`: pure-jnp reference math ("jnp") or
+             the batch-native Pallas TPU kernels ("pallas"). Both are exact
+             integer arithmetic, so they agree bit-for-bit.
+
+Stage 1 for the plane-scan policies is a TRUE matmul — (N, D/2) plane x
+(D/2, B) query panel — so the doc planes are streamed from HBM once per
+BATCH instead of once per query (`SchedulePlan` carries the exact analytic
+byte counts; benchmarks/retrieval_bench.py measures the wall-clock side).
+
+The legacy entry points in repro.core.retrieval are thin wrappers that
+build a policy and call this engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplanar, quantization, similarity
+from repro.core.retrieval import RetrievalConfig, RetrievalResult
+
+INT32_MIN = jnp.iinfo(jnp.int32).min
+
+# Stage-2 score assigned to out-of-segment candidates. Most-negative-plus-one
+# so s*s stays below 2**62 inside the non-division comparator's int64 limbs;
+# any in-segment row (even with a negative score) orders strictly above it.
+MASKED_SCORE = jnp.int32(-(2 ** 31 - 1))
+
+
+# ---------------------------------------------------------------------------
+# Membership / window policies (pytrees: the TYPE selects the code path,
+# the leaves are device data, so jit specializes per policy kind only)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlainPolicy:
+    """Every row visible to every lane (the single-corpus case)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedPolicy:
+    """Lane i sees exactly the rows with ``owner == tenant_ids[i]``.
+
+    owner: (N,) int32 slot -> tenant map (free/tombstoned slots hold -1).
+    tenant_ids: (B,) int32; negative ids (NO_TENANT padding lanes) match
+    nothing — -1 must never act as a segment key or it would resurrect
+    tombstones. The fully general multi-tenant path: works for arbitrarily
+    fragmented tenants at the cost of scanning the whole arena.
+    """
+
+    owner: jax.Array
+    tenant_ids: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowedPolicy:
+    """MaskedPolicy restricted to one contiguous window per lane.
+
+    When every requested tenant occupies a single contiguous slot run (the
+    invariant bump allocation establishes and tenant-grouped compaction
+    restores), lane i only streams the `window` rows at ``starts[i]`` —
+    a mixed batch costs one launch AND only per-tenant work. Rows inside
+    the window but outside the segment (neighbours, tombstones) are masked
+    exactly like the full scan. `window` is static (callers round up to a
+    power-of-two bucket to bound recompilation) and must be >= cfg.k.
+    """
+
+    owner: jax.Array
+    tenant_ids: jax.Array
+    starts: jax.Array
+    window: int
+
+
+jax.tree_util.register_pytree_node(
+    PlainPolicy, lambda p: ((), None), lambda _, l: PlainPolicy())
+jax.tree_util.register_pytree_node(
+    MaskedPolicy, lambda p: ((p.owner, p.tenant_ids), None),
+    lambda _, l: MaskedPolicy(*l))
+jax.tree_util.register_pytree_node(
+    WindowedPolicy, lambda p: ((p.owner, p.tenant_ids, p.starts), p.window),
+    lambda w, l: WindowedPolicy(*l, window=w))
+
+Policy = PlainPolicy | MaskedPolicy | WindowedPolicy
+
+
+# ---------------------------------------------------------------------------
+# Batched stage primitives (jnp reference backend; kernels mirror these)
+# ---------------------------------------------------------------------------
+
+def stage1_plane_batched_jnp(q_msb: jax.Array,
+                             msb_plane: jax.Array) -> jax.Array:
+    """Batched MSB-nibble MIPS over a shared plane: one true matmul.
+
+    q_msb (B, D) int8 in [-8, 7]; msb_plane (N, D//2) packed uint8.
+    Returns (B, N) int32. Split-query formulation as in stage1_scores_jnp:
+    lo_signed . q_even + hi_signed . q_odd on the packed plane, so the
+    (N, D) interleaved unpack is never materialized and the plane rows are
+    read ONCE for the whole batch.
+    """
+    lo, hi = bitplanar.split_nibbles_signed(msb_plane)
+    return (similarity.int_matmul(lo, q_msb[:, 0::2])
+            + similarity.int_matmul(hi, q_msb[:, 1::2]))
+
+
+def stage1_rows_batched_jnp(q_msb: jax.Array,
+                            msb_rows: jax.Array) -> jax.Array:
+    """Per-lane-rows stage 1 (the windowed policy's shape).
+
+    q_msb (B, D) int8 nibbles; msb_rows (B, W, D//2) packed per-lane row
+    blocks. Returns (B, W) int32 — lane i scores only its own rows.
+    """
+    lo, hi = bitplanar.split_nibbles_signed(msb_rows)
+    return (similarity.int_bmm(lo, q_msb[:, 0::2])
+            + similarity.int_bmm(hi, q_msb[:, 1::2]))
+
+
+def stage2_rows_batched_jnp(q: jax.Array, msb_rows: jax.Array,
+                            lsb_rows: jax.Array) -> jax.Array:
+    """Exact INT8 rescoring of gathered per-lane candidate rows.
+
+    q (B, D) int8; msb_rows/lsb_rows (B, C, D//2) uint8. Returns (B, C).
+    """
+    bsz, c, d2 = msb_rows.shape
+    docs = bitplanar.reconstruct_int8(msb_rows.reshape(bsz * c, d2),
+                                      lsb_rows.reshape(bsz * c, d2))
+    return similarity.int_bmm(docs.reshape(bsz, c, 2 * d2), q)
+
+
+def stage_fns(backend: str):
+    """The schedule's three batched primitives for a backend:
+    (stage1 shared-plane matmul, stage1 per-lane rows, stage2 rescore)."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        return (kops.stage1_scores_batched, kops.stage1_scores_rows,
+                kops.stage2_scores_batched)
+    return (stage1_plane_batched_jnp, stage1_rows_batched_jnp,
+            stage2_rows_batched_jnp)
+
+
+# ---------------------------------------------------------------------------
+# The shared two-stage schedule
+# ---------------------------------------------------------------------------
+
+def _vslice(arr: jax.Array, starts: jax.Array, window: int) -> jax.Array:
+    """Per-lane dynamic windows: (N, ...) x (B,) starts -> (B, window, ...)."""
+    return jax.vmap(
+        lambda s: jax.lax.dynamic_slice_in_dim(arr, s, window, 0))(starts)
+
+
+def _candidate_budget(cfg: RetrievalConfig, num_docs: int,
+                      window: int | None) -> int:
+    """Stage-2 budget C (the single source both the schedule and `plan`
+    use). The windowed budget is the SAME as the full-scan one — clamped
+    to the window, in which case every in-window row is a candidate and
+    the tenant is rescored exhaustively — so results never depend on which
+    code path the arena's fragmentation state selects."""
+    c = cfg.num_candidates(num_docs)
+    if window is not None:
+        c = min(c, window)
+    return c
+
+
+def _two_stage_batched(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                       policy: Policy, cfg: RetrievalConfig
+                       ) -> RetrievalResult:
+    """The one batched two-stage body every retrieval variant runs.
+
+    query_codes: (B, D) int8. Returns a batched RetrievalResult whose
+    indices are global row/slot ids (-1 for lanes' unfillable positions
+    under masking policies).
+    """
+    n = db.num_docs
+    c = _candidate_budget(cfg, n, policy.window
+                          if isinstance(policy, WindowedPolicy) else None)
+    s1_plane, s1_rows, s2_rows = stage_fns(cfg.backend)
+    q_msb = quantization.msb_nibble(query_codes)
+
+    # ---- Stage 1: batched approximate scoring over the policy's row view.
+    if isinstance(policy, WindowedPolicy):
+        if policy.window < cfg.k:
+            raise ValueError(f"window {policy.window} < k={cfg.k}: top-k "
+                             f"over a window needs window >= k")
+        starts = jnp.clip(policy.starts, 0,
+                          max(n - policy.window, 0)).astype(jnp.int32)
+        msb_view = _vslice(db.msb_plane, starts, policy.window)
+        norms = _vslice(db.norms_sq, starts, policy.window)
+        owner_view = _vslice(policy.owner, starts, policy.window)
+        member = ((owner_view == policy.tenant_ids[:, None])
+                  & (policy.tenant_ids >= 0)[:, None])
+        scores = s1_rows(q_msb, msb_view)                  # (B, W) int32
+        base = starts[:, None]
+    else:
+        scores = s1_plane(q_msb, db.msb_plane)             # (B, N) int32
+        norms = db.norms_sq[None, :]
+        if isinstance(policy, MaskedPolicy):
+            member = ((policy.owner[None, :] == policy.tenant_ids[:, None])
+                      & (policy.tenant_ids >= 0)[:, None])
+        else:
+            member = None
+        base = None
+
+    if cfg.metric == "cosine":
+        # Approximate cosine key; norms are tiny sidecar reads (the paper
+        # stores doc norms in DRAM alongside the planes). Tombstoned rows
+        # carry norm 0 (key 0), so even an inconsistent membership mask
+        # cannot let a dead row win.
+        key1 = similarity.cosine_key_f32(scores, norms)
+        if member is not None:
+            key1 = jnp.where(member, key1, -jnp.inf)
+    else:
+        key1 = scores if member is None else jnp.where(member, scores,
+                                                       INT32_MIN)
+    _, cand_local = jax.lax.top_k(key1, c)                 # (B, C) view rows
+
+    # ---- Stage 2: batched exact INT8 rescoring of the candidates only.
+    # Candidate rows are gathered from the FULL planes by global id, so the
+    # LSB plane is never sliced and the windowed path re-reads only C rows.
+    cand = cand_local if base is None else cand_local + base
+    cand_member = (None if member is None else
+                   jnp.take_along_axis(member, cand_local, axis=1))
+    msb_rows = jnp.take(db.msb_plane, cand, axis=0)        # (B, C, D//2)
+    lsb_rows = jnp.take(db.lsb_plane, cand, axis=0)
+    exact = s2_rows(query_codes, msb_rows, lsb_rows)       # (B, C) int32
+    cand_norms = jnp.take(db.norms_sq, cand, axis=0)
+    if cand_member is not None:
+        # Out-of-segment candidates pin to (MASKED_SCORE, 1) so the integer
+        # rerank comparator ranks them below every in-segment candidate.
+        exact = jnp.where(cand_member, exact, MASKED_SCORE)
+        cand_norms = jnp.where(cand_member, cand_norms, 1)
+
+    # ---- Metric rerank (per lane; C is small).
+    if cfg.metric == "cosine":
+        local, top_scores = jax.vmap(
+            lambda s, nn: similarity.rerank_dense_comparator(s, nn, cfg.k)
+        )(exact, cand_norms)
+    else:
+        top_scores, local = jax.lax.top_k(exact, cfg.k)
+
+    indices = jnp.take_along_axis(cand, local, axis=1)
+    if cand_member is None:
+        return RetrievalResult(indices=indices, scores=top_scores,
+                               candidate_indices=cand)
+    valid = jnp.take_along_axis(cand_member, local, axis=1)
+    return RetrievalResult(
+        indices=jnp.where(valid, indices, -1),
+        scores=jnp.where(valid, top_scores, 0),
+        candidate_indices=jnp.where(cand_member, cand, -1))
+
+
+retrieve_batched = jax.jit(_two_stage_batched, static_argnames=("cfg",))
+
+
+# ---------------------------------------------------------------------------
+# Schedule planning (host-side, analytic — the paper's bytes currency)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """What one batched launch will stream, computed exactly (no timers).
+
+    stage1_bytes is the batched engine's doc-plane traffic; for the
+    plane-scan policies the plane is streamed ONCE per batch, so it does
+    not scale with `batch` — stage1_bytes_vmapped is what the old
+    one-query-at-a-time path streamed for the same work.
+    """
+
+    kind: Literal["plain", "masked", "windowed"]
+    batch: int
+    rows_scanned: int          # stage-1 rows per lane (N, or the window)
+    candidates: int            # stage-2 budget C per lane
+    stage1_bytes: int          # batched kernel: MSB-plane bytes from HBM
+    stage1_bytes_vmapped: int  # the vmapped-scalar path, for comparison
+    stage2_bytes: int          # gathered candidate rows (MSB+LSB planes)
+
+
+def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
+         kind: str = "plain", window: int | None = None) -> SchedulePlan:
+    """Analytic schedule for one launch of the engine.
+
+    For "plain"/"masked" every lane scans the shared plane: the batched
+    matmul kernel fetches each plane block once per BATCH (bytes = N*D/2),
+    while the vmapped-scalar path fetched it once per QUERY (B*N*D/2).
+    For "windowed" each lane streams its own window, so bytes scale with B
+    either way — the win there is one launch + per-tenant work only.
+    """
+    if kind == "windowed":
+        if window is None:
+            raise ValueError("windowed plan needs a window")
+        rows = min(window, num_docs)
+        s1 = batch * rows * (dim // 2)
+        s1_vmapped = s1
+    else:
+        if window is not None:
+            raise ValueError(f"{kind} plan does not take a window")
+        rows = num_docs
+        s1 = rows * (dim // 2)
+        s1_vmapped = batch * s1
+    c = _candidate_budget(cfg, num_docs, window)
+    return SchedulePlan(kind=kind, batch=batch, rows_scanned=rows,
+                        candidates=c, stage1_bytes=s1,
+                        stage1_bytes_vmapped=s1_vmapped,
+                        stage2_bytes=batch * c * dim)
+
+
+# ---------------------------------------------------------------------------
+# The engine facade
+# ---------------------------------------------------------------------------
+
+def _lane(res: RetrievalResult, i: int) -> RetrievalResult:
+    return jax.tree_util.tree_map(lambda x: x[i], res)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalEngine:
+    """Owns backend selection and the two-stage schedule for one config.
+
+    One engine (and thus one compiled program per batch shape and policy
+    kind) serves every caller: the thin wrappers in repro.core.retrieval,
+    the multi-tenant index, and the serving pipelines all funnel here.
+    """
+
+    cfg: RetrievalConfig
+
+    def retrieve(self, query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                 policy: Policy = PlainPolicy()) -> RetrievalResult:
+        """Batched retrieval: (B, D) int8 queries -> batched result."""
+        return retrieve_batched(query_codes, db, policy, self.cfg)
+
+    def retrieve_single(self, query_codes: jax.Array,
+                        db: bitplanar.BitPlanarDB,
+                        policy: Policy = PlainPolicy()) -> RetrievalResult:
+        """(D,) int8 query -> unbatched result (a B=1 lane of the core)."""
+        return _lane(self.retrieve(query_codes[None], db, policy), 0)
+
+    def plan_for(self, db: bitplanar.BitPlanarDB, batch: int,
+                 policy: Policy = PlainPolicy()) -> SchedulePlan:
+        """The analytic SchedulePlan for one launch against `db`."""
+        kind = {PlainPolicy: "plain", MaskedPolicy: "masked",
+                WindowedPolicy: "windowed"}[type(policy)]
+        window = policy.window if isinstance(policy, WindowedPolicy) else None
+        return plan(self.cfg, num_docs=db.num_docs, dim=db.dim, batch=batch,
+                    kind=kind, window=window)

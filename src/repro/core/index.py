@@ -3,18 +3,23 @@
 The corpus is sharded row-wise over EVERY mesh device (the flattened
 (pod, data, model) axes). One retrieval executes as:
 
-  1. local stage-1 (MSB-nibble) scoring over the device's shard,
-  2. local top-C proposal,
-  3. all-gather of (score, global-id) proposals — O(C * devices) bytes,
-     independent of corpus size (the "tournament"),
+  1. local stage-1 (MSB-nibble) scoring over the device's shard — BATCH-
+     NATIVE: one (n_local, D/2) x (D/2, B) matmul via the engine's stage
+     primitives, so the shard's plane streams once per batch,
+  2. local top-C proposal per batch lane,
+  3. all-gather of (score, global-id) proposals — O(B * C * devices)
+     bytes, independent of corpus size (the "tournament"),
   4. global top-C selection (exact: the global top-C is always contained
      in the union of local top-Cs),
   5. stage-2 exact INT8 rescoring ONLY on the shard(s) owning each
-     candidate, combined with a psum (each row owned exactly once),
+     candidate — one batched (B, C) rescore — combined with a psum (each
+     row owned exactly once),
   6. replicated final top-k via the non-division comparator.
 
 The same function runs on a 1-device test mesh and the 512-device
-production mesh (shard_map is mesh-polymorphic).
+production mesh (shard_map is mesh-polymorphic). Backend selection
+(`cfg.backend`) routes the two scoring stages through the same jnp or
+Pallas batched primitives the single-host engine uses.
 """
 from __future__ import annotations
 
@@ -26,8 +31,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import bitplanar, quantization, similarity
-from repro.core.retrieval import (RetrievalConfig, RetrievalResult,
-                                  stage1_scores_jnp, stage2_scores_jnp)
+from repro.core.engine import stage_fns
+from repro.core.retrieval import RetrievalConfig, RetrievalResult
 
 
 def pad_database(db: bitplanar.BitPlanarDB, num_shards: int) -> bitplanar.BitPlanarDB:
@@ -62,46 +67,58 @@ def _tournament_retrieve(q: jax.Array, msb_plane: jax.Array,
                          lsb_plane: jax.Array, norms_sq: jax.Array,
                          *, cfg: RetrievalConfig, n_global: int,
                          axis: str) -> RetrievalResult:
-    """Body run per-shard under shard_map. q replicated; planes sharded."""
+    """Batch-native body run per-shard under shard_map.
+
+    q: (B, D) replicated; planes sharded. Both scoring stages run the
+    engine's batched primitives — the whole batch shares one shard scan."""
     n_local = msb_plane.shape[0]
     shard_id = jax.lax.axis_index(axis)
     offset = shard_id * n_local
     c = min(cfg.num_candidates(n_global), n_global)
     c_local = min(c, n_local)
+    s1_plane, _, s2_rows = stage_fns(cfg.backend)
 
-    # ---- Stage 1: local approximate scoring + local proposal.
+    # ---- Stage 1: local batched approximate scoring + local proposals.
     q_msb = quantization.msb_nibble(q)
-    approx = stage1_scores_jnp(q_msb, msb_plane)             # (n_local,) i32
+    approx = s1_plane(q_msb, msb_plane)                  # (B, n_local) i32
     if cfg.metric == "cosine":
-        key1 = similarity.cosine_key_f32(approx, norms_sq)
+        key1 = similarity.cosine_key_f32(approx, norms_sq[None, :])
     else:
         key1 = approx.astype(jnp.float32)
-    loc_key, loc_idx = jax.lax.top_k(key1, c_local)          # (c_local,)
+    loc_key, loc_idx = jax.lax.top_k(key1, c_local)      # (B, c_local)
     loc_gid = (loc_idx + offset).astype(jnp.int32)
 
-    # ---- Tournament: gather proposals, pick global top-C.
-    all_key = jax.lax.all_gather(loc_key, axis).reshape(-1)   # (S*c_local,)
-    all_gid = jax.lax.all_gather(loc_gid, axis).reshape(-1)
+    # ---- Tournament: gather proposals, pick global top-C per lane.
+    # Shard-major flattening (S * c_local) keeps the same tie-break order
+    # as a per-lane all_gather would produce.
+    all_key = jax.lax.all_gather(loc_key, axis)          # (S, B, c_local)
+    all_gid = jax.lax.all_gather(loc_gid, axis)
+    b = q.shape[0]
+    all_key = jnp.moveaxis(all_key, 0, 1).reshape(b, -1)
+    all_gid = jnp.moveaxis(all_gid, 0, 1).reshape(b, -1)
     top_key, sel = jax.lax.top_k(all_key, c)
-    cand_gid = all_gid[sel]                                   # (C,) global ids
+    cand_gid = jnp.take_along_axis(all_gid, sel, axis=1)  # (B, C) global ids
 
-    # ---- Stage 2: exact rescoring by owners only, psum-combined.
+    # ---- Stage 2: batched exact rescoring by owners only, psum-combined.
     owned = (cand_gid >= offset) & (cand_gid < offset + n_local)
     local_rows = jnp.clip(cand_gid - offset, 0, n_local - 1)
-    msb_rows = jnp.take(msb_plane, local_rows, axis=0)
+    msb_rows = jnp.take(msb_plane, local_rows, axis=0)   # (B, C, D//2)
     lsb_rows = jnp.take(lsb_plane, local_rows, axis=0)
-    exact = stage2_scores_jnp(q, msb_rows, lsb_rows)          # (C,) i32
+    exact = s2_rows(q, msb_rows, lsb_rows)               # (B, C) i32
     nrm = jnp.take(norms_sq, local_rows, axis=0)
     exact = jax.lax.psum(jnp.where(owned, exact, 0), axis)
     cand_norms = jax.lax.psum(jnp.where(owned, nrm, 0), axis)
 
-    # ---- Replicated final rerank.
+    # ---- Replicated final rerank per lane.
     if cfg.metric == "cosine":
-        local, scores = similarity.rerank_dense_comparator(exact, cand_norms, cfg.k)
+        local, scores = jax.vmap(
+            lambda s, nn: similarity.rerank_dense_comparator(s, nn, cfg.k)
+        )(exact, cand_norms)
     else:
-        scores, local = similarity.topk_mips(exact, cfg.k)
-    return RetrievalResult(indices=cand_gid[local], scores=scores,
-                           candidate_indices=cand_gid)
+        scores, local = jax.lax.top_k(exact, cfg.k)
+    return RetrievalResult(
+        indices=jnp.take_along_axis(cand_gid, local, axis=1),
+        scores=scores, candidate_indices=cand_gid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,8 +146,10 @@ class ShardedIndex:
         def body(q, msb, lsb, nrm):
             fn = partial(_tournament_retrieve, cfg=cfg,
                          n_global=self.n_global, axis=flat_axis)
-            if q.ndim == 2:
-                fn = jax.vmap(fn, in_axes=(0, None, None, None))
+            if q.ndim == 1:
+                # single query = a B=1 lane of the batch-native body
+                return jax.tree_util.tree_map(lambda x: x[0],
+                                              fn(q[None], msb, lsb, nrm))
             return fn(q, msb, lsb, nrm)
 
         from repro.compat import shard_map

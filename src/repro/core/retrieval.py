@@ -12,8 +12,12 @@ non-division fraction comparator (cosine) or raw integer scores (MIPS).
 The candidate-set policy follows the paper's Fig. 4 operating points:
 ``min(max_candidates, ceil(candidate_frac * N))`` with max 50 / frac 0.2.
 
-`backend="jnp"` uses pure-jnp reference math; `backend="pallas"` routes the
-two scoring stages through the Pallas TPU kernels in repro.kernels.
+Every variant in this module — plain, segment-masked, windowed, batched —
+is a THIN wrapper over the one batched two-stage core in repro.core.engine:
+it builds the membership/window policy for its calling convention and runs
+the shared schedule. `backend="jnp"` uses pure-jnp reference math;
+`backend="pallas"` routes both scoring stages through the batch-native
+Pallas TPU kernels in repro.kernels.
 """
 from __future__ import annotations
 
@@ -55,8 +59,15 @@ jax.tree_util.register_pytree_node(
 )
 
 
+# Sentinel tenant id that matches no arena slot (free slots use -1), used to
+# pad request batches: a NO_TENANT query returns all-invalid results.
+NO_TENANT = -2
+
+
 # ---------------------------------------------------------------------------
-# Stage primitives (pure-jnp reference path; kernels mirror these)
+# Single-query stage primitives (reference math; kept as the oracles the
+# kernel tests and benchmarks compare against — the serving paths run the
+# engine's BATCHED primitives instead)
 # ---------------------------------------------------------------------------
 
 def stage1_scores_jnp(q_msb: jax.Array, msb_plane: jax.Array) -> jax.Array:
@@ -65,13 +76,10 @@ def stage1_scores_jnp(q_msb: jax.Array, msb_plane: jax.Array) -> jax.Array:
 
     Split-query formulation: byte j of the plane packs dims (2j, 2j+1), so
     the dot product is lo_signed . q_even + hi_signed . q_odd — scoring
-    runs directly on the packed plane (two (N, D/2) matvecs) with the
-    nibbles sign-extended by two arithmetic int8 shifts, never
+    runs directly on the packed plane (two (N, D/2) matvecs), never
     materializing the (N, D) interleaved unpack on the hot path.
     """
-    b = msb_plane.view(jnp.int8)
-    lo = (b << 4) >> 4                     # signed low nibbles (dims 0,2,..)
-    hi = b >> 4                            # signed high nibbles (dims 1,3,..)
+    lo, hi = bitplanar.split_nibbles_signed(msb_plane)
     return (similarity.int_matvec(lo, q_msb[0::2])
             + similarity.int_matvec(hi, q_msb[1::2]))
 
@@ -83,51 +91,29 @@ def stage2_scores_jnp(q: jax.Array, msb_rows: jax.Array,
     return similarity.int_matvec(docs, q)
 
 
-def _stage_fns(backend: str):
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        return kops.stage1_scores, kops.stage2_scores
-    return stage1_scores_jnp, stage2_scores_jnp
-
-
 # ---------------------------------------------------------------------------
-# Full two-stage retrieval (single shard)
+# Engine-backed retrieval variants
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg",))
 def two_stage_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
                        cfg: RetrievalConfig) -> RetrievalResult:
     """Run the hierarchical retrieval for one query over one DB shard.
 
     query_codes: (D,) int8 (already quantized by the embedder front-end).
+    A B=1 lane of the batched engine core.
     """
-    n = db.num_docs
-    c = cfg.num_candidates(n)
-    stage1, stage2 = _stage_fns(cfg.backend)
+    return _engine.RetrievalEngine(cfg).retrieve_single(query_codes, db)
 
-    # ---- Stage 1: MSB-nibble approximate scoring over the whole corpus.
-    q_msb = quantization.msb_nibble(query_codes)
-    approx = stage1(q_msb, db.msb_plane)                       # (N,) int32
-    if cfg.metric == "cosine":
-        # Approximate cosine key; norms are tiny sidecar reads (paper stores
-        # doc norms in DRAM alongside the planes).
-        key1 = similarity.cosine_key_f32(approx, db.norms_sq)
-    else:
-        key1 = approx
-    _, cand = jax.lax.top_k(key1, c)                           # (C,) ids
 
-    # ---- Stage 2: exact INT8 rescoring of the candidate set only.
-    msb_rows = jnp.take(db.msb_plane, cand, axis=0)
-    lsb_rows = jnp.take(db.lsb_plane, cand, axis=0)
-    exact = stage2(query_codes, msb_rows, lsb_rows)            # (C,) int32
-    cand_norms = jnp.take(db.norms_sq, cand, axis=0)
+def batched_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                     cfg: RetrievalConfig) -> RetrievalResult:
+    """(B, D) int8 queries -> batched RetrievalResult, ONE launch.
 
-    if cfg.metric == "cosine":
-        local, scores = similarity.rerank_dense_comparator(exact, cand_norms, cfg.k)
-    else:
-        scores, local = similarity.topk_mips(exact, cfg.k)
-    return RetrievalResult(indices=cand[local], scores=scores,
-                           candidate_indices=cand)
+    Batch-native (not a vmap): stage 1 runs as one (N, D/2) x (D/2, B)
+    matmul, so the doc plane streams from HBM once for the whole batch.
+    """
+    return _engine.retrieve_batched(query_codes, db, _engine.PlainPolicy(),
+                                    cfg)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -159,103 +145,10 @@ def int4_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
                            candidate_indices=idx)
 
 
-def batched_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
-                     cfg: RetrievalConfig) -> RetrievalResult:
-    """vmap over a batch of queries: (B, D) int8 -> batched RetrievalResult."""
-    return jax.vmap(lambda q: two_stage_retrieve(q, db, cfg))(query_codes)
-
-
 # ---------------------------------------------------------------------------
 # Segment-masked variants (multi-tenant arenas)
 # ---------------------------------------------------------------------------
 
-# Sentinel tenant id that matches no arena slot (free slots use -1), used to
-# pad request batches: a NO_TENANT query returns all-invalid results.
-NO_TENANT = -2
-
-# Stage-2 score assigned to out-of-segment candidates. Most-negative-plus-one
-# so s*s stays below 2**62 inside the non-division comparator's int64 limbs;
-# any in-segment row (even with a negative score) orders strictly above it.
-_MASKED_SCORE = jnp.int32(-(2 ** 31 - 1))
-
-
-def stage1_keys_masked(q_msb: jax.Array, msb_plane: jax.Array,
-                       norms_sq: jax.Array, member: jax.Array, metric: str,
-                       backend: str = "jnp") -> jax.Array:
-    """Segment-masked stage-1 ranking keys over (a window of) an arena.
-
-    Scores every row on the MSB plane, converts to the metric's monotone
-    key, and forces rows outside the caller's segments (`member` False) to
-    -inf so they can never be proposed as candidates. Tombstoned rows
-    additionally carry norm 0 (cosine key 0), so even an inconsistent
-    membership mask cannot let a dead row win.
-    """
-    stage1, _ = _stage_fns(backend)
-    approx = stage1(q_msb, msb_plane)                          # (N,) int32
-    if metric == "cosine":
-        key = similarity.cosine_key_f32(approx, norms_sq)
-    else:
-        key = approx.astype(jnp.float32)
-    return jnp.where(member, key, -jnp.inf)
-
-
-def stage2_scores_masked(query_codes: jax.Array, msb_plane: jax.Array,
-                         lsb_plane: jax.Array, norms_sq: jax.Array,
-                         cand: jax.Array, cand_member: jax.Array,
-                         backend: str = "jnp") -> tuple[jax.Array, jax.Array]:
-    """Exact INT8 rescoring of candidate rows, masking out-of-segment rows.
-
-    Returns (scores, norms) with out-of-segment candidates pinned to
-    (_MASKED_SCORE, 1) so the integer rerank comparator ranks them below
-    every in-segment candidate. cand may contain such rows whenever the
-    tenant owns fewer live slots than the candidate budget C.
-    """
-    _, stage2 = _stage_fns(backend)
-    msb_rows = jnp.take(msb_plane, cand, axis=0)
-    lsb_rows = jnp.take(lsb_plane, cand, axis=0)
-    exact = stage2(query_codes, msb_rows, lsb_rows)            # (C,) int32
-    scores = jnp.where(cand_member, exact, _MASKED_SCORE)
-    norms = jnp.where(cand_member, jnp.take(norms_sq, cand, axis=0), 1)
-    return scores, norms
-
-
-def _rescore_and_rank(query_codes: jax.Array, msb_plane: jax.Array,
-                      lsb_plane: jax.Array, norms_sq: jax.Array,
-                      cand: jax.Array, cand_member: jax.Array,
-                      cfg: RetrievalConfig) -> RetrievalResult:
-    """Shared stage-2 + rerank tail of every masked variant: exact-rescore
-    the candidate rows (ids index the given planes), rank with the metric,
-    and mask out-of-segment results to (-1, 0)."""
-    exact, cand_norms = stage2_scores_masked(query_codes, msb_plane,
-                                             lsb_plane, norms_sq, cand,
-                                             cand_member, cfg.backend)
-    if cfg.metric == "cosine":
-        local, scores = similarity.rerank_dense_comparator(exact, cand_norms,
-                                                           cfg.k)
-    else:
-        scores, local = similarity.topk_mips(exact, cfg.k)
-    valid = jnp.take(cand_member, local, axis=0)
-    return RetrievalResult(
-        indices=jnp.where(valid, cand[local], -1),
-        scores=jnp.where(valid, scores, 0),
-        candidate_indices=jnp.where(cand_member, cand, -1))
-
-
-def _masked_two_stage(query_codes: jax.Array, msb_plane: jax.Array,
-                      lsb_plane: jax.Array, norms_sq: jax.Array,
-                      member: jax.Array, c: int,
-                      cfg: RetrievalConfig) -> RetrievalResult:
-    """Shared body of the masked variants (row ids local to the planes)."""
-    q_msb = quantization.msb_nibble(query_codes)
-    key1 = stage1_keys_masked(q_msb, msb_plane, norms_sq, member,
-                              cfg.metric, cfg.backend)
-    _, cand = jax.lax.top_k(key1, c)                           # (C,) rows
-    cand_member = jnp.take(member, cand, axis=0)
-    return _rescore_and_rank(query_codes, msb_plane, lsb_plane, norms_sq,
-                             cand, cand_member, cfg)
-
-
-@partial(jax.jit, static_argnames=("cfg",))
 def two_stage_retrieve_masked(query_codes: jax.Array,
                               db: bitplanar.BitPlanarDB,
                               owner: jax.Array, tenant_id: jax.Array,
@@ -273,16 +166,28 @@ def two_stage_retrieve_masked(query_codes: jax.Array,
     arbitrarily fragmented tenants. When every tenant in a batch is one
     contiguous segment, prefer `windowed_retrieve_masked`.
     """
-    # tenant_id < 0 matches nothing: -1 is the FREE/tombstone owner value
-    # and NO_TENANT (-2) marks padding lanes, so negative ids must never
-    # act as a segment key (a -1 "tenant" would resurrect tombstones).
-    member = (owner == tenant_id) & (tenant_id >= 0)            # (N,) bool
-    c = cfg.num_candidates(db.num_docs)
-    return _masked_two_stage(query_codes, db.msb_plane, db.lsb_plane,
-                             db.norms_sq, member, c, cfg)
+    policy = _engine.MaskedPolicy(
+        owner=owner, tenant_ids=jnp.asarray(tenant_id, jnp.int32)[None])
+    return _engine.RetrievalEngine(cfg).retrieve_single(query_codes, db,
+                                                        policy)
 
 
-@partial(jax.jit, static_argnames=("cfg", "window"))
+def batched_retrieve_masked(query_codes: jax.Array,
+                            db: bitplanar.BitPlanarDB, owner: jax.Array,
+                            tenant_ids: jax.Array,
+                            cfg: RetrievalConfig) -> RetrievalResult:
+    """Cross-tenant batch: (B, D) queries + (B,) tenant ids, ONE launch.
+
+    The segment-masked batched core over the shared arena — the
+    scheduler's kernel-level primitive. Stage 1 streams the arena's MSB
+    plane ONCE for the whole mixed batch (true matmul, not B matvecs).
+    """
+    policy = _engine.MaskedPolicy(owner=owner,
+                                  tenant_ids=jnp.asarray(tenant_ids,
+                                                         jnp.int32))
+    return _engine.retrieve_batched(query_codes, db, policy, cfg)
+
+
 def windowed_retrieve_masked(query_codes: jax.Array,
                              db: bitplanar.BitPlanarDB, owner: jax.Array,
                              tenant_ids: jax.Array, starts: jax.Array,
@@ -293,60 +198,22 @@ def windowed_retrieve_masked(query_codes: jax.Array,
     When each requested tenant occupies a single contiguous slot run (the
     invariant bump allocation establishes and tenant-grouped compaction
     restores), batch lane i only streams the `window` rows starting at its
-    tenant's segment, via dynamic_slice — so a mixed batch of B users
-    costs one launch AND only per-tenant work, instead of B arena-wide
-    scans. Rows inside the window but outside the segment (neighbours,
-    tombstones) are masked exactly like the full-scan variant. Returned
-    indices are global arena slot ids.
+    tenant's segment — so a mixed batch of B users costs one launch AND
+    only per-tenant work, instead of B arena-wide scans. Rows inside the
+    window but outside the segment (neighbours, tombstones) are masked
+    exactly like the full-scan variant. Returned indices are global arena
+    slot ids.
 
     window: static upper bound on any requested tenant's segment length
     (callers round up to a power-of-two bucket to bound recompilation),
     and must be >= cfg.k (MultiTenantIndex guarantees this).
-
-    The candidate budget is the SAME as the full-arena scan's — clamped
-    to the window, in which case every in-window row is a candidate and
-    the tenant is rescored exhaustively — so results never depend on
-    which of the two code paths the arena's fragmentation state selects.
     """
-    n = db.num_docs
-    if window < cfg.k:
-        raise ValueError(f"window {window} < k={cfg.k}: top-k over a "
-                         f"window needs window >= k")
-    c = min(cfg.num_candidates(n), window)
-    hi = max(n - window, 0)
-
-    def lane(q, tid, start):
-        # Stage 1 streams only the window (the MSB-plane halving is ON TOP
-        # of this); stage 2 gathers its few candidate rows straight from
-        # the full planes by global id, so the LSB plane is never sliced.
-        start = jnp.clip(start, 0, hi).astype(jnp.int32)
-        msb_w = jax.lax.dynamic_slice_in_dim(db.msb_plane, start, window, 0)
-        norms_w = jax.lax.dynamic_slice_in_dim(db.norms_sq, start, window, 0)
-        owner_w = jax.lax.dynamic_slice_in_dim(owner, start, window, 0)
-        member = (owner_w == tid) & (tid >= 0)     # see two_stage_retrieve_masked
-
-        q_msb = quantization.msb_nibble(q)
-        key1 = stage1_keys_masked(q_msb, msb_w, norms_w, member,
-                                  cfg.metric, cfg.backend)
-        _, cand = jax.lax.top_k(key1, c)               # window-local rows
-        cand_member = jnp.take(member, cand, axis=0)
-        gids = cand + start                            # global slot ids
-        return _rescore_and_rank(q, db.msb_plane, db.lsb_plane,
-                                 db.norms_sq, gids, cand_member, cfg)
-
-    return jax.vmap(lane)(query_codes, tenant_ids, starts)
+    policy = _engine.WindowedPolicy(
+        owner=owner, tenant_ids=jnp.asarray(tenant_ids, jnp.int32),
+        starts=starts, window=window)
+    return _engine.retrieve_batched(query_codes, db, policy, cfg)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def batched_retrieve_masked(query_codes: jax.Array,
-                            db: bitplanar.BitPlanarDB, owner: jax.Array,
-                            tenant_ids: jax.Array,
-                            cfg: RetrievalConfig) -> RetrievalResult:
-    """Cross-tenant batch: (B, D) queries + (B,) tenant ids, ONE launch.
-
-    vmaps the segment-masked retrieval over a mixed batch of tenants
-    against the shared arena — the scheduler's kernel-level primitive.
-    """
-    return jax.vmap(
-        lambda q, t: two_stage_retrieve_masked(q, db, owner, t, cfg)
-    )(query_codes, tenant_ids)
+# Bottom import: engine defines the shared batched core and imports the
+# config/result types above, so this intentionally runs after they exist.
+from repro.core import engine as _engine                     # noqa: E402

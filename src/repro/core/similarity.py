@@ -49,6 +49,43 @@ def int_matvec(db: jax.Array, q: jax.Array) -> jax.Array:
     )
 
 
+def int_matmul(db: jax.Array, q: jax.Array) -> jax.Array:
+    """(N, D) int8 x (B, D) int8 -> (B, N) int32 scores, exact.
+
+    The batched-engine analogue of `int_matvec`: one true matmul, so the
+    database rows are streamed from memory ONCE for the whole query batch
+    instead of once per query. Same f32-GEMM exact fast path (every partial
+    sum fits float32's 24-bit integer window when D * 128 * 128 <= 2**24).
+    """
+    dn = (((1,), (1,)), ((), ()))
+    if db.shape[-1] * 128 * 128 <= 2 ** 24:
+        return jax.lax.dot_general(
+            q.astype(jnp.float32), db.astype(jnp.float32),
+            dimension_numbers=dn,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    return jax.lax.dot_general(
+        q.astype(jnp.int8), db.astype(jnp.int8),
+        dimension_numbers=dn, preferred_element_type=jnp.int32)
+
+
+def int_bmm(rows: jax.Array, q: jax.Array) -> jax.Array:
+    """(B, M, D) int8 x (B, D) int8 -> (B, M) int32, exact per-lane scores.
+
+    Each batch lane dots its OWN row block against its own query (the
+    windowed / gathered-candidate shape). Same exactness argument as
+    `int_matmul` for the f32 fast path.
+    """
+    dn = (((2,), (1,)), ((0,), (0,)))
+    if rows.shape[-1] * 128 * 128 <= 2 ** 24:
+        return jax.lax.dot_general(
+            rows.astype(jnp.float32), q.astype(jnp.float32),
+            dimension_numbers=dn,
+            preferred_element_type=jnp.float32).astype(jnp.int32)
+    return jax.lax.dot_general(
+        rows.astype(jnp.int8), q.astype(jnp.int8),
+        dimension_numbers=dn, preferred_element_type=jnp.int32)
+
+
 # 15-bit limbs: a product of two limbs is < 2**30, so every partial sum in
 # the schoolbook multiply stays strictly below 2**31 and is exact in uint32.
 _LIMB = 15

@@ -48,6 +48,86 @@ def _fused_kernel(q_ref, plane_ref, out_s_ref, out_i_ref, *, k: int,
     out_i_ref[0, :] = base + idxs
 
 
+def _fused_batched_kernel(q_ref, plane_ref, owner_ref, tid_ref, out_s_ref,
+                          out_i_ref, *, k: int, block_n: int, masked: bool):
+    """Batched fused stage-1 + per-block top-k, one (doc-block, lane) cell.
+
+    The grid is (num_blocks, BATCH) with the batch axis INNERMOST: the doc
+    block's BlockSpec index ignores the lane, so Pallas fetches each plane
+    block from HBM once and keeps it VMEM-resident while every lane scores
+    it — once-per-batch streaming. With `masked`, the lane's tenant segment
+    mask is applied to the scores IN VMEM before selection, so masked rows
+    never leave the kernel (no (B, N) masked-score writeback at all)."""
+    even, odd = unpack_plane_even_odd(plane_ref[...])
+    q = q_ref[0]
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(even, q[0], dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(odd, q[1], dn, preferred_element_type=jnp.int32)
+    if masked:
+        tid = tid_ref[0]
+        member = (owner_ref[0, :] == tid) & (tid >= 0)
+        s = jnp.where(member, s, INT32_MIN)
+
+    base = pl.program_id(0) * block_n
+    iota = jax.lax.iota(jnp.int32, block_n)
+
+    def step(work, _):
+        idx = jnp.argmax(work)                  # lowest index on ties
+        val = jnp.max(work)
+        work = jnp.where(iota == idx, INT32_MIN, work)
+        return work, (val, idx.astype(jnp.int32))
+
+    _, (vals, idxs) = jax.lax.scan(step, s, None, length=k)
+    out_s_ref[0, 0, :] = vals
+    out_i_ref[0, 0, :] = base + idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def fused_topk_batched_pallas(q_eo: jax.Array, msb_plane: jax.Array,
+                              owner: jax.Array | None = None,
+                              tenant_ids: jax.Array | None = None, *,
+                              k: int = 8, block_n: int = DEFAULT_BLOCK_N,
+                              interpret: bool = True
+                              ) -> tuple[jax.Array, jax.Array]:
+    """q_eo: (B, 2, D//2) int8 signed MSB nibbles; msb_plane: (N, D//2)
+    uint8; optionally owner (N,) int32 + tenant_ids (B,) int32 to apply the
+    per-lane segment mask inside the kernel (rows outside lane i's tenant
+    score INT32_MIN and can never be emitted). Returns (scores, global_ids),
+    each (B, N // block_n, k) int32."""
+    n, d2 = msb_plane.shape
+    b = q_eo.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    masked = owner is not None
+    if masked != (tenant_ids is not None):
+        raise ValueError("owner and tenant_ids must be passed together")
+    kernel = functools.partial(_fused_batched_kernel, k=k, block_n=block_n,
+                               masked=masked)
+    if not masked:  # zero-size placeholders keep one kernel signature
+        owner = jnp.zeros((n,), jnp.int32)
+        tenant_ids = jnp.zeros((b,), jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, b),                                    # lanes innermost
+        in_specs=[
+            pl.BlockSpec((1, 2, d2), lambda i, j: (j, 0, 0)),   # lane query
+            pl.BlockSpec((block_n, d2), lambda i, j: (i, 0)),   # doc block:
+            # index ignores j => resident across the whole inner lane sweep
+            pl.BlockSpec((1, block_n), lambda i, j: (0, i)),    # owner block
+            pl.BlockSpec((1,), lambda i, j: (j,)),              # lane tenant
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j: (j, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nb, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_eo, msb_plane, owner.reshape(1, n), tenant_ids)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
 def fused_topk_pallas(q_eo: jax.Array, msb_plane: jax.Array, *, k: int = 8,
                       block_n: int = DEFAULT_BLOCK_N,

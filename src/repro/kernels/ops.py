@@ -26,11 +26,29 @@ def pack_query_even_odd(q: jax.Array) -> jax.Array:
     return jnp.stack([q[0::2], q[1::2]]).astype(jnp.int8)
 
 
+def pack_queries_even_odd(q: jax.Array) -> jax.Array:
+    """(B, D) int8 -> (B, 2, D//2) int8 per-lane [even; odd] panels."""
+    return jnp.stack([q[:, 0::2], q[:, 1::2]], axis=1).astype(jnp.int8)
+
+
+def pack_query_panel(q: jax.Array) -> jax.Array:
+    """(B, D) int8 -> (2, B, D//2) int8 batch panels ([even dims; odd dims])
+    — the stationary operand of the batched stage-1 matmul kernel."""
+    return jnp.stack([q[:, 0::2], q[:, 1::2]]).astype(jnp.int8)
+
+
 def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
     pad = (-a.shape[0]) % mult
     if pad == 0:
         return a
     return jnp.pad(a, ((0, pad), (0, 0)))
+
+
+def _pad_axis1(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[1]) % mult
+    if pad == 0:
+        return a
+    return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
 
 
 @functools.partial(jax.jit, static_argnames=("block_n",))
@@ -67,6 +85,89 @@ def stage2_scores(q: jax.Array, msb_rows: jax.Array, lsb_rows: jax.Array,
     out = _s2.stage2_int8_pallas(q_eo8, msb, lsb, block_c=block_c,
                                  interpret=_interpret())
     return out[:c]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def stage1_scores_batched(q_msb: jax.Array, msb_plane: jax.Array,
+                          block_n: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage1_plane_batched_jnp.
+
+    q_msb: (B, D) int8 signed MSB nibbles of the whole query batch.
+    msb_plane: (N, D//2) packed uint8. Returns (B, N) int32. ONE launch;
+    each doc block is streamed from HBM once per BATCH, not once per query.
+    """
+    n = msb_plane.shape[0]
+    block_n = min(block_n, max(8, n))
+    plane = _pad_rows(msb_plane, block_n)
+    q_panel = pack_query_panel(q_msb)
+    out = _s1.stage1_int4_batched_pallas(q_panel, plane, block_n=block_n,
+                                         interpret=_interpret())
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def stage1_scores_rows(q_msb: jax.Array, msb_rows: jax.Array,
+                       block_w: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage1_rows_batched_jnp.
+
+    q_msb: (B, D) int8 nibbles; msb_rows: (B, W, D//2) per-lane packed row
+    blocks (e.g. each tenant's arena window). Returns (B, W) int32."""
+    w = msb_rows.shape[1]
+    block_w = min(block_w, max(8, w))
+    rows = _pad_axis1(msb_rows, block_w)
+    q_eo = pack_queries_even_odd(q_msb)
+    out = _s1.stage1_int4_rows_pallas(q_eo, rows, block_w=block_w,
+                                      interpret=_interpret())
+    return out[:, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def stage2_scores_batched(q: jax.Array, msb_rows: jax.Array,
+                          lsb_rows: jax.Array,
+                          block_c: int = _s2.DEFAULT_BLOCK_C) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage2_rows_batched_jnp.
+
+    q: (B, D) int8 full-precision queries; msb_rows/lsb_rows: (B, C, D//2)
+    gathered per-lane candidate planes. Returns (B, C) int32, ONE launch."""
+    c = msb_rows.shape[1]
+    block_c = min(block_c, max(8, c))
+    msb = _pad_axis1(msb_rows, block_c)
+    lsb = _pad_axis1(lsb_rows, block_c)
+    q_eo8 = pack_queries_even_odd(q)
+    out = _s2.stage2_int8_batched_pallas(q_eo8, msb, lsb, block_c=block_c,
+                                         interpret=_interpret())
+    return out[:, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
+def fused_candidates_batched(q_msb: jax.Array, msb_plane: jax.Array,
+                             owner: jax.Array | None = None,
+                             tenant_ids: jax.Array | None = None, *, c: int,
+                             k_per_block: int = 8,
+                             block_n: int = _fk.DEFAULT_BLOCK_N) -> jax.Array:
+    """Batched fused stage-1 candidate generation (optionally masked).
+
+    q_msb: (B, D) int8 nibbles. With owner/tenant_ids, each lane's tenant
+    segment mask is applied INSIDE the kernel, so out-of-segment scores
+    never leave VMEM. Returns (B, c) int32 global doc ids; same exactness
+    condition as `fused_candidates` per lane. Lanes whose live segment is
+    smaller than c pad with masked entries (id < n but score INT32_MIN
+    upstream — callers mask via membership like the dense path)."""
+    n = msb_plane.shape[0]
+    block_n = min(block_n, max(8, n))
+    plane = _pad_rows(msb_plane, block_n)
+    if owner is not None:
+        owner = jnp.pad(owner, (0, plane.shape[0] - n),
+                        constant_values=-1)           # padding rows: no owner
+    q_eo = pack_queries_even_odd(q_msb)
+    scores, ids = _fk.fused_topk_batched_pallas(
+        q_eo, plane, owner, tenant_ids, k=k_per_block, block_n=block_n,
+        interpret=_interpret())
+    flat_s = scores.reshape(scores.shape[0], -1)
+    flat_i = ids.reshape(ids.shape[0], -1)
+    flat_s = jnp.where(flat_i < n, flat_s, jnp.iinfo(jnp.int32).min)
+    _, sel = jax.lax.top_k(flat_s, c)
+    return jnp.take_along_axis(flat_i, sel, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))

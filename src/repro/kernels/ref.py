@@ -58,6 +58,73 @@ def stage2_scores_ref(q_eo8: jax.Array, msb_rows: jax.Array,
     return de @ q[0] + do @ q[1]
 
 
+def stage1_scores_batched_ref(q_eo: jax.Array,
+                              msb_plane: jax.Array) -> jax.Array:
+    """Oracle for the batched stage-1 matmul kernel.
+
+    q_eo: (2, B, D//2) — [even dims; odd dims] panels of the whole batch.
+    Returns (B, N) int32."""
+    even, odd = unpack_even_odd_signed(msb_plane)        # (N, D//2) int32
+    q = q_eo.astype(jnp.int32)
+    return q[0] @ even.T + q[1] @ odd.T
+
+
+def stage1_rows_batched_ref(q_eo: jax.Array, msb_rows: jax.Array) -> jax.Array:
+    """Oracle for the per-lane-rows stage-1 kernel.
+
+    q_eo: (B, 2, D//2); msb_rows: (B, W, D//2). Returns (B, W) int32."""
+    return jnp.stack([stage1_scores_ref(q_eo[i], msb_rows[i])
+                      for i in range(msb_rows.shape[0])])
+
+
+def stage2_scores_batched_ref(q_eo8: jax.Array, msb_rows: jax.Array,
+                              lsb_rows: jax.Array) -> jax.Array:
+    """Oracle for the batched stage-2 rescoring kernel.
+
+    q_eo8: (B, 2, D//2); msb_rows/lsb_rows: (B, C, D//2). Returns (B, C)."""
+    return jnp.stack([stage2_scores_ref(q_eo8[i], msb_rows[i], lsb_rows[i])
+                      for i in range(msb_rows.shape[0])])
+
+
+def fused_topk_batched_ref(q_eo: jax.Array, msb_plane: jax.Array,
+                           block_n: int, k: int,
+                           owner: jax.Array | None = None,
+                           tenant_ids: jax.Array | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the batched (optionally segment-masked) fused kernel.
+
+    Returns (scores, ids), each (B, num_blocks, k)."""
+    outs_s, outs_i = [], []
+    for i in range(q_eo.shape[0]):
+        if owner is None:
+            s, gid = fused_topk_ref(q_eo[i], msb_plane, block_n, k)
+        else:
+            scores = stage1_scores_ref(q_eo[i], msb_plane)
+            member = (owner == tenant_ids[i]) & (tenant_ids[i] >= 0)
+            scores = jnp.where(member, scores, jnp.iinfo(jnp.int32).min)
+            s, gid = _blockwise_topk(scores, block_n, k)
+        outs_s.append(s)
+        outs_i.append(gid)
+    return jnp.stack(outs_s), jnp.stack(outs_i)
+
+
+def _blockwise_topk(scores: jax.Array, block_n: int,
+                    k: int) -> tuple[jax.Array, jax.Array]:
+    """Per-block iterative argmax with low-index tie-break on given scores."""
+    n = scores.shape[0]
+    assert n % block_n == 0
+    work = scores.reshape(n // block_n, block_n)
+    idx_base = jnp.arange(n, dtype=jnp.int32).reshape(n // block_n, block_n)
+    out_s, out_i = [], []
+    for _ in range(k):
+        j = jnp.argmax(work, axis=1)
+        rows = jnp.arange(work.shape[0])
+        out_s.append(work[rows, j])
+        out_i.append(idx_base[rows, j])
+        work = work.at[rows, j].set(jnp.iinfo(jnp.int32).min)
+    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+
+
 def fused_topk_ref(q_eo: jax.Array, msb_plane: jax.Array, block_n: int,
                    k: int) -> tuple[jax.Array, jax.Array]:
     """Oracle for the fused stage-1 score + per-block top-k kernel.
@@ -66,18 +133,6 @@ def fused_topk_ref(q_eo: jax.Array, msb_plane: jax.Array, block_n: int,
     indices. Ties broken toward the lower index (matches the kernel's
     iterative argmax).
     """
-    n = msb_plane.shape[0]
-    assert n % block_n == 0
-    scores = stage1_scores_ref(q_eo, msb_plane)          # (N,)
-    sb = scores.reshape(n // block_n, block_n)
     # iterative argmax with low-index tie-break == top_k on (score, -idx)
-    out_s, out_i = [], []
-    work = sb
-    idx_base = jnp.arange(n, dtype=jnp.int32).reshape(n // block_n, block_n)
-    for _ in range(k):
-        j = jnp.argmax(work, axis=1)
-        rows = jnp.arange(work.shape[0])
-        out_s.append(work[rows, j])
-        out_i.append(idx_base[rows, j])
-        work = work.at[rows, j].set(jnp.iinfo(jnp.int32).min)
-    return jnp.stack(out_s, axis=1), jnp.stack(out_i, axis=1)
+    scores = stage1_scores_ref(q_eo, msb_plane)          # (N,)
+    return _blockwise_topk(scores, block_n, k)

@@ -51,6 +51,86 @@ def _stage1_kernel(q_ref, plane_ref, out_ref):
     out_ref[0, :] = s
 
 
+def _stage1_batched_kernel(q_ref, plane_ref, out_ref):
+    """q_ref: (2, B, D2) int8 pinned; plane_ref: (BN, D2) uint8; out: (B, BN).
+
+    The MAC is a TRUE matmul — (BN, D2) doc block x (D2, B) query panel —
+    so the MXU sees a B-wide contraction instead of B repeated matvecs,
+    and each doc block is unpacked (and fetched from HBM) once PER BATCH.
+    """
+    even, odd = unpack_plane_even_odd(plane_ref[...])
+    q = q_ref[...]
+    dn = (((1,), (1,)), ((), ()))
+    s = jax.lax.dot_general(q[0], even, dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(q[1], odd, dn, preferred_element_type=jnp.int32)
+    out_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def stage1_int4_batched_pallas(q_eo: jax.Array, msb_plane: jax.Array, *,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               interpret: bool = True) -> jax.Array:
+    """Batch-native stage 1: q_eo (2, B, D//2) int8 signed MSB nibbles
+    (even dims; odd dims), msb_plane (N, D//2) uint8, N % block_n == 0.
+    Returns (B, N) int32. The query panel is grid-invariant (stationary in
+    VMEM); every doc block streams HBM->VMEM exactly once for the whole
+    batch — the bytes-streamed win over vmapping the scalar kernel."""
+    n, d2 = msb_plane.shape
+    b = q_eo.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    out = pl.pallas_call(
+        _stage1_batched_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((2, b, d2), lambda i: (0, 0, 0)),  # queries: pinned
+            pl.BlockSpec((block_n, d2), lambda i: (i, 0)),  # docs: streamed
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )(q_eo, msb_plane)
+    return out
+
+
+def _stage1_rows_kernel(q_ref, rows_ref, out_ref):
+    """q_ref: (1, 2, D2) int8; rows_ref: (1, BW, D2) uint8; out: (1, 1, BW).
+
+    Per-lane variant for the windowed policy: grid axis 0 walks batch
+    lanes (each with its OWN row block, e.g. a tenant's arena window),
+    axis 1 walks that lane's row blocks."""
+    even, odd = unpack_plane_even_odd(rows_ref[0])
+    q = q_ref[0]
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(even, q[0], dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(odd, q[1], dn, preferred_element_type=jnp.int32)
+    out_ref[0, 0, :] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def stage1_int4_rows_pallas(q_eo: jax.Array, msb_rows: jax.Array, *,
+                            block_w: int = DEFAULT_BLOCK_N,
+                            interpret: bool = True) -> jax.Array:
+    """Per-lane-rows stage 1: q_eo (B, 2, D//2) int8 nibbles, msb_rows
+    (B, W, D//2) uint8 with W % block_w == 0. Returns (B, W) int32 — one
+    launch for the whole batch (grid (B, W/block_w))."""
+    b, w, d2 = msb_rows.shape
+    assert w % block_w == 0, (w, block_w)
+    nw = w // block_w
+    out = pl.pallas_call(
+        _stage1_rows_kernel,
+        grid=(b, nw),
+        in_specs=[
+            pl.BlockSpec((1, 2, d2), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_w, d2), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_w), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, w), jnp.int32),
+        interpret=interpret,
+    )(q_eo, msb_rows)
+    return out[:, 0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def stage1_int4_pallas(q_eo: jax.Array, msb_plane: jax.Array, *,
                        block_n: int = DEFAULT_BLOCK_N,

@@ -44,6 +44,46 @@ def _stage2_kernel(q_ref, msb_ref, lsb_ref, out_ref):
     out_ref[0, :] = s
 
 
+def _stage2_batched_kernel(q_ref, msb_ref, lsb_ref, out_ref):
+    """q_ref: (1, 2, D2) int8; planes: (1, BC, D2) uint8; out: (1, 1, BC).
+
+    Batched variant: grid axis 0 walks batch lanes (each lane rescores its
+    OWN gathered candidate rows with its OWN query), axis 1 walks that
+    lane's candidate blocks — the whole (B, C) rescore is ONE launch."""
+    de, do = _reconstruct_even_odd(msb_ref[0], lsb_ref[0])
+    q = q_ref[0]
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(de, q[0], dn, preferred_element_type=jnp.int32)
+    s += jax.lax.dot_general(do, q[1], dn, preferred_element_type=jnp.int32)
+    out_ref[0, 0, :] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def stage2_int8_batched_pallas(q_eo8: jax.Array, msb_rows: jax.Array,
+                               lsb_rows: jax.Array, *,
+                               block_c: int = DEFAULT_BLOCK_C,
+                               interpret: bool = True) -> jax.Array:
+    """q_eo8: (B, 2, D//2) int8 full query values (even dims; odd dims).
+    msb_rows/lsb_rows: (B, C, D//2) uint8 gathered per-lane candidates,
+    C % block_c == 0. Returns (B, C) int32 exact scores, one launch."""
+    b, c, d2 = msb_rows.shape
+    assert c % block_c == 0, (c, block_c)
+    nb = c // block_c
+    out = pl.pallas_call(
+        _stage2_batched_kernel,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, 2, d2), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_c, d2), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, d2), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_c), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, c), jnp.int32),
+        interpret=interpret,
+    )(q_eo8, msb_rows, lsb_rows)
+    return out[:, 0, :]
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def stage2_int8_pallas(q_eo8: jax.Array, msb_rows: jax.Array,
                        lsb_rows: jax.Array, *,

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BitPlanarDB, RetrievalConfig, batched_retrieve,
+from repro.core import (BitPlanarDB, RetrievalConfig, RetrievalEngine,
                         build_database, energy, quantize_int8)
 from repro.core.index import ShardedIndex
 from repro.models import embedder as emb_mod
@@ -47,7 +47,10 @@ class RAGPipeline:
     index: ShardedIndex | None = None      # pod-sharded DB (preferred)
     # index.retrieve_fn wraps shard_map in a FRESH jax.jit each time it is
     # called, so it must be built once and cached here — rebuilding it per
-    # query forced a retrace+recompile on every request.
+    # query forced a retrace+recompile on every request. The cache is a
+    # (cfg, fn) pair KEYED on the config: replacing `retrieval_cfg` after
+    # construction invalidates it instead of silently serving the old
+    # k/metric/backend.
     _sharded_retrieve: Any = dataclasses.field(default=None, repr=False,
                                                compare=False)
 
@@ -80,13 +83,18 @@ class RAGPipeline:
         q_emb = emb_mod.encode(self.emb_params, query_tokens, self.emb_cfg)
         q_codes, _ = quantize_int8(q_emb, per_vector=True)
         if self.index is not None:
-            if self._sharded_retrieve is None:
-                self._sharded_retrieve = self.index.retrieve_fn(
-                    self.retrieval_cfg)
-            res = self._sharded_retrieve(q_codes)
+            cached = self._sharded_retrieve
+            if cached is None or cached[0] != self.retrieval_cfg:
+                self._sharded_retrieve = (
+                    self.retrieval_cfg,
+                    self.index.retrieve_fn(self.retrieval_cfg))
+            res = self._sharded_retrieve[1](q_codes)
             n_docs = self.index.n_global
         else:
-            res = batched_retrieve(q_codes, self.db, self.retrieval_cfg)
+            # Batch-native engine core: one launch, doc plane streamed
+            # once for the whole query batch.
+            res = RetrievalEngine(self.retrieval_cfg).retrieve(q_codes,
+                                                               self.db)
             n_docs = self.db.num_docs
         dim = q_emb.shape[-1]
         ledger = energy.cost_hierarchical(n_docs, dim)
@@ -187,8 +195,14 @@ class MultiTenantRAGPipeline:
         # query's scores equally and cannot change its ranking.
         q_codes, _ = quantize_int8(q_emb, per_vector=True)
         res = self.index.retrieve(q_codes, tenant_ids)
-        ledger = energy.cost_hierarchical(self.index.capacity,
-                                          q_emb.shape[-1])
+        # Account what the engine's schedule ACTUALLY streams per lane:
+        # the windowed policy scans only each tenant's segment window, not
+        # the whole arena (the full-arena figure was a gross upper bound).
+        plan = self.index.last_plan
+        rows = plan.rows_scanned if plan is not None else self.index.capacity
+        cands = plan.candidates if plan is not None else None
+        ledger = energy.cost_hierarchical(rows, q_emb.shape[-1],
+                                          candidates=cands)
         return res, ledger
 
     def answer(self, tenant_ids, query_tokens: jax.Array, *,

@@ -1,11 +1,13 @@
 """Cross-tenant batch scheduler: many users, one kernel launch.
 
 Requests from different tenants accumulate in a host-side queue; flush()
-packs up to `max_batch` of them into ONE vmapped segment-masked two-stage
-retrieval over the shared arena. A mixed batch of B users therefore costs
-one launch (stage 1 streams the MSB plane once per query lane, all lanes
-in the same program) instead of B sequential dispatches over B per-user
-databases.
+packs up to `max_batch` of them into ONE batched segment-masked two-stage
+retrieval over the shared arena (the engine core — batch-native matmuls,
+not a vmap). A mixed batch of B users therefore costs one launch AND one
+stream of the arena's MSB plane for the whole batch, instead of B
+sequential dispatches each re-streaming the plane over B per-user
+databases. The exact analytic byte counts of every flush accumulate in
+`stage1_bytes_streamed` / `stage1_bytes_vmapped`.
 
 Partial batches are padded up to the next power of two with NO_TENANT
 lanes (a sentinel matching no arena slot, so padding returns all-invalid
@@ -45,6 +47,11 @@ class CrossTenantBatchScheduler:
         self._queue: list[_Pending] = []
         self._next_id = 0
         self.launches = 0             # batched launches issued (diagnostics)
+        # Analytic traffic ledger (engine.SchedulePlan units, exact bytes):
+        # what the batched launches streamed vs what the same requests
+        # would have streamed one query at a time.
+        self.stage1_bytes_streamed = 0
+        self.stage1_bytes_vmapped = 0
 
     def submit(self, tenant_id: int, query_codes) -> int:
         """Enqueue one request; returns a ticket id resolved by flush()."""
@@ -81,6 +88,15 @@ class CrossTenantBatchScheduler:
             # layout from them before anything touches the device.
             res = self.index.retrieve(jnp.asarray(queries), tids)
             self.launches += 1
+            plan = self.index.last_plan
+            if plan is not None:
+                # stage1_bytes is what the launch ACTUALLY streamed (the
+                # padded lanes included); the vmapped comparison counts
+                # only the b REAL requests — a sequential server would
+                # never have dispatched the padding lanes.
+                self.stage1_bytes_streamed += plan.stage1_bytes
+                self.stage1_bytes_vmapped += (
+                    plan.stage1_bytes_vmapped // plan.batch) * b
             for i, req in enumerate(group):
                 out[req.request_id] = RetrievalResult(
                     indices=res.indices[i], scores=res.scores[i],

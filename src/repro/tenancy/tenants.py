@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import retrieval
+from repro.core import engine, retrieval
 from repro.tenancy.arena import Arena
 
 
@@ -103,6 +103,10 @@ class MultiTenantIndex:
         self.arena = Arena(capacity, dim, scale=scale)
         self.table = TenantTable()
         self.cfg = cfg or retrieval.RetrievalConfig()
+        self._engine = engine.RetrievalEngine(self.cfg)
+        # Analytic SchedulePlan of the most recent retrieve() launch —
+        # schedulers read this to account bytes streamed per flush.
+        self.last_plan: engine.SchedulePlan | None = None
         # (arena generation, tenant-id bytes) -> windowed-layout or None;
         # schedulers re-issue the same tenant groupings between mutations.
         self._layout_cache: dict = {}
@@ -134,12 +138,24 @@ class MultiTenantIndex:
 
     # -- query ---------------------------------------------------------------
 
+    @property
+    def engine(self) -> engine.RetrievalEngine:
+        """The index's RetrievalEngine, re-keyed if `cfg` was replaced
+        (the engine is a stateless facade; the compiled-program cache is
+        keyed on the cfg itself, so swapping cfg never serves stale code).
+        """
+        if self._engine.cfg != self.cfg:
+            self._engine = engine.RetrievalEngine(self.cfg)
+        return self._engine
+
     def _contiguous_layout(self, tenant_ids) -> tuple[jnp.ndarray, int] | None:
         """(per-lane segment starts, pow2 window) when every requested
         tenant is ONE contiguous slot run; None when fragmented (then only
         the full-arena masked scan is correct). Cached per (arena
-        generation, tenant-id tuple)."""
-        key = (self.arena.generation, tenant_ids.tobytes())
+        generation, cfg, tenant-id tuple) — cfg is part of the key because
+        the window floor depends on cfg.k, and cfg may be replaced after
+        construction."""
+        key = (self.arena.generation, self.cfg, tenant_ids.tobytes())
         if key in self._layout_cache:
             return self._layout_cache[key]
         # window >= k keeps the in-window candidate budget well-posed even
@@ -166,21 +182,26 @@ class MultiTenantIndex:
     def retrieve(self, query_codes, tenant_ids) -> retrieval.RetrievalResult:
         """Segment-masked retrieval; single query or mixed cross-tenant batch.
 
-        A batch takes the windowed fast path (each lane streams only its
-        tenant's contiguous segment) whenever the layout allows — after
-        interleaved ingests fragment a tenant, it falls back to the
-        full-arena masked scan until compact() restores contiguity. The
-        underlying functions are top-level jax.jit-compiled, so repeat
-        calls at the same (batch, window) shape reuse the executable.
+        Chooses the engine POLICY host-side and hands the batch to the one
+        batched two-stage core: a batch takes the windowed fast path (each
+        lane streams only its tenant's contiguous segment) whenever the
+        layout allows — after interleaved ingests fragment a tenant, it
+        falls back to the full-arena masked scan until compact() restores
+        contiguity. The engine core is top-level jax.jit-compiled, so
+        repeat calls at the same (batch, policy kind, window) shape reuse
+        the executable. The launch's analytic SchedulePlan lands in
+        `self.last_plan`.
         """
         query_codes = jnp.asarray(query_codes)
         db = self.arena.db()
         if query_codes.ndim == 1:
             if int(tenant_ids) < 0:
                 raise ValueError(f"tenant id must be >= 0, got {tenant_ids}")
-            return retrieval.two_stage_retrieve_masked(
-                query_codes, db, self.arena.owner,
-                jnp.int32(tenant_ids), self.cfg)
+            policy = engine.MaskedPolicy(
+                owner=self.arena.owner,
+                tenant_ids=jnp.asarray(jnp.int32(tenant_ids))[None])
+            self.last_plan = self.engine.plan_for(db, 1, policy)
+            return self.engine.retrieve_single(query_codes, db, policy)
         tids_host = np.atleast_1d(np.asarray(tenant_ids, np.int32))
         # Negative ids are sentinels (-1 = FREE/tombstone owner, -2 =
         # NO_TENANT padding); only the padding sentinel may be queried —
@@ -192,12 +213,14 @@ class MultiTenantIndex:
         layout = self._contiguous_layout(tids_host)
         if layout is not None:
             starts, tids, window = layout
-            return retrieval.windowed_retrieve_masked(
-                query_codes, db, self.arena.owner, tids, starts,
-                self.cfg, window)
-        return retrieval.batched_retrieve_masked(
-            query_codes, db, self.arena.owner,
-            jnp.asarray(tids_host), self.cfg)
+            policy = engine.WindowedPolicy(owner=self.arena.owner,
+                                           tenant_ids=tids, starts=starts,
+                                           window=window)
+        else:
+            policy = engine.MaskedPolicy(owner=self.arena.owner,
+                                         tenant_ids=jnp.asarray(tids_host))
+        self.last_plan = self.engine.plan_for(db, len(tids_host), policy)
+        return self.engine.retrieve(query_codes, db, policy)
 
     # -- introspection -------------------------------------------------------
 

@@ -1,0 +1,246 @@
+"""RetrievalEngine parity suite: every policy, both backends, bit-for-bit.
+
+The engine's contract is that `backend="pallas"` (interpret mode on CPU,
+compiled Mosaic on TPU) and `backend="jnp"` run the SAME exact integer
+arithmetic, so every policy — plain, masked, windowed — must return
+identical indices, scores, and candidate sets, for cosine and MIPS,
+including fragmented tenants and tenants with fewer live docs than k.
+Also pins the single-query wrappers to lanes of the batched core and the
+analytic SchedulePlan byte model.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BitPlanarDB, MaskedPolicy, PlainPolicy,
+                        RetrievalConfig, RetrievalEngine, WindowedPolicy,
+                        build_database)
+from repro.core import engine as engine_mod
+from repro.core.retrieval import (NO_TENANT, batched_retrieve,
+                                  batched_retrieve_masked, two_stage_retrieve,
+                                  two_stage_retrieve_masked,
+                                  windowed_retrieve_masked)
+from repro.core.quantization import quantize_int8
+from repro.tenancy import MultiTenantIndex
+
+DIM = 64
+N = 192
+
+
+def make_arena(fragmented: bool, seed=0, k=3, metric="cosine",
+               docs=(40, 40, 2)):
+    """3 tenants in one arena; tenant 2 holds fewer docs than k.
+
+    fragmented=True interleaves the ingests so tenants span multiple
+    segments (only the full-scan masked policy is then correct)."""
+    rng = np.random.default_rng(seed)
+    idx = MultiTenantIndex(N, DIM, RetrievalConfig(k=k, metric=metric))
+    per_tenant = {t: rng.normal(size=(nd, DIM)).astype(np.float32)
+                  for t, nd in enumerate(docs)}
+    if fragmented:
+        chunks = {t: np.array_split(d, 4) for t, d in per_tenant.items()}
+        for i in range(4):
+            for t in per_tenant:
+                if len(chunks[t][i]):
+                    idx.ingest(t, jnp.asarray(chunks[t][i]))
+    else:
+        for t, d in per_tenant.items():
+            idx.ingest(t, jnp.asarray(d))
+    queries = rng.normal(size=(4, DIM)).astype(np.float32)
+    q_codes, _ = quantize_int8(jnp.asarray(queries), per_vector=True)
+    return idx, q_codes
+
+
+def assert_results_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+    np.testing.assert_array_equal(np.asarray(a.candidate_indices),
+                                  np.asarray(b.candidate_indices))
+
+
+def run_both_backends(fn, cfg):
+    rj = fn(cfg)
+    rp = fn(dataclasses.replace(cfg, backend="pallas"))
+    return rj, rp
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+def test_plain_policy_backend_parity(metric):
+    rng = np.random.default_rng(7)
+    db = BitPlanarDB.from_quantized(build_database(
+        jnp.asarray(rng.normal(size=(300, DIM)).astype(np.float32))))
+    q_codes, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(8, DIM)).astype(np.float32)), per_vector=True)
+    cfg = RetrievalConfig(k=5, metric=metric)
+    rj, rp = run_both_backends(lambda c: batched_retrieve(q_codes, db, c),
+                               cfg)
+    assert_results_equal(rj, rp)
+    # single-query wrapper == lane 0 of the batch, both backends
+    sj, sp = run_both_backends(
+        lambda c: two_stage_retrieve(q_codes[0], db, c), cfg)
+    assert_results_equal(sj, sp)
+    np.testing.assert_array_equal(np.asarray(sj.indices),
+                                  np.asarray(rj.indices)[0])
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+@pytest.mark.parametrize("fragmented", [False, True])
+def test_masked_policy_backend_parity(metric, fragmented):
+    """Full-arena masked scan: fragmented tenants and a tenant with fewer
+    live docs than k (lane 2), plus a NO_TENANT padding lane."""
+    idx, q_codes = make_arena(fragmented, seed=11, metric=metric)
+    db = idx.arena.db()
+    tids = jnp.asarray([0, 1, 2, NO_TENANT], jnp.int32)
+    rj, rp = run_both_backends(
+        lambda c: batched_retrieve_masked(q_codes, db, idx.arena.owner,
+                                          tids, c), idx.cfg)
+    assert_results_equal(rj, rp)
+    # the small tenant pads with -1; the padding lane returns nothing
+    assert np.asarray(rj.indices)[2].tolist().count(-1) == idx.cfg.k - 2
+    assert np.all(np.asarray(rj.indices)[3] == -1)
+    sj, sp = run_both_backends(
+        lambda c: two_stage_retrieve_masked(q_codes[0], db, idx.arena.owner,
+                                            jnp.int32(0), c), idx.cfg)
+    assert_results_equal(sj, sp)
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+@pytest.mark.parametrize("window", [8, 64])
+def test_windowed_policy_backend_parity(metric, window):
+    """Contiguous tenants served through per-lane windows, both backends;
+    window 8 also exercises window < segment-length clamping of starts."""
+    idx, q_codes = make_arena(False, seed=13, metric=metric)
+    db = idx.arena.db()
+    tids = np.asarray([0, 1, 2, 0], np.int32)
+    starts = jnp.asarray([idx.table.segments(int(t))[0][0] for t in tids],
+                         jnp.int32)
+    rj, rp = run_both_backends(
+        lambda c: windowed_retrieve_masked(q_codes, db, idx.arena.owner,
+                                           jnp.asarray(tids), starts, c,
+                                           window), idx.cfg)
+    assert_results_equal(rj, rp)
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+def test_index_retrieve_backend_parity_end_to_end(metric):
+    """MultiTenantIndex picks the policy host-side; both backends must
+    agree through the whole facade (windowed AND fragmented fallback)."""
+    for fragmented in (False, True):
+        idx, q_codes = make_arena(fragmented, seed=29, metric=metric)
+        tids = np.asarray([0, 1, 2, 1], np.int32)
+        res_j = idx.retrieve(q_codes, tids)
+        expected_kind = "masked" if fragmented else "windowed"
+        assert idx.last_plan.kind == expected_kind
+        idx.cfg = dataclasses.replace(idx.cfg, backend="pallas")
+        res_p = idx.retrieve(q_codes, tids)
+        assert_results_equal(res_j, res_p)
+
+
+def test_windowed_and_masked_policies_agree():
+    """The windowed fast path returns exactly what the full scan returns
+    when tenants are contiguous (same budget, same masking)."""
+    idx, q_codes = make_arena(False, seed=3)
+    db = idx.arena.db()
+    tids = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    full = batched_retrieve_masked(q_codes, db, idx.arena.owner, tids,
+                                   idx.cfg)
+    window = 64
+    starts = jnp.asarray([idx.table.segments(int(t))[0][0] for t in tids],
+                         jnp.int32)
+    win = windowed_retrieve_masked(q_codes, db, idx.arena.owner, tids,
+                                   starts, idx.cfg, window)
+    np.testing.assert_array_equal(np.asarray(full.indices),
+                                  np.asarray(win.indices))
+    np.testing.assert_array_equal(np.asarray(full.scores),
+                                  np.asarray(win.scores))
+
+
+def test_window_smaller_than_k_rejected():
+    idx, q_codes = make_arena(False, seed=5, k=5)
+    db = idx.arena.db()
+    with pytest.raises(ValueError, match="window"):
+        windowed_retrieve_masked(q_codes, db, idx.arena.owner,
+                                 jnp.zeros(4, jnp.int32),
+                                 jnp.zeros(4, jnp.int32), idx.cfg, window=4)
+
+
+def test_schedule_plan_byte_model():
+    """The analytic model: plane-scan policies stream the MSB plane ONCE
+    per batch; the vmapped-scalar path streamed it once per query."""
+    cfg = RetrievalConfig(k=5)
+    eng = RetrievalEngine(cfg)
+    rng = np.random.default_rng(0)
+    db = BitPlanarDB.from_quantized(build_database(
+        jnp.asarray(rng.normal(size=(256, DIM)).astype(np.float32))))
+    plane_bytes = 256 * (DIM // 2)
+    for policy, kind in [(PlainPolicy(), "plain"),
+                         (MaskedPolicy(jnp.zeros(256, jnp.int32),
+                                       jnp.zeros(32, jnp.int32)), "masked")]:
+        plan = eng.plan_for(db, 32, policy)
+        assert plan.kind == kind
+        assert plan.stage1_bytes == plane_bytes          # once per BATCH
+        assert plan.stage1_bytes_vmapped == 32 * plane_bytes
+    wplan = eng.plan_for(db, 32, WindowedPolicy(
+        jnp.zeros(256, jnp.int32), jnp.zeros(32, jnp.int32),
+        jnp.zeros(32, jnp.int32), window=16))
+    assert wplan.kind == "windowed"
+    # per-lane windows: bytes scale with B, but only over the window
+    assert wplan.stage1_bytes == 32 * 16 * (DIM // 2)
+    assert wplan.rows_scanned == 16
+
+
+def test_engine_batched_equals_vmapped_single_lanes():
+    """Lane i of one batched launch == an independent single-query call
+    (the old vmapped semantics are preserved exactly)."""
+    idx, q_codes = make_arena(True, seed=41)
+    db = idx.arena.db()
+    tids = jnp.asarray([0, 1, 2, 0], jnp.int32)
+    batched = batched_retrieve_masked(q_codes, db, idx.arena.owner, tids,
+                                      idx.cfg)
+    for i in range(4):
+        single = two_stage_retrieve_masked(q_codes[i], db, idx.arena.owner,
+                                           tids[i], idx.cfg)
+        np.testing.assert_array_equal(np.asarray(batched.indices)[i],
+                                      np.asarray(single.indices))
+        np.testing.assert_array_equal(np.asarray(batched.scores)[i],
+                                      np.asarray(single.scores))
+
+
+def test_layout_cache_keyed_on_cfg():
+    """Replacing idx.cfg (e.g. a larger k) must not serve a stale windowed
+    layout sized for the old k — the layout cache is keyed on cfg too."""
+    idx, q_codes = make_arena(False, seed=31, k=3, docs=(6, 6, 6))
+    tids = np.asarray([0, 1, 2, 0], np.int32)
+    idx.retrieve(q_codes, tids)                    # caches window for k=3
+    assert idx.last_plan.kind == "windowed"
+    idx.cfg = dataclasses.replace(idx.cfg, k=16)   # window 8 would be < k
+    res = idx.retrieve(q_codes, tids)              # must not raise
+    assert np.asarray(res.indices).shape == (4, 16)
+
+
+def test_scheduler_ledger_counts_real_requests_only():
+    """The flush ledger: streamed bytes include the padded lanes (they ARE
+    streamed), but the vmapped comparison counts only real requests — a
+    sequential server would never dispatch padding."""
+    from repro.tenancy import CrossTenantBatchScheduler
+    idx, q_codes = make_arena(False, seed=19)
+    sched = CrossTenantBatchScheduler(idx, max_batch=8)
+    for i, t in enumerate((0, 1, 0)):          # 3 real requests, padded to 4
+        sched.submit(t, np.asarray(q_codes[i]))
+    sched.flush()
+    plan = idx.last_plan
+    assert plan.kind == "windowed" and plan.batch == 4
+    window_bytes = plan.rows_scanned * (DIM // 2)
+    assert sched.stage1_bytes_streamed == 4 * window_bytes
+    assert sched.stage1_bytes_vmapped == 3 * window_bytes
+
+
+def test_masked_score_floor_is_comparator_safe():
+    """engine.MASKED_SCORE**2 must stay below 2**62 (the comparator's limb
+    budget) while ranking under every real score."""
+    s = int(engine_mod.MASKED_SCORE)
+    assert s * s * 1 < 2 ** 62
+    assert s < -(512 * 128 * 128)       # below any D<=512 INT8 dot product

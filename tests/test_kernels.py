@@ -88,3 +88,110 @@ def test_kernels_accept_extreme_values():
     got = ops.stage2_scores(q, msb, lsb)
     np.testing.assert_array_equal(np.asarray(got, np.int64),
                                   np.full(64, 512 * 128 * 128, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Batch-native kernels (the engine's backends)
+# ---------------------------------------------------------------------------
+
+def make_batch(n, d, b, seed=0):
+    rng = np.random.default_rng(seed)
+    db = build_database(jnp.asarray(
+        rng.normal(size=(n, d)).astype(np.float32)))
+    bp = BitPlanarDB.from_quantized(db)
+    q, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(b, d)).astype(np.float32)), per_vector=True)
+    return db, bp, q
+
+
+@pytest.mark.parametrize("n,d,b,block", [(256, 512, 8, 64), (512, 256, 1, 256),
+                                         (96, 128, 32, 32), (250, 512, 4, 64)])
+def test_stage1_batched_kernel_true_matmul(n, d, b, block):
+    """The batched matmul kernel == per-lane oracle == vmapped scalar kernel
+    (bit-for-bit: all paths are exact integer arithmetic)."""
+    _, bp, q = make_batch(n, d, b, seed=n + d + b)
+    q_msb = msb_nibble(q)
+    got = ops.stage1_scores_batched(q_msb, bp.msb_plane, block_n=block)
+    want = ref.stage1_scores_batched_ref(ops.pack_query_panel(q_msb),
+                                         bp.msb_plane)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    vmapped = jax.vmap(lambda qm: ops.stage1_scores(qm, bp.msb_plane,
+                                                    block_n=block))(q_msb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vmapped))
+
+
+@pytest.mark.parametrize("b,w,d,block", [(4, 128, 256, 64), (2, 64, 512, 64),
+                                         (8, 96, 128, 32)])
+def test_stage1_rows_kernel_per_lane_windows(b, w, d, block):
+    """Each lane scores its OWN row block (the windowed-policy shape)."""
+    _, bp, q = make_batch(w * b, d, b, seed=b + w + d)
+    starts = np.arange(b) * w
+    rows = jnp.stack([bp.msb_plane[s:s + w] for s in starts])
+    q_msb = msb_nibble(q)
+    got = ops.stage1_scores_rows(q_msb, rows, block_w=block)
+    want = ref.stage1_rows_batched_ref(ops.pack_queries_even_odd(q_msb), rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,c,d,block", [(4, 50, 512, 64), (8, 64, 256, 32),
+                                         (2, 16, 128, 8)])
+def test_stage2_batched_kernel_one_launch(b, c, d, block):
+    """(B, C) gathered candidates rescored in one launch, exact INT8."""
+    db, bp, q = make_batch(max(c * b, 64), d, b, seed=b + c + d)
+    rng = np.random.default_rng(b + c)
+    cand = jnp.asarray(rng.integers(0, bp.num_docs, (b, c)), jnp.int32)
+    mr = jnp.take(bp.msb_plane, cand, axis=0)
+    lr = jnp.take(bp.lsb_plane, cand, axis=0)
+    got = ops.stage2_scores_batched(q, mr, lr, block_c=block)
+    want = ref.stage2_scores_batched_ref(ops.pack_queries_even_odd(q), mr, lr)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # exact INT8 ground truth per lane
+    vals = np.asarray(db.values).astype(np.int64)
+    qq = np.asarray(q).astype(np.int64)
+    exact = np.stack([vals[np.asarray(cand)[i]] @ qq[i] for i in range(b)])
+    np.testing.assert_array_equal(np.asarray(got, np.int64), exact)
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_fused_topk_batched_kernel(masked):
+    """Batch grid dimension + the tenant segment mask applied IN-kernel."""
+    from repro.kernels.fused_topk import fused_topk_batched_pallas
+    n, d, b, block, k = 512, 256, 4, 128, 8
+    _, bp, q = make_batch(n, d, b, seed=17)
+    q_eo = ops.pack_queries_even_odd(msb_nibble(q))
+    rng = np.random.default_rng(3)
+    owner = jnp.asarray(rng.integers(-1, 3, n), jnp.int32)
+    tids = jnp.asarray([0, 1, 2, -2], jnp.int32)   # incl. a padding lane
+    if masked:
+        gs, gi = fused_topk_batched_pallas(q_eo, bp.msb_plane, owner, tids,
+                                           k=k, block_n=block)
+        ws, wi = ref.fused_topk_batched_ref(q_eo, bp.msb_plane, block, k,
+                                            owner, tids)
+    else:
+        gs, gi = fused_topk_batched_pallas(q_eo, bp.msb_plane,
+                                           k=k, block_n=block)
+        ws, wi = ref.fused_topk_batched_ref(q_eo, bp.msb_plane, block, k)
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_fused_candidates_batched_masked_recall():
+    """With k_per_block >= c the batched fused candidate SET equals each
+    lane's dense masked stage-1 top-c exactly."""
+    from repro.core.engine import stage1_plane_batched_jnp
+    n, d, b, c = 512, 256, 3, 20
+    _, bp, q = make_batch(n, d, b, seed=23)
+    q_msb = msb_nibble(q)
+    rng = np.random.default_rng(5)
+    owner = jnp.asarray(rng.integers(0, 3, n), jnp.int32)
+    tids = jnp.asarray([0, 1, 2], jnp.int32)
+    cands = ops.fused_candidates_batched(q_msb, bp.msb_plane, owner, tids,
+                                         c=c, k_per_block=c, block_n=128)
+    scores = stage1_plane_batched_jnp(q_msb, bp.msb_plane)
+    member = np.asarray(owner)[None, :] == np.asarray(tids)[:, None]
+    # int64: negating INT32_MIN would overflow in int32
+    masked = np.where(member, np.asarray(scores),
+                      np.iinfo(np.int32).min).astype(np.int64)
+    for i in range(b):
+        true = set(np.argsort(-masked[i], kind="stable")[:c].tolist())
+        assert set(np.asarray(cands)[i].tolist()) == true
