@@ -2,10 +2,17 @@
 # `make test` matches the ROADMAP.md command exactly.
 PY ?= python
 
-.PHONY: test test-fast bench-smoke bench example trace
+.PHONY: test test-fast lint bench-smoke bench example trace
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# ruff (config in pyproject.toml) + guard against committed bytecode
+lint:
+	ruff check src tests benchmarks examples
+	@if git ls-files | grep -E '(\.pyc$$|__pycache__)'; then \
+		echo "ERROR: tracked bytecode files (see above)"; exit 1; \
+	else echo "no tracked bytecode"; fi
 
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"

@@ -56,9 +56,9 @@ def run(verbose=True):
         print("-- HBM traffic model per query (bytes), N=4096 D=512 C=50 --")
         for k, v in tm.items():
             print(f"  {k:>22}: {v:>10,}")
-        print(f"  hier/int8 traffic ratio: "
+        print("  hier/int8 traffic ratio: "
               f"{tm['hier_total'] / tm['int8_full_scan']:.3f} "
-              f"(paper: ~0.5 at large N)")
+              "(paper: ~0.5 at large N)")
     checks = {
         "hier traffic ~ half of int8":
             tm["hier_total"] / tm["int8_full_scan"] < 0.52,

@@ -1,17 +1,25 @@
-"""Batched retrieval engine benchmark: batched kernels vs the vmapped-scalar path.
+"""Batched retrieval engine benchmark: batched kernels vs the vmapped-scalar path,
+plus the cluster-pruned cascade vs the full two-stage scan.
 
-Two currencies, per the paper:
+Three currencies, per the paper:
 
   1. BYTES STREAMED (exact, analytic — engine.plan): the batched stage-1
      matmul kernel fetches each doc-plane block from HBM once per BATCH
      (N * D/2 bytes regardless of B); the old vmapped-scalar path fetched
-     it once per QUERY (B * N * D/2). Computed, not timed — this is the
-     paper's memory-access argument applied to batch serving.
+     it once per QUERY (B * N * D/2). The cluster-pruned cascade drops
+     stage-1 to each lane's probed blocks (~N * nprobe / K rows) after a
+     K-row centroid pass. Computed, not timed — the paper's memory-access
+     argument applied to batch serving and then to arena growth.
   2. WALL-CLOCK at B in {8, 32, 128}: the batched kernel vs vmapping the
      single-query kernel over the batch, plus the batched jnp engine body
-     vs a per-query loop. On CPU, Pallas runs in interpret mode, so kernel
-     times are RELATIVE indicators (the batched win is structural: one
-     grid sweep instead of B); jnp times are real wall-clock.
+     vs a per-query loop, plus the cascade body vs the full scan. On CPU,
+     Pallas runs in interpret mode, so kernel times are RELATIVE
+     indicators (the batched win is structural: one grid sweep instead of
+     B); jnp times are real wall-clock.
+  3. RECALL@k of the cascade vs the full two-stage scan on a synthetic
+     clustered corpus (64k docs in the full run) — the prune must buy its
+     byte reduction without giving up the paper's retrieval quality
+     (gate: >= 0.95).
 
 Parity is asserted bit-for-bit on every shape before anything is timed —
 a kernel-path regression fails the checks instead of silently degrading.
@@ -31,15 +39,22 @@ import numpy as np                                             # noqa: E402
 
 from benchmarks._timing import median_ms as _median_ms         # noqa: E402
 from repro.core import (BitPlanarDB, RetrievalConfig,          # noqa: E402
-                        RetrievalEngine, build_database,
+                        RetrievalEngine, build_database, clustering,
                         quantize_int8)
 from repro.core.quantization import msb_nibble                 # noqa: E402
+from repro.core.retrieval import (batched_retrieve,            # noqa: E402
+                                  cluster_pruned_retrieve)
+from repro.data import retrieval_corpus                        # noqa: E402
 from repro.kernels import ops                                  # noqa: E402
 
 # Wall-clock checks are excluded from the exit code in --smoke mode
 # (tiny shapes on shared CI runners); the structural parity + byte-model
 # checks always gate.
 TIMING_CHECK = "batched stage-1 kernel faster than vmapped-scalar at B=32"
+# The >= 4x stage-1 byte reduction needs arena >> batch * probe; at smoke
+# shapes the per-lane gathers don't amortize, so the gate is full-run only
+# (the byte MODEL itself — plan == analytic formula — always gates).
+BYTES_CHECK = "cascade stage-1 bytes >= 4x below the full scan (analytic)"
 
 
 def _build(n, d, bmax, seed=0):
@@ -92,9 +107,12 @@ def run(verbose=True, smoke=False):
             "bytes_streamed_vmapped": plan.stage1_bytes_vmapped,
         }
 
-        batched_engine = lambda qq: eng.retrieve(qq, bp)
-        per_query = lambda qq: [eng.retrieve_single(qq[i], bp)
-                                for i in range(qq.shape[0])]
+        def batched_engine(qq):
+            return eng.retrieve(qq, bp)
+
+        def per_query(qq):
+            return [eng.retrieve_single(qq[i], bp)
+                    for i in range(qq.shape[0])]
         t_eng = _median_ms(batched_engine, q, reps=reps)
         t_loop = _median_ms(per_query, q, reps=reps)
         records[f"two_stage_jnp_B{b}"] = {
@@ -106,7 +124,7 @@ def run(verbose=True, smoke=False):
         mode = ("smoke shapes, CPU interpret" if smoke else
                 "CPU: Pallas interpret mode — kernel times are relative "
                 "indicators; bytes are exact")
-        print(f"== batched engine vs vmapped-scalar path "
+        print("== batched engine vs vmapped-scalar path "
               f"(N={n} D={d}; {mode}) ==")
         for name, r in records.items():
             line = (f"  {name:>22}: {r['median_ms']:9.2f} ms   "
@@ -117,15 +135,110 @@ def run(verbose=True, smoke=False):
                          f"{r['bytes_streamed_vmapped']:>14,}")
             print(line)
         print(f"  doc plane per batched launch: {plane_bytes:,} bytes "
-              f"(= N*D/2, streamed ONCE per batch)")
+              "(= N*D/2, streamed ONCE per batch)")
+
+    cascade = _cascade_section(records, smoke=smoke, reps=reps,
+                               verbose=verbose)
 
     mid = f"stage1_kernel_B{32 if not smoke else batches[0]}"
     checks = {
         "batched kernel == vmapped kernel bit-for-bit (all B)": parity_ok,
         "doc plane streamed exactly once per batch (analytic)": plan_ok,
         TIMING_CHECK: records[mid]["ratio"] > 1.0,
+        "cascade jnp == pallas bit-for-bit": cascade["parity"],
+        "cascade per-stage plan matches analytic byte model":
+            cascade["plan_ok"],
+        "cascade recall@k >= 0.95 vs full two-stage scan":
+            cascade["recall"] >= 0.95,
+        BYTES_CHECK: cascade["reduction"] >= 4.0,
     }
     return {"records": records, "checks": checks}
+
+
+def _cascade_section(records, *, smoke, reps, verbose):
+    """Cluster-pruned cascade vs the full two-stage scan on a synthetic
+    clustered corpus (planted cluster structure; the codebook is the
+    quantized planted centers refined by one k-means pass, so the bench
+    isolates the CASCADE's cost/quality, not k-means convergence)."""
+    if smoke:
+        n, d, csize, nprobe, br, b = 2048, 128, 64, 4, 32, 4
+    else:
+        n, d, csize, nprobe, br, b = 65536, 256, 128, 8, 64, 8
+    k = 5
+    docs, queries, gold = retrieval_corpus(
+        n, d, num_queries=max(b, 16), noise=0.1, cluster_size=csize,
+        cluster_spread=0.2, seed=7)
+    db = BitPlanarDB.from_quantized(build_database(jnp.asarray(docs)))
+    # planted layout: rows are already cluster-grouped (row // csize)
+    labels = (np.arange(n) // csize).astype(np.int32)
+    num_clusters = int(labels[-1]) + 1
+    centers = np.stack([docs[labels == c].mean(axis=0)
+                        for c in range(num_clusters)])
+    cents, _ = quantize_int8(jnp.asarray(centers.astype(np.float32)))
+    codebook = clustering.ClusterCodebook.from_codes(cents)
+    table = clustering.block_table(labels, num_clusters, br)
+    cfg = RetrievalConfig(k=k, metric="cosine")
+    q, _ = quantize_int8(jnp.asarray(queries[:b]), per_vector=True)
+
+    full = batched_retrieve(q, db, cfg)
+    pruned = cluster_pruned_retrieve(q, db, codebook, table, labels, cfg,
+                                     nprobe=nprobe, block_rows=br)
+    pruned_pl = cluster_pruned_retrieve(
+        q, db, codebook, table, labels,
+        RetrievalConfig(k=k, metric="cosine", backend="pallas"),
+        nprobe=nprobe, block_rows=br)
+    parity = bool(
+        jnp.array_equal(pruned.indices, pruned_pl.indices)
+        and jnp.array_equal(pruned.scores, pruned_pl.scores)
+        and jnp.array_equal(pruned.candidate_indices,
+                            pruned_pl.candidate_indices))
+    fi, ci = np.asarray(full.indices), np.asarray(pruned.indices)
+    recall = float(np.mean([len(set(fi[i]) & set(ci[i])) / k
+                            for i in range(b)]))
+
+    # ---- analytic per-stage bytes: the plan must equal the formulae.
+    eng = RetrievalEngine(cfg)
+    import repro.core.engine as engine_mod
+    policy = engine_mod.ClusterPolicy(
+        owner=jnp.zeros(n, jnp.int32), tenant_ids=jnp.zeros(b, jnp.int32),
+        labels=jnp.asarray(labels), centroid_msb=codebook.msb_plane,
+        centroid_norms=codebook.norms_sq, cluster_blocks=jnp.asarray(table),
+        nprobe=nprobe, block_rows=br)
+    plan = eng.plan_for(db, b, policy)
+    full_plan = eng.plan_for(db, b)
+    probe = nprobe * table.shape[1] * br
+    plan_ok = (
+        [s.name for s in plan.stages] == ["prune", "approx", "exact"]
+        and plan.stages[0].bytes_hbm == num_clusters * (d // 2)
+        and plan.stage1_bytes == b * probe * (d // 2)
+        and plan.stage2_bytes == b * plan.candidates * d)
+    reduction = full_plan.stage1_bytes / plan.stage1_bytes
+
+    # ---- wall-clock: cascade vs full two-stage (jnp engine bodies).
+    t_full = _median_ms(lambda qq: batched_retrieve(qq, db, cfg), q,
+                        reps=reps)
+    t_casc = _median_ms(
+        lambda qq: cluster_pruned_retrieve(qq, db, codebook, table, labels,
+                                           cfg, nprobe=nprobe,
+                                           block_rows=br), q, reps=reps)
+    records[f"cascade_jnp_B{b}"] = {
+        "median_ms": t_casc, "ref_median_ms": t_full,
+        "ratio": t_full / t_casc, "recall_at_k": recall,
+        "bytes_streamed": plan.stage1_bytes,
+        "bytes_streamed_full_scan": full_plan.stage1_bytes,
+        "stage_bytes": {s.name: s.bytes_hbm for s in plan.stages},
+    }
+    if verbose:
+        print(f"== cluster-pruned cascade (N={n} D={d} K={num_clusters} "
+              f"nprobe={nprobe} B={b}) ==")
+        print(f"  cascade: {t_casc:9.2f} ms   full scan {t_full:9.2f} ms   "
+              f"speedup {t_full / t_casc:5.2f}x   recall@{k} {recall:.3f}")
+        print(f"  stage-1 bytes {plan.stage1_bytes:,} vs full "
+              f"{full_plan.stage1_bytes:,} ({reduction:.1f}x less)   "
+              "per-stage "
+              f"{ {s.name: s.bytes_hbm for s in plan.stages} }")
+    return {"parity": parity, "recall": recall, "plan_ok": plan_ok,
+            "reduction": reduction}
 
 
 if __name__ == "__main__":
@@ -133,5 +246,5 @@ if __name__ == "__main__":
     out = run(verbose=True, smoke=smoke)
     print(out["checks"])
     gating = {k: v for k, v in out["checks"].items()
-              if not (smoke and k == TIMING_CHECK)}
+              if not (smoke and k in (TIMING_CHECK, BYTES_CHECK))}
     sys.exit(0 if all(gating.values()) else 1)

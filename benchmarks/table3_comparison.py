@@ -33,7 +33,7 @@ def run(verbose=True):
                   f"{r['energy_uJ']:>12.2f} uJ  P@1={p}")
         speedup = 86_800.0 / ours.total_uj
         print(f"-> reproduced accelerator vs GPU: {speedup:.0f}x lower "
-              f"energy (paper claims ~2 orders of magnitude)")
+              "energy (paper claims ~2 orders of magnitude)")
     checks = {
         "repro matches paper's 337.74uJ (<5%)":
             abs(ours.total_uj - 337.74) / 337.74 < 0.05,

@@ -79,7 +79,7 @@ def main():
         jnp.asarray(records[0][1][7][None]))
     top = int(np.asarray(res.indices)[0, 0])
     assert np.array_equal(pipe.doc_tokens[top], records[0][1][7])
-    print(f"[alice] deleted record tombstoned; after compaction "
+    print("[alice] deleted record tombstoned; after compaction "
           f"({pipe.index.num_live} live rows) results still correct")
 
 

@@ -48,7 +48,7 @@ def main():
     t0 = time.time()
     pipe = RAGPipeline.build(ecfg, eparams, gen_api, gen_params, doc_tokens,
                              RetrievalConfig(k=2, metric="cosine"))
-    print(f"[offline] built INT8 nibble-planar index over "
+    print("[offline] built INT8 nibble-planar index over "
           f"{args.num_docs} docs in {time.time()-t0:.1f}s")
 
     # online phase: batched requests (queries = noisy copies of docs so the
@@ -63,7 +63,7 @@ def main():
           f"({dt/args.requests:.2f}s/req incl. retrieval + "
           f"{args.max_new}-token decode)")
     print(f"  retrieval top-1 hit rate: {hits}/{args.requests}")
-    print(f"  retrieval energy (paper cost model): "
+    print("  retrieval energy (paper cost model): "
           f"{ledger.total_uj:.2f} uJ/query, "
           f"DRAM share {100*ledger.proportions()['DRAM']:.1f}%")
     for i in range(min(3, args.requests)):

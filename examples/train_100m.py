@@ -8,7 +8,6 @@ this 1-core container; default is a small smoke run — pass --steps 300
     PYTHONPATH=src python examples/train_100m.py [--steps 20] [--full]
 """
 import argparse
-import itertools
 import time
 
 import jax

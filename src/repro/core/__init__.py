@@ -14,10 +14,14 @@ from repro.core.similarity import (cosine_key_f32, fraction_greater, int_dot,
                                    topk_mips)
 from repro.core.retrieval import (NO_TENANT, RetrievalConfig, RetrievalResult,
                                   batched_retrieve, batched_retrieve_masked,
-                                  exact_retrieve, int4_retrieve,
-                                  two_stage_retrieve,
+                                  cluster_pruned_retrieve, exact_retrieve,
+                                  int4_retrieve, two_stage_retrieve,
                                   two_stage_retrieve_masked,
                                   windowed_retrieve_masked)
-from repro.core.engine import (MaskedPolicy, PlainPolicy, RetrievalEngine,
-                               SchedulePlan, WindowedPolicy)
+from repro.core.engine import (ClusterPolicy, MaskedPolicy, PlainPolicy,
+                               RetrievalEngine, SchedulePlan, StagePlan,
+                               WindowedPolicy)
+from repro.core.clustering import (ClusterCodebook, ClusterIndex,
+                                   ClusterParams, block_table,
+                                   cluster_grouped_order, kmeans_int8)
 from repro.core import energy

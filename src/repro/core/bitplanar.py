@@ -83,6 +83,38 @@ def reconstruct_int8(msb_plane: jax.Array, lsb_plane: jax.Array) -> jax.Array:
     return (msb * 16 + lsb).astype(jnp.int8)
 
 
+def expand_block_rows(block_ids: jax.Array, block_rows: int) -> jax.Array:
+    """(B, J) block ids -> (B, J * block_rows) row ids, block-major.
+
+    THE row-numbering convention of the block-gather path: row r of block
+    b is global row b * block_rows + r, laid out block after block. The
+    jnp gather, the Pallas kernel's BlockSpec index math, and the
+    cascade's prune bookkeeping all derive their row ids from here, so
+    they cannot drift apart."""
+    b = block_ids.shape[0]
+    return (block_ids[:, :, None] * block_rows
+            + jnp.arange(block_rows, dtype=jnp.int32)).reshape(b, -1)
+
+
+def gather_blocks(plane: jax.Array, block_ids: jax.Array,
+                  block_rows: int) -> tuple[jax.Array, jax.Array]:
+    """Expand per-lane block ids into a materialized row gather.
+
+    plane (N, D2) x block_ids (B, J) int32 (pre-clamped to valid blocks)
+    -> (gathered (B, J * block_rows, D2), rows (B, J * block_rows) global
+    row ids). Rows past N read as ZERO rows — exactly what the Pallas
+    gather kernel's zero-padded plane streams — so every consumer of this
+    helper (the jnp engine backend, the kernel oracle) shares one
+    definition of the out-of-range convention and stays bit-equal to the
+    kernel by construction.
+    """
+    n = plane.shape[0]
+    rows = expand_block_rows(block_ids, block_rows)
+    gathered = jnp.take(plane, jnp.minimum(rows, n - 1), axis=0)
+    gathered = jnp.where((rows < n)[:, :, None], gathered, jnp.uint8(0))
+    return gathered, rows
+
+
 # ---------------------------------------------------------------------------
 # Full 8-plane bit-planar layout (ASIC-faithful; used by the energy model)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,273 @@
+"""INT8 k-means codebooks for the cascade's centroid-prune stage.
+
+The two-stage hierarchy still streams the MSB nibble of EVERY document in
+stage 1, so stage-1 bytes grow linearly with the arena — exactly what
+breaks edge serving at scale. Following the IVF recipe EdgeRAG applies to
+on-device RAG, a small codebook of K centroids is kept resident; a query
+first scores the K centroids (stage 0), selects its top-`nprobe` clusters,
+and the INT4 plane scan then touches only rows in those clusters. The
+codebook lives in the SAME representation as the documents — INT8 codes
+with a packed MSB nibble plane and integer squared norms — so centroid
+scoring reuses the batched stage-1 kernels unchanged and stays exact
+integer arithmetic (bit-identical between the jnp and Pallas backends).
+
+Two layers:
+
+  * `kmeans_int8` / `assign_codes` — offline batch clustering of INT8 code
+    matrices. All distance math is exact int32 (argmin ||x-c||^2 via
+    argmax 2<x,c> - ||c||^2), so assignment is deterministic across
+    backends; means are computed in float and re-quantized to INT8, which
+    keeps centroids streamable through the nibble-planar kernels.
+  * `ClusterIndex` — the ONLINE maintainer the streaming arena needs: it
+    holds per-cluster running sums/counts, assigns new rows to the nearest
+    centroid in O(rows * K), retires deleted rows from the sums, and
+    `refresh()` re-derives centroids from the running sums without ever
+    re-reading the corpus (no rebuild — the EdgeRAG online-maintenance
+    argument).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanar, similarity
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterParams:
+    """Host-side knobs for a cluster-pruned deployment.
+
+    num_clusters: codebook size K (centroid plane = K * D/2 bytes,
+        resident). nprobe: clusters scanned per query — the stage-1
+        fraction is ~nprobe / K. block_rows: plane-block granularity of
+        the gather (MXU-friendly multiples of 8; larger blocks = denser
+        DMA, more over-read at cluster boundaries).
+    """
+
+    num_clusters: int
+    nprobe: int = 8
+    block_rows: int = 64
+    kmeans_iters: int = 8
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterCodebook:
+    """K centroids in the documents' own INT8/nibble-planar representation.
+
+    codes: (K, D) int8 centroid codes (same fixed scale as the corpus).
+    msb_plane: (K, D//2) uint8 packed MSB nibbles — what stage 0 streams.
+    norms_sq: (K,) int32 squared norms of the INT8 codes (cosine sidecar).
+    """
+
+    codes: jax.Array
+    msb_plane: jax.Array
+    norms_sq: jax.Array
+
+    @property
+    def num_clusters(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.codes.shape[1]
+
+    @classmethod
+    def from_codes(cls, codes) -> "ClusterCodebook":
+        codes = jnp.asarray(codes, jnp.int8)
+        msb, _ = bitplanar.pack_nibble_planes(codes)
+        norms = jnp.sum(codes.astype(jnp.int32) ** 2, axis=-1)
+        return cls(codes=codes, msb_plane=msb, norms_sq=norms)
+
+
+jax.tree_util.register_pytree_node(
+    ClusterCodebook,
+    lambda c: ((c.codes, c.msb_plane, c.norms_sq), None),
+    lambda _, leaves: ClusterCodebook(*leaves),
+)
+
+
+def assign_codes(codes, centroid_codes) -> np.ndarray:
+    """Nearest-centroid assignment of INT8 codes, exact integer math.
+
+    argmin_c ||x - c||^2 == argmax_c 2<x,c> - ||c||^2 (the ||x||^2 term is
+    constant per row), computed entirely in int32, so the labels are
+    deterministic and backend-independent. Returns (N,) int32 labels.
+    """
+    codes = jnp.asarray(codes, jnp.int8)
+    cents = jnp.asarray(centroid_codes, jnp.int8)
+    dots = similarity.int_matmul(cents, codes)              # (N, K) int32
+    cnorm = jnp.sum(cents.astype(jnp.int32) ** 2, axis=-1)  # (K,)
+    return np.asarray(jnp.argmax(2 * dots - cnorm[None, :], axis=1),
+                      np.int32)
+
+
+def kmeans_int8(codes, num_clusters: int, *, iters: int = 8,
+                seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Batch k-means over an INT8 code matrix.
+
+    Assignment runs in exact int32 (`assign_codes`); the update step takes
+    float means and rounds back to INT8, so the returned centroids stay in
+    the corpus representation (streamable planes, integer norms). Empty
+    clusters keep their previous centroid. Deterministic for a given seed.
+
+    Returns (centroid_codes (K, D) int8 numpy, labels (N,) int32 numpy).
+    """
+    codes_np = np.asarray(codes, np.int8)
+    n = codes_np.shape[0]
+    k = min(num_clusters, n)
+    if k < 1:
+        raise ValueError("kmeans needs at least one row and one cluster")
+    rng = np.random.default_rng(seed)
+    cents = codes_np[rng.permutation(n)[:k]].astype(np.int8)
+    labels = np.zeros(n, np.int32)
+    for _ in range(iters):
+        labels = assign_codes(codes_np, cents)
+        new = cents.astype(np.float64).copy()
+        for c in range(k):
+            members = codes_np[labels == c]
+            if len(members):
+                new[c] = members.astype(np.float64).mean(axis=0)
+        cents = np.clip(np.rint(new), -128, 127).astype(np.int8)
+    labels = assign_codes(codes_np, cents)
+    return cents, labels
+
+
+def cluster_grouped_order(labels) -> np.ndarray:
+    """Row permutation grouping rows by cluster label (stable within a
+    cluster). Packing a corpus in this order makes each cluster a handful
+    of CONTIGUOUS blocks, so the prune's block gather is dense."""
+    return np.argsort(np.asarray(labels), kind="stable")
+
+
+def block_table(labels, num_clusters: int, block_rows: int, *,
+                rows=None, min_blocks: int = 1,
+                pad_pow2: bool = True) -> np.ndarray:
+    """(K, MB) int32 table: the ids of the `block_rows`-row blocks holding
+    each cluster's rows, -1 padded.
+
+    Correct for ANY row layout (a fragmented cluster just lists more
+    blocks); after cluster-grouped packing each cluster covers
+    ~ceil(rows / block_rows) + 1 blocks. MB is the max over clusters,
+    rounded up to a power of two (bounds jit recompiles, since MB is a
+    static shape). Rows with label < 0 (free/tombstoned) are skipped.
+    `rows` restricts the table to a subset of row ids (the multi-tenant
+    layer passes one tenant's slots, so the cost is O(S log S) in the
+    tenant's rows, not O(capacity)). One vectorized groupby pass —
+    no per-cluster scan.
+    """
+    labels = np.asarray(labels)
+    if rows is None:
+        rows = np.nonzero((labels >= 0) & (labels < num_clusters))[0]
+        labs = labels[rows]
+    else:
+        rows = np.asarray(rows, np.int64)
+        labs = labels[rows]
+        keep = (labs >= 0) & (labs < num_clusters)
+        rows, labs = rows[keep], labs[keep]
+    # unique (label, block) pairs, lexicographically sorted by label
+    labs, blocks = np.unique(np.stack([labs, rows // block_rows]), axis=1)
+    counts = np.bincount(labs, minlength=num_clusters)
+    mb = max(min_blocks, int(counts.max()) if counts.size else 0)
+    if pad_pow2:
+        mb = 1 << (mb - 1).bit_length()
+    table = np.full((num_clusters, mb), -1, np.int32)
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    table[labs, np.arange(labs.size) - starts[labs]] = blocks
+    return table
+
+
+class ClusterIndex:
+    """Online-maintained cluster assignments for a streaming corpus.
+
+    The codebook is trained once on the first ingested batch (lazily, via
+    `kmeans_int8`) and then maintained incrementally: `add` assigns new
+    rows in O(rows * K) and folds them into per-cluster running sums,
+    `remove` retires deleted rows from the sums, and `refresh` re-derives
+    the INT8 centroids from the sums — never touching the corpus again.
+    `generation` bumps whenever the centroids change, so device-side
+    codebook views can be cached per generation.
+    """
+
+    def __init__(self, num_clusters: int, dim: int, *, seed: int = 0,
+                 iters: int = 8):
+        if num_clusters < 1:
+            raise ValueError("num_clusters must be >= 1")
+        self.num_clusters = num_clusters
+        self.dim = dim
+        self.seed = seed
+        self.iters = iters
+        self.generation = 0
+        self._centroids: np.ndarray | None = None          # (K, D) int8
+        self._sums = np.zeros((num_clusters, dim), np.float64)
+        self._counts = np.zeros(num_clusters, np.int64)
+        self._codebook_cache: tuple[int, ClusterCodebook] | None = None
+
+    @property
+    def trained(self) -> bool:
+        return self._centroids is not None
+
+    def codebook(self) -> ClusterCodebook:
+        """Device-side ClusterCodebook view, cached per generation."""
+        if not self.trained:
+            raise RuntimeError("ClusterIndex has no codebook yet (no rows "
+                               "ingested); call add() first")
+        if (self._codebook_cache is None
+                or self._codebook_cache[0] != self.generation):
+            self._codebook_cache = (
+                self.generation, ClusterCodebook.from_codes(self._centroids))
+        return self._codebook_cache[1]
+
+    # -- online maintenance --------------------------------------------------
+
+    def add(self, codes) -> np.ndarray:
+        """Assign (B, D) int8 rows to clusters; returns (B,) int32 labels.
+
+        The first call trains the codebook on the batch itself (K is
+        clamped to the batch size if smaller — the codebook can only be as
+        diverse as the data seen so far); later calls assign against the
+        current centroids and update the running sums.
+        """
+        codes_np = np.asarray(codes, np.int8)
+        if codes_np.ndim != 2 or codes_np.shape[1] != self.dim:
+            raise ValueError(f"codes must be (B, {self.dim}) int8")
+        if not self.trained:
+            cents, labels = kmeans_int8(codes_np, self.num_clusters,
+                                        iters=self.iters, seed=self.seed)
+            if cents.shape[0] < self.num_clusters:       # tiny first batch
+                pad = np.zeros((self.num_clusters - cents.shape[0],
+                                self.dim), np.int8)
+                cents = np.concatenate([cents, pad])
+            self._centroids = cents
+            self.generation += 1
+        else:
+            labels = assign_codes(codes_np, self._centroids)
+        np.add.at(self._sums, labels, codes_np.astype(np.float64))
+        np.add.at(self._counts, labels, 1)
+        return labels
+
+    def remove(self, codes, labels) -> None:
+        """Retire deleted rows (given their codes AND labels) from the sums."""
+        codes_np = np.asarray(codes, np.int8)
+        labels = np.asarray(labels, np.int32)
+        np.subtract.at(self._sums, labels, codes_np.astype(np.float64))
+        np.subtract.at(self._counts, labels, 1)
+
+    def refresh(self) -> None:
+        """Re-derive centroids from the running sums (no corpus re-read).
+
+        Empty clusters keep their previous centroid so their slot stays
+        warm for future inserts. Bumps `generation` only if a centroid
+        actually moved."""
+        if not self.trained:
+            return
+        occ = self._counts > 0
+        new = self._centroids.astype(np.float64).copy()
+        new[occ] = self._sums[occ] / self._counts[occ, None]
+        new = np.clip(np.rint(new), -128, 127).astype(np.int8)
+        if not np.array_equal(new, self._centroids):
+            self._centroids = new
+            self.generation += 1

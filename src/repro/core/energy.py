@@ -143,6 +143,34 @@ def cost_hierarchical(n_docs: int, dim: int = 512, *, candidates: int | None = N
                  consts=consts, include_norms=include_norms)
 
 
+def cost_cascade(stages, dim: int = 512, *, batch: int = 1,
+                 consts=PAPER_28NM,
+                 include_norms: bool = False) -> CostBreakdown:
+    """Measured-counts cost of ONE query of an N-stage retrieval cascade.
+
+    `stages` is a launch's per-stage ledger — engine.SchedulePlan.stages,
+    i.e. objects with `rows` (rows scored per lane), `bits` (operand
+    width), `bytes_hbm` (plane bytes the whole LAUNCH streamed for the
+    stage) and `compares` — so the ledger charges what the schedule
+    ACTUALLY streamed (windowed lanes their window, cluster-pruned lanes
+    their probed blocks, shared-plane stages amortized over `batch`)
+    instead of re-deriving traffic from the `default_candidates`
+    heuristic and a full-corpus scan.
+    """
+    stages = tuple(stages)
+    b = max(1, batch)
+    doc_bits = sum(s.bytes_hbm * 8 for s in stages) / b
+    mac_terms = [(s.rows * dim, s.bits, s.bits) for s in stages]
+    compares = sum(s.compares for s in stages)
+    # The norms sidecar is read once per stage-1-scored row (4-bit stages
+    # rank on the approximate cosine key; the exact stage re-reads its
+    # candidates' norms, already counted in its rows).
+    norm_rows = sum(s.rows for s in stages if s.bits == 4)
+    return _cost(norm_rows, dim, doc_bits_read=doc_bits,
+                 mac_terms=mac_terms, compares=compares,
+                 consts=consts, include_norms=include_norms)
+
+
 # ---------------------------------------------------------------------------
 # Paper-figure helpers
 # ---------------------------------------------------------------------------

@@ -1,31 +1,39 @@
-"""Batch-native retrieval engine: ONE two-stage core behind every variant.
+"""Batch-native retrieval engine: ONE staged cascade behind every variant.
 
 The paper's memory-access argument — stream the MSB nibble plane once and
 touch full INT8 codes only for candidates — only survives batch serving if
-batching is first-class all the way down. Previously each retrieval variant
-(plain / segment-masked / windowed) vmapped a single-query path, so a mixed
-batch of B tenants streamed the arena planes B times and the kernels ran
-MXU-wasting matvecs. This module is the single batched implementation all
-of them now share, layered as:
+batching is first-class all the way down, and only survives SCALE if the
+first full pass itself can be pruned. This module is the single batched
+implementation every retrieval variant shares, layered as:
 
   policy   — WHICH rows each batch lane may touch, expressed as data:
              `PlainPolicy` (every row), `MaskedPolicy` (rows whose arena
              owner matches the lane's tenant), `WindowedPolicy` (a per-lane
-             contiguous arena window, masked inside the window). Adding a
-             visibility rule means adding a policy, not a retrieval path.
-  schedule — the shared two-stage body `_two_stage_batched`: batched
-             stage-1 scan over the policy's row view, per-lane candidate
-             top-C, batched stage-2 gather + exact INT8 rescore, metric
-             rerank (non-division comparator for cosine, top-k for MIPS).
-  backend  — the three stage primitives the schedule calls, selected by
+             contiguous arena window), `ClusterPolicy` (rows in the
+             lane's top-`nprobe` clusters of an IVF-style INT8 centroid
+             codebook — see repro.core.clustering). Adding a visibility
+             rule means adding a policy, not a retrieval path.
+  schedule — an N-stage CASCADE: an ordered tuple of stage specs executed
+             by one batched driver (`_cascade_batched`). Today's stages:
+             `CentroidPrune` (score K centroids, keep the top-P clusters'
+             row blocks), `ApproxScan` (batched INT4 MSB scan over the
+             surviving row view + per-lane candidate top-C), and
+             `ExactRescore` (batched INT8 gather + exact rescore + metric
+             rerank). The paper's two-stage scheme is just the 2-element
+             cascade; the cluster-pruned path is the 3-element one. A new
+             stage (e.g. a binary-sketch pre-prune) is a new spec in
+             `cascade_stages`, not a new retrieval path.
+  backend  — the batched stage primitives the schedule calls, selected by
              `RetrievalConfig.backend`: pure-jnp reference math ("jnp") or
-             the batch-native Pallas TPU kernels ("pallas"). Both are exact
-             integer arithmetic, so they agree bit-for-bit.
+             the batch-native Pallas TPU kernels ("pallas"). Both are
+             exact integer arithmetic, so they agree bit-for-bit.
 
-Stage 1 for the plane-scan policies is a TRUE matmul — (N, D/2) plane x
-(D/2, B) query panel — so the doc planes are streamed from HBM once per
-BATCH instead of once per query (`SchedulePlan` carries the exact analytic
-byte counts; benchmarks/retrieval_bench.py measures the wall-clock side).
+Stage-1 row views come in three shapes: the shared plane (a TRUE
+(N, D/2) x (D/2, B) matmul — doc planes stream from HBM once per BATCH),
+per-lane contiguous windows, and per-lane BLOCK GATHERS (the cluster
+prune's output: only blocks of selected clusters are streamed, via scalar-
+prefetch on the Pallas backend). `SchedulePlan` carries exact analytic
+byte counts per stage; benchmarks/retrieval_bench.py measures wall-clock.
 
 The legacy entry points in repro.core.retrieval are thin wrappers that
 build a policy and call this engine.
@@ -50,8 +58,8 @@ MASKED_SCORE = jnp.int32(-(2 ** 31 - 1))
 
 
 # ---------------------------------------------------------------------------
-# Membership / window policies (pytrees: the TYPE selects the code path,
-# the leaves are device data, so jit specializes per policy kind only)
+# Membership / window / cluster policies (pytrees: the TYPE selects the code
+# path, the leaves are device data, so jit specializes per policy kind only)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +101,39 @@ class WindowedPolicy:
     window: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ClusterPolicy:
+    """IVF-style centroid prune: lane i scans only its top-`nprobe`
+    clusters' row blocks (and, within them, only rows it owns).
+
+    The arena rows are covered by fixed-size blocks of `block_rows` rows;
+    `cluster_blocks` lists, per cluster, the ids of the blocks holding
+    that cluster's rows (-1 padding): shape (K, MB) when the table is
+    shared by every lane (single corpus), or (B, K, MB) when each lane
+    has its own view (multi-tenant: lane i's table only lists blocks
+    holding rows of ITS tenant, so foreign clusters read as empty and are
+    never probed). Stage 0 scores the K centroids (same batched INT4
+    kernel as stage 1 — the codebook is just another nibble plane), keeps
+    the top `nprobe` valid clusters per lane, and expands their blocks
+    into an explicit per-lane row view for the INT4 scan — so stage-1
+    bytes drop from O(N) per batch to O(B * nprobe * rows_per_cluster).
+
+    owner/tenant_ids mask exactly like MaskedPolicy (single-corpus callers
+    pass zeros for both, which makes every gathered row visible).
+    `nprobe`, `block_rows` are static; `nprobe` must be <= K and the
+    expanded view must hold at least cfg.k rows.
+    """
+
+    owner: jax.Array            # (N,) int32
+    tenant_ids: jax.Array       # (B,) int32
+    labels: jax.Array           # (N,) int32 row -> cluster (-1 free/dead)
+    centroid_msb: jax.Array     # (K, D//2) uint8 packed centroid nibbles
+    centroid_norms: jax.Array   # (K,) int32 centroid squared norms
+    cluster_blocks: jax.Array   # (K, MB) or (B, K, MB) int32, -1 padded
+    nprobe: int
+    block_rows: int
+
+
 jax.tree_util.register_pytree_node(
     PlainPolicy, lambda p: ((), None), lambda _, l: PlainPolicy())
 jax.tree_util.register_pytree_node(
@@ -101,8 +142,14 @@ jax.tree_util.register_pytree_node(
 jax.tree_util.register_pytree_node(
     WindowedPolicy, lambda p: ((p.owner, p.tenant_ids, p.starts), p.window),
     lambda w, l: WindowedPolicy(*l, window=w))
+jax.tree_util.register_pytree_node(
+    ClusterPolicy,
+    lambda p: ((p.owner, p.tenant_ids, p.labels, p.centroid_msb,
+                p.centroid_norms, p.cluster_blocks),
+               (p.nprobe, p.block_rows)),
+    lambda aux, l: ClusterPolicy(*l, nprobe=aux[0], block_rows=aux[1]))
 
-Policy = PlainPolicy | MaskedPolicy | WindowedPolicy
+Policy = PlainPolicy | MaskedPolicy | WindowedPolicy | ClusterPolicy
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +183,24 @@ def stage1_rows_batched_jnp(q_msb: jax.Array,
             + similarity.int_bmm(hi, q_msb[:, 1::2]))
 
 
+def stage1_gather_batched_jnp(q_msb: jax.Array, msb_plane: jax.Array,
+                              block_ids: jax.Array, *,
+                              block_rows: int) -> jax.Array:
+    """Block-gathered stage 1 (the cluster prune's row view), reference.
+
+    q_msb (B, D) int8 nibbles; msb_plane (N, D//2) packed; block_ids
+    (B, J) int32 ids of `block_rows`-row plane blocks (already clamped to
+    valid blocks — holes are masked downstream by the caller's member
+    mask). Returns (B, J * block_rows) int32. Rows past the plane's end
+    (a final partial block) score as zero rows — `bitplanar.gather_blocks`
+    owns that convention, shared with the Pallas kernel's zero-padded
+    plane, so the backends stay bit-equal even on the padding that
+    masking later discards.
+    """
+    gathered, _ = bitplanar.gather_blocks(msb_plane, block_ids, block_rows)
+    return stage1_rows_batched_jnp(q_msb, gathered)
+
+
 def stage2_rows_batched_jnp(q: jax.Array, msb_rows: jax.Array,
                             lsb_rows: jax.Array) -> jax.Array:
     """Exact INT8 rescoring of gathered per-lane candidate rows.
@@ -148,19 +213,47 @@ def stage2_rows_batched_jnp(q: jax.Array, msb_rows: jax.Array,
     return similarity.int_bmm(docs.reshape(bsz, c, 2 * d2), q)
 
 
-def stage_fns(backend: str):
-    """The schedule's three batched primitives for a backend:
-    (stage1 shared-plane matmul, stage1 per-lane rows, stage2 rescore)."""
+@dataclasses.dataclass(frozen=True)
+class StageFns:
+    """The cascade's batched primitives for one backend.
+
+    plane:    stage-1 shared-plane matmul            (B, D) x (N, D/2)
+    rows:     stage-1 per-lane materialized rows     (B, D) x (B, W, D/2)
+    gather:   stage-1 per-lane block gather          (B, D) x plane + ids
+    centroid: stage-0 codebook scoring (the codebook is a nibble plane,
+              so this is the plane matmul applied to (K, D/2))
+    exact:    stage-2 INT8 rescore of gathered candidates
+    """
+
+    plane: object
+    rows: object
+    gather: object
+    centroid: object
+    exact: object
+
+
+def stage_fns(backend: str) -> StageFns:
     if backend == "pallas":
         from repro.kernels import ops as kops
-        return (kops.stage1_scores_batched, kops.stage1_scores_rows,
-                kops.stage2_scores_batched)
-    return (stage1_plane_batched_jnp, stage1_rows_batched_jnp,
-            stage2_rows_batched_jnp)
+        return StageFns(plane=kops.stage1_scores_batched,
+                        rows=kops.stage1_scores_rows,
+                        gather=kops.stage1_scores_gather,
+                        centroid=kops.centroid_scores_batched,
+                        exact=kops.stage2_scores_batched)
+
+    def _gather(q_msb, plane, block_ids, block_rows):
+        return stage1_gather_batched_jnp(q_msb, plane, block_ids,
+                                         block_rows=block_rows)
+
+    return StageFns(plane=stage1_plane_batched_jnp,
+                    rows=stage1_rows_batched_jnp,
+                    gather=_gather,
+                    centroid=stage1_plane_batched_jnp,
+                    exact=stage2_rows_batched_jnp)
 
 
 # ---------------------------------------------------------------------------
-# The shared two-stage schedule
+# The cascade schedule
 # ---------------------------------------------------------------------------
 
 def _vslice(arr: jax.Array, starts: jax.Array, window: int) -> jax.Array:
@@ -170,106 +263,261 @@ def _vslice(arr: jax.Array, starts: jax.Array, window: int) -> jax.Array:
 
 
 def _candidate_budget(cfg: RetrievalConfig, num_docs: int,
-                      window: int | None) -> int:
+                      view_rows: int | None) -> int:
     """Stage-2 budget C (the single source both the schedule and `plan`
-    use). The windowed budget is the SAME as the full-scan one — clamped
-    to the window, in which case every in-window row is a candidate and
-    the tenant is rescored exhaustively — so results never depend on which
-    code path the arena's fragmentation state selects."""
+    use). A restricted view's budget is the SAME as the full-scan one —
+    clamped to the view (window or gathered probe rows), in which case
+    every visible row is a candidate and the view is rescored
+    exhaustively — so results never depend on which code path the arena's
+    layout state selects."""
     c = cfg.num_candidates(num_docs)
-    if window is not None:
-        c = min(c, window)
+    if view_rows is not None:
+        c = min(c, view_rows)
     return c
 
 
-def _two_stage_batched(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
-                       policy: Policy, cfg: RetrievalConfig
-                       ) -> RetrievalResult:
-    """The one batched two-stage body every retrieval variant runs.
+def probe_rows(policy: ClusterPolicy) -> int:
+    """Static per-lane row count of the cluster policy's gathered view."""
+    max_blocks = policy.cluster_blocks.shape[-1]
+    return min(policy.nprobe,
+               policy.centroid_msb.shape[0]) * max_blocks * policy.block_rows
+
+
+@dataclasses.dataclass
+class _CascadeState:
+    """The currency cascade stages refine: WHICH rows are still alive.
+
+    rows:   (B, R) explicit global row ids of the current view (-1 holes),
+            or None when the view is implicit (whole plane / window).
+    member: visibility mask aligned with the view (None = all visible).
+    block_ids: (B, J) clamped block ids backing `rows` when the view is a
+            block gather (the scalar-prefetch kernel's operand).
+    result: the final RetrievalResult, set by the terminal stage.
+    """
+
+    rows: jax.Array | None = None
+    member: jax.Array | None = None
+    block_ids: jax.Array | None = None
+    result: RetrievalResult | None = None
+
+
+@dataclasses.dataclass
+class _CascadeCtx:
+    """Per-launch invariants every stage reads."""
+
+    query_codes: jax.Array
+    q_msb: jax.Array
+    db: bitplanar.BitPlanarDB
+    policy: Policy
+    cfg: RetrievalConfig
+    fns: StageFns
+
+
+@dataclasses.dataclass(frozen=True)
+class CentroidPrune:
+    """Stage 0: score the K centroids, keep the top-`nprobe` clusters'
+    blocks, and expand them into an explicit per-lane row view."""
+
+    nprobe: int
+
+    def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
+        pol = ctx.policy
+        n = ctx.db.num_docs
+        k_clusters = pol.centroid_msb.shape[0]
+        nprobe = min(self.nprobe, k_clusters)
+        scores = ctx.fns.centroid(ctx.q_msb, pol.centroid_msb)   # (B, K)
+        table = pol.cluster_blocks
+        # A cluster with no blocks (empty for this lane's tenant) must not
+        # spend a probe: its first block id is -1.
+        if table.ndim == 2:
+            valid = (table[:, 0] >= 0)[None, :]
+        else:
+            valid = table[:, :, 0] >= 0
+        if ctx.cfg.metric == "cosine":
+            key = similarity.cosine_key_f32(scores, pol.centroid_norms)
+            key = jnp.where(valid, key, -jnp.inf)
+        else:
+            key = jnp.where(valid, scores, INT32_MIN)
+        _, top_clusters = jax.lax.top_k(key, nprobe)             # (B, P)
+        if table.ndim == 2:
+            blocks = jnp.take(table, top_clusters, axis=0)       # (B, P, MB)
+        else:
+            blocks = jnp.take_along_axis(
+                table, top_clusters[:, :, None], axis=1)
+        b, _, max_blocks = blocks.shape
+        blocks = blocks.reshape(b, -1)                           # (B, J)
+        br = pol.block_rows
+        clamped = jnp.maximum(blocks, 0)
+        # Row ids come from the SAME expansion the gather backends use
+        # (bitplanar.expand_block_rows), so the prune's bookkeeping can
+        # never desynchronize from what stage 1 actually streams.
+        rows = bitplanar.expand_block_rows(clamped, br)
+        hole = jnp.repeat(blocks < 0, br, axis=1) | (rows >= n)
+        rows = jnp.where(hole, -1, rows)
+        safe = jnp.maximum(rows, 0)
+        own = jnp.take(pol.owner, safe, axis=0)
+        # A block at a cluster boundary is listed under BOTH clusters; a
+        # row is kept only through its OWN cluster's entry, so a row can
+        # never appear twice in the view (duplicates would waste candidate
+        # slots and could surface one doc twice in the final top-k).
+        owning = jnp.repeat(jnp.repeat(top_clusters, max_blocks, axis=1),
+                            br, axis=1)                          # (B, R)
+        member = (~hole & (own == pol.tenant_ids[:, None])
+                  & (pol.tenant_ids >= 0)[:, None]
+                  & (jnp.take(pol.labels, safe, axis=0) == owning))
+        return dataclasses.replace(state, rows=rows, member=member,
+                                   block_ids=clamped)
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproxScan:
+    """Stage 1: batched INT4 MSB scan over the surviving row view, then
+    per-lane candidate top-C (the approximate-retrieval stage)."""
+
+    def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
+        db, policy, cfg = ctx.db, ctx.policy, ctx.cfg
+        n = db.num_docs
+        member = state.member
+        if isinstance(policy, WindowedPolicy):
+            if policy.window < cfg.k:
+                raise ValueError(f"window {policy.window} < k={cfg.k}: "
+                                 "top-k over a window needs window >= k")
+            c = _candidate_budget(cfg, n, policy.window)
+            starts = jnp.clip(policy.starts, 0,
+                              max(n - policy.window, 0)).astype(jnp.int32)
+            msb_view = _vslice(db.msb_plane, starts, policy.window)
+            norms = _vslice(db.norms_sq, starts, policy.window)
+            owner_view = _vslice(policy.owner, starts, policy.window)
+            member = ((owner_view == policy.tenant_ids[:, None])
+                      & (policy.tenant_ids >= 0)[:, None])
+            scores = ctx.fns.rows(ctx.q_msb, msb_view)         # (B, W) int32
+            base = starts[:, None]
+        elif state.rows is not None:
+            # Gathered view (the centroid prune's output): stream only the
+            # selected blocks. `rows` maps view-local -> global slot ids.
+            r = state.rows.shape[1]
+            if r < cfg.k:
+                raise ValueError(f"gathered view holds {r} rows < k="
+                                 f"{cfg.k}: raise nprobe or block_rows")
+            c = _candidate_budget(cfg, n, r)
+            scores = ctx.fns.gather(ctx.q_msb, db.msb_plane,
+                                    state.block_ids,
+                                    block_rows=policy.block_rows)
+            norms = jnp.take(db.norms_sq, jnp.maximum(state.rows, 0),
+                             axis=0)
+            base = None
+        else:
+            c = _candidate_budget(cfg, n, None)
+            scores = ctx.fns.plane(ctx.q_msb, db.msb_plane)    # (B, N) int32
+            norms = db.norms_sq[None, :]
+            if isinstance(policy, MaskedPolicy):
+                member = ((policy.owner[None, :]
+                           == policy.tenant_ids[:, None])
+                          & (policy.tenant_ids >= 0)[:, None])
+            base = None
+
+        if cfg.metric == "cosine":
+            # Approximate cosine key; norms are tiny sidecar reads (the
+            # paper stores doc norms in DRAM alongside the planes).
+            # Tombstoned rows carry norm 0 (key 0), so even an
+            # inconsistent membership mask cannot let a dead row win.
+            key1 = similarity.cosine_key_f32(scores, norms)
+            if member is not None:
+                key1 = jnp.where(member, key1, -jnp.inf)
+        else:
+            key1 = scores if member is None else jnp.where(member, scores,
+                                                           INT32_MIN)
+        _, cand_local = jax.lax.top_k(key1, c)                 # (B, C) view
+        if state.rows is not None:
+            cand = jnp.take_along_axis(state.rows, cand_local, axis=1)
+        elif base is not None:
+            cand = cand_local + base
+        else:
+            cand = cand_local
+        cand_member = (None if member is None else
+                       jnp.take_along_axis(member, cand_local, axis=1))
+        return dataclasses.replace(state, rows=cand, member=cand_member,
+                                   block_ids=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactRescore:
+    """Terminal stage: batched gather of the candidates' full INT8 codes,
+    exact rescore, metric rerank (non-division comparator for cosine,
+    top-k for MIPS)."""
+
+    def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
+        db, cfg = ctx.db, ctx.cfg
+        cand, cand_member = state.rows, state.member
+        # Candidate rows are gathered from the FULL planes by global id,
+        # so the LSB plane is never sliced and restricted views re-read
+        # only C rows. Holes (-1) clamp to row 0 and are pinned below
+        # every real candidate by the membership mask.
+        safe = jnp.maximum(cand, 0)
+        msb_rows = jnp.take(db.msb_plane, safe, axis=0)        # (B, C, D//2)
+        lsb_rows = jnp.take(db.lsb_plane, safe, axis=0)
+        exact = ctx.fns.exact(ctx.query_codes, msb_rows, lsb_rows)
+        cand_norms = jnp.take(db.norms_sq, safe, axis=0)
+        if cand_member is not None:
+            # Out-of-segment candidates pin to (MASKED_SCORE, 1) so the
+            # integer rerank comparator ranks them below every in-segment
+            # candidate.
+            exact = jnp.where(cand_member, exact, MASKED_SCORE)
+            cand_norms = jnp.where(cand_member, cand_norms, 1)
+
+        if cfg.metric == "cosine":
+            local, top_scores = jax.vmap(
+                lambda s, nn: similarity.rerank_dense_comparator(s, nn,
+                                                                 cfg.k)
+            )(exact, cand_norms)
+        else:
+            top_scores, local = jax.lax.top_k(exact, cfg.k)
+
+        indices = jnp.take_along_axis(cand, local, axis=1)
+        if cand_member is None:
+            result = RetrievalResult(indices=indices, scores=top_scores,
+                                     candidate_indices=cand)
+        else:
+            valid = jnp.take_along_axis(cand_member, local, axis=1)
+            result = RetrievalResult(
+                indices=jnp.where(valid, indices, -1),
+                scores=jnp.where(valid, top_scores, 0),
+                candidate_indices=jnp.where(cand_member, cand, -1))
+        return dataclasses.replace(state, result=result)
+
+
+def cascade_stages(policy: Policy, cfg: RetrievalConfig) -> tuple:
+    """The stage specs one launch will run, selected by policy type.
+
+    The two-stage scheme is the 2-element cascade; the cluster-pruned
+    path prepends the centroid prune. Future stages (e.g. a binary-sketch
+    pre-prune between prune and scan) slot in here.
+    """
+    if isinstance(policy, ClusterPolicy):
+        return (CentroidPrune(policy.nprobe), ApproxScan(), ExactRescore())
+    return (ApproxScan(), ExactRescore())
+
+
+def _cascade_batched(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                     policy: Policy, cfg: RetrievalConfig
+                     ) -> RetrievalResult:
+    """The one batched cascade driver every retrieval variant runs.
 
     query_codes: (B, D) int8. Returns a batched RetrievalResult whose
     indices are global row/slot ids (-1 for lanes' unfillable positions
     under masking policies).
     """
-    n = db.num_docs
-    c = _candidate_budget(cfg, n, policy.window
-                          if isinstance(policy, WindowedPolicy) else None)
-    s1_plane, s1_rows, s2_rows = stage_fns(cfg.backend)
-    q_msb = quantization.msb_nibble(query_codes)
-
-    # ---- Stage 1: batched approximate scoring over the policy's row view.
-    if isinstance(policy, WindowedPolicy):
-        if policy.window < cfg.k:
-            raise ValueError(f"window {policy.window} < k={cfg.k}: top-k "
-                             f"over a window needs window >= k")
-        starts = jnp.clip(policy.starts, 0,
-                          max(n - policy.window, 0)).astype(jnp.int32)
-        msb_view = _vslice(db.msb_plane, starts, policy.window)
-        norms = _vslice(db.norms_sq, starts, policy.window)
-        owner_view = _vslice(policy.owner, starts, policy.window)
-        member = ((owner_view == policy.tenant_ids[:, None])
-                  & (policy.tenant_ids >= 0)[:, None])
-        scores = s1_rows(q_msb, msb_view)                  # (B, W) int32
-        base = starts[:, None]
-    else:
-        scores = s1_plane(q_msb, db.msb_plane)             # (B, N) int32
-        norms = db.norms_sq[None, :]
-        if isinstance(policy, MaskedPolicy):
-            member = ((policy.owner[None, :] == policy.tenant_ids[:, None])
-                      & (policy.tenant_ids >= 0)[:, None])
-        else:
-            member = None
-        base = None
-
-    if cfg.metric == "cosine":
-        # Approximate cosine key; norms are tiny sidecar reads (the paper
-        # stores doc norms in DRAM alongside the planes). Tombstoned rows
-        # carry norm 0 (key 0), so even an inconsistent membership mask
-        # cannot let a dead row win.
-        key1 = similarity.cosine_key_f32(scores, norms)
-        if member is not None:
-            key1 = jnp.where(member, key1, -jnp.inf)
-    else:
-        key1 = scores if member is None else jnp.where(member, scores,
-                                                       INT32_MIN)
-    _, cand_local = jax.lax.top_k(key1, c)                 # (B, C) view rows
-
-    # ---- Stage 2: batched exact INT8 rescoring of the candidates only.
-    # Candidate rows are gathered from the FULL planes by global id, so the
-    # LSB plane is never sliced and the windowed path re-reads only C rows.
-    cand = cand_local if base is None else cand_local + base
-    cand_member = (None if member is None else
-                   jnp.take_along_axis(member, cand_local, axis=1))
-    msb_rows = jnp.take(db.msb_plane, cand, axis=0)        # (B, C, D//2)
-    lsb_rows = jnp.take(db.lsb_plane, cand, axis=0)
-    exact = s2_rows(query_codes, msb_rows, lsb_rows)       # (B, C) int32
-    cand_norms = jnp.take(db.norms_sq, cand, axis=0)
-    if cand_member is not None:
-        # Out-of-segment candidates pin to (MASKED_SCORE, 1) so the integer
-        # rerank comparator ranks them below every in-segment candidate.
-        exact = jnp.where(cand_member, exact, MASKED_SCORE)
-        cand_norms = jnp.where(cand_member, cand_norms, 1)
-
-    # ---- Metric rerank (per lane; C is small).
-    if cfg.metric == "cosine":
-        local, top_scores = jax.vmap(
-            lambda s, nn: similarity.rerank_dense_comparator(s, nn, cfg.k)
-        )(exact, cand_norms)
-    else:
-        top_scores, local = jax.lax.top_k(exact, cfg.k)
-
-    indices = jnp.take_along_axis(cand, local, axis=1)
-    if cand_member is None:
-        return RetrievalResult(indices=indices, scores=top_scores,
-                               candidate_indices=cand)
-    valid = jnp.take_along_axis(cand_member, local, axis=1)
-    return RetrievalResult(
-        indices=jnp.where(valid, indices, -1),
-        scores=jnp.where(valid, top_scores, 0),
-        candidate_indices=jnp.where(cand_member, cand, -1))
+    ctx = _CascadeCtx(query_codes=query_codes,
+                      q_msb=quantization.msb_nibble(query_codes),
+                      db=db, policy=policy, cfg=cfg,
+                      fns=stage_fns(cfg.backend))
+    state = _CascadeState()
+    for stage in cascade_stages(policy, cfg):
+        state = stage.run(state, ctx)
+    return state.result
 
 
-retrieve_batched = jax.jit(_two_stage_batched, static_argnames=("cfg",))
+retrieve_batched = jax.jit(_cascade_batched, static_argnames=("cfg",))
 
 
 # ---------------------------------------------------------------------------
@@ -277,26 +525,52 @@ retrieve_batched = jax.jit(_two_stage_batched, static_argnames=("cfg",))
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """One cascade stage's exact analytic ledger for one batched launch.
+
+    rows is per LANE (what one query's schedule scores); bytes_hbm is the
+    total plane bytes the LAUNCH streams from HBM for this stage (shared-
+    plane stages stream once per batch, per-lane views scale with B);
+    bits is the operand width of the stage's MACs; compares is the
+    per-lane comparison count the stage's select/rerank performs.
+    """
+
+    name: str
+    rows: int
+    bits: int
+    bytes_hbm: int
+    compares: int
+
+
+@dataclasses.dataclass(frozen=True)
 class SchedulePlan:
     """What one batched launch will stream, computed exactly (no timers).
 
-    stage1_bytes is the batched engine's doc-plane traffic; for the
-    plane-scan policies the plane is streamed ONCE per batch, so it does
-    not scale with `batch` — stage1_bytes_vmapped is what the old
-    one-query-at-a-time path streamed for the same work.
+    `stages` is the per-stage ledger (prune/approx/exact for the cluster
+    cascade, approx/exact for the two-stage kinds) — the measured-counts
+    feed for energy.cost_cascade. The flat stage1_* / stage2_* fields are
+    the approx/exact stages' totals, kept because schedulers and serving
+    ledgers read them directly: stage1_bytes is the batched engine's
+    doc-plane traffic (for the plane-scan policies the plane is streamed
+    ONCE per batch, so it does not scale with `batch`);
+    stage1_bytes_vmapped is what the old one-query-at-a-time full-scan
+    path streamed for the same work.
     """
 
-    kind: Literal["plain", "masked", "windowed"]
+    kind: Literal["plain", "masked", "windowed", "cluster"]
     batch: int
-    rows_scanned: int          # stage-1 rows per lane (N, or the window)
+    rows_scanned: int          # stage-1 rows per lane (N, window, or probe)
     candidates: int            # stage-2 budget C per lane
     stage1_bytes: int          # batched kernel: MSB-plane bytes from HBM
     stage1_bytes_vmapped: int  # the vmapped-scalar path, for comparison
     stage2_bytes: int          # gathered candidate rows (MSB+LSB planes)
+    stages: tuple[StagePlan, ...] = ()
 
 
 def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
-         kind: str = "plain", window: int | None = None) -> SchedulePlan:
+         kind: str = "plain", window: int | None = None,
+         num_clusters: int | None = None,
+         view_rows: int | None = None) -> SchedulePlan:
     """Analytic schedule for one launch of the engine.
 
     For "plain"/"masked" every lane scans the shared plane: the batched
@@ -304,24 +578,47 @@ def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
     while the vmapped-scalar path fetched it once per QUERY (B*N*D/2).
     For "windowed" each lane streams its own window, so bytes scale with B
     either way — the win there is one launch + per-tenant work only.
+    For "cluster" each lane streams only its `view_rows` gathered probe
+    rows (O(N * nprobe / num_clusters) instead of O(N)) after a stage-0
+    pass over the `num_clusters`-row centroid plane (streamed once per
+    batch — the codebook is tiny and resident).
     """
+    d2 = dim // 2
     if kind == "windowed":
         if window is None:
             raise ValueError("windowed plan needs a window")
         rows = min(window, num_docs)
-        s1 = batch * rows * (dim // 2)
+        s1 = batch * rows * d2
         s1_vmapped = s1
+        c = _candidate_budget(cfg, num_docs, window)
+        stages = ()
+    elif kind == "cluster":
+        if num_clusters is None or view_rows is None:
+            raise ValueError("cluster plan needs num_clusters and view_rows")
+        rows = view_rows
+        s1 = batch * rows * d2
+        s1_vmapped = batch * num_docs * d2     # old path: full scan per query
+        c = _candidate_budget(cfg, num_docs, view_rows)
+        stages = (StagePlan(name="prune", rows=num_clusters, bits=4,
+                            bytes_hbm=num_clusters * d2,
+                            compares=num_clusters),)
     else:
         if window is not None:
             raise ValueError(f"{kind} plan does not take a window")
         rows = num_docs
-        s1 = rows * (dim // 2)
+        s1 = rows * d2
         s1_vmapped = batch * s1
-    c = _candidate_budget(cfg, num_docs, window)
+        c = _candidate_budget(cfg, num_docs, None)
+        stages = ()
+    s2 = batch * c * dim
+    stages += (StagePlan(name="approx", rows=rows, bits=4, bytes_hbm=s1,
+                         compares=rows),
+               StagePlan(name="exact", rows=c, bits=8, bytes_hbm=s2,
+                         compares=c * c))
     return SchedulePlan(kind=kind, batch=batch, rows_scanned=rows,
                         candidates=c, stage1_bytes=s1,
                         stage1_bytes_vmapped=s1_vmapped,
-                        stage2_bytes=batch * c * dim)
+                        stage2_bytes=s2, stages=stages)
 
 
 # ---------------------------------------------------------------------------
@@ -334,7 +631,7 @@ def _lane(res: RetrievalResult, i: int) -> RetrievalResult:
 
 @dataclasses.dataclass(frozen=True)
 class RetrievalEngine:
-    """Owns backend selection and the two-stage schedule for one config.
+    """Owns backend selection and the cascade schedule for one config.
 
     One engine (and thus one compiled program per batch shape and policy
     kind) serves every caller: the thin wrappers in repro.core.retrieval,
@@ -358,7 +655,14 @@ class RetrievalEngine:
                  policy: Policy = PlainPolicy()) -> SchedulePlan:
         """The analytic SchedulePlan for one launch against `db`."""
         kind = {PlainPolicy: "plain", MaskedPolicy: "masked",
-                WindowedPolicy: "windowed"}[type(policy)]
+                WindowedPolicy: "windowed",
+                ClusterPolicy: "cluster"}[type(policy)]
         window = policy.window if isinstance(policy, WindowedPolicy) else None
+        if isinstance(policy, ClusterPolicy):
+            num_clusters = policy.centroid_msb.shape[0]
+            view_rows = probe_rows(policy)
+        else:
+            num_clusters = view_rows = None
         return plan(self.cfg, num_docs=db.num_docs, dim=db.dim, batch=batch,
-                    kind=kind, window=window)
+                    kind=kind, window=window, num_clusters=num_clusters,
+                    view_rows=view_rows)

@@ -45,7 +45,8 @@ def pad_database(db: bitplanar.BitPlanarDB, num_shards: int) -> bitplanar.BitPla
     pad = (-n) % num_shards
     if pad == 0:
         return db
-    zpad = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    def zpad(a):
+        return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
     return bitplanar.BitPlanarDB(
         msb_plane=zpad(db.msb_plane), lsb_plane=zpad(db.lsb_plane),
         norms_sq=zpad(db.norms_sq), scale=db.scale)
@@ -76,7 +77,8 @@ def _tournament_retrieve(q: jax.Array, msb_plane: jax.Array,
     offset = shard_id * n_local
     c = min(cfg.num_candidates(n_global), n_global)
     c_local = min(c, n_local)
-    s1_plane, _, s2_rows = stage_fns(cfg.backend)
+    fns = stage_fns(cfg.backend)
+    s1_plane, s2_rows = fns.plane, fns.exact
 
     # ---- Stage 1: local batched approximate scoring + local proposals.
     q_msb = quantization.msb_nibble(q)

@@ -145,6 +145,47 @@ def int4_retrieve(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
                            candidate_indices=idx)
 
 
+def cluster_pruned_retrieve(query_codes: jax.Array,
+                            db: bitplanar.BitPlanarDB, codebook,
+                            cluster_blocks, labels,
+                            cfg: RetrievalConfig, *,
+                            nprobe: int, block_rows: int,
+                            owner: jax.Array | None = None,
+                            tenant_ids: jax.Array | None = None
+                            ) -> RetrievalResult:
+    """Cluster-pruned cascade over one DB: (B, D) int8 queries, ONE launch.
+
+    The 3-stage cascade (centroid prune -> gathered INT4 scan -> exact
+    INT8 rescore): stage 0 scores the `codebook`'s K centroids
+    (repro.core.clustering.ClusterCodebook), keeps each lane's top-
+    `nprobe` clusters, and stage 1 streams ONLY those clusters' row
+    blocks (`cluster_blocks`, from clustering.block_table; `labels` is
+    the row -> cluster map the prune uses to keep each row visible only
+    through its own cluster's block entry) — stage-1 bytes drop from
+    O(N) to O(N * nprobe / K) per lane while stage 2 still rescores
+    exactly. Single-corpus callers omit owner/tenant_ids (every gathered
+    row is visible); arena callers pass them for segment masking,
+    exactly as in the masked variants.
+    """
+    query_codes = jnp.asarray(query_codes)
+    b = query_codes.shape[0]
+    n = db.num_docs
+    if (owner is None) != (tenant_ids is None):
+        raise ValueError("owner and tenant_ids must be passed together "
+                         "(segment masking needs both) or both omitted "
+                         "(single corpus: every row visible)")
+    if owner is None:
+        owner = jnp.zeros((n,), jnp.int32)
+        tenant_ids = jnp.zeros((b,), jnp.int32)
+    policy = _engine.ClusterPolicy(
+        owner=owner, tenant_ids=jnp.asarray(tenant_ids, jnp.int32),
+        labels=jnp.asarray(labels, jnp.int32),
+        centroid_msb=codebook.msb_plane, centroid_norms=codebook.norms_sq,
+        cluster_blocks=jnp.asarray(cluster_blocks, jnp.int32),
+        nprobe=nprobe, block_rows=block_rows)
+    return _engine.retrieve_batched(query_codes, db, policy, cfg)
+
+
 # ---------------------------------------------------------------------------
 # Segment-masked variants (multi-tenant arenas)
 # ---------------------------------------------------------------------------

@@ -19,7 +19,6 @@ for explicit-collective training loops.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -18,7 +18,6 @@ materialized, so the same code paths serve tests (1 device) and the
 """
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

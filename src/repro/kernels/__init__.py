@@ -1,13 +1,16 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-  stage1_int4  — query-stationary MSB-nibble MIPS over the whole corpus
-  stage2_int8  — exact INT8 rescoring of the gathered candidate set
-  fused_topk   — stage-1 scoring fused with per-block top-k (beyond-paper)
+  stage1_int4   — query-stationary MSB-nibble MIPS over the whole corpus
+  stage1_gather — block-GATHERED stage-1 for the cluster-pruned cascade
+                  (scalar-prefetch DMA: only selected blocks stream)
+  stage2_int8   — exact INT8 rescoring of the gathered candidate set
+  fused_topk    — stage-1 scoring fused with per-block top-k (beyond-paper)
 
 ops.py: jit'd wrappers (interpret on CPU, Mosaic on TPU).
 ref.py: pure-jnp oracles; tests assert exact equality against them.
 """
 from repro.kernels import ops, ref
 from repro.kernels.stage1_int4 import stage1_int4_pallas
+from repro.kernels.stage1_gather import stage1_int4_gather_pallas
 from repro.kernels.stage2_int8 import stage2_int8_pallas
 from repro.kernels.fused_topk import fused_topk_pallas

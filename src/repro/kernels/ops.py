@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_topk as _fk
+from repro.kernels import stage1_gather as _sg
 from repro.kernels import stage1_int4 as _s1
 from repro.kernels import stage2_int8 as _s2
 
@@ -119,6 +120,44 @@ def stage1_scores_rows(q_msb: jax.Array, msb_rows: jax.Array,
     out = _s1.stage1_int4_rows_pallas(q_eo, rows, block_w=block_w,
                                       interpret=_interpret())
     return out[:, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def stage1_scores_gather(q_msb: jax.Array, msb_plane: jax.Array,
+                         block_ids: jax.Array, *,
+                         block_rows: int = _sg.DEFAULT_BLOCK_ROWS
+                         ) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage1_gather_batched_jnp.
+
+    q_msb: (B, D) int8 nibbles; msb_plane: (N, D//2) packed uint8;
+    block_ids: (B, J) int32 ids of `block_rows`-row plane blocks (already
+    clamped to valid blocks). Returns (B, J * block_rows) int32. The
+    gather happens INSIDE the kernel via scalar prefetch — only the
+    selected blocks stream from HBM; rows past N (the plane's zero
+    padding) score 0, matching the jnp reference bit-for-bit.
+
+    When N is not a block_rows multiple the plane is zero-padded HERE,
+    which copies it every launch — serving paths size their arenas to a
+    block multiple (MultiTenantIndex enforces this) so the pad is a
+    no-op and only ad-hoc callers pay it."""
+    plane = _pad_rows(msb_plane, block_rows)
+    q_eo = pack_queries_even_odd(q_msb)
+    return _sg.stage1_int4_gather_pallas(q_eo, plane, block_ids,
+                                         block_rows=block_rows,
+                                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def centroid_scores_batched(q_msb: jax.Array, centroid_msb: jax.Array,
+                            block_k: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+    """Batched centroid scoring for the cascade's stage-0 prune.
+
+    The codebook is stored exactly like the corpus — a packed MSB nibble
+    plane — so this IS the batched stage-1 matmul kernel applied to the
+    (K, D//2) centroid plane: q_msb (B, D) int8 nibbles -> (B, K) int32.
+    The whole codebook is one or two VMEM-resident blocks (K is small),
+    streamed once per batch."""
+    return stage1_scores_batched(q_msb, centroid_msb, block_n=block_k)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c",))

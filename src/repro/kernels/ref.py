@@ -77,6 +77,22 @@ def stage1_rows_batched_ref(q_eo: jax.Array, msb_rows: jax.Array) -> jax.Array:
                       for i in range(msb_rows.shape[0])])
 
 
+def stage1_gather_batched_ref(q_eo: jax.Array, msb_plane: jax.Array,
+                              block_ids: jax.Array,
+                              block_rows: int) -> jax.Array:
+    """Oracle for the block-gathered stage-1 kernel.
+
+    q_eo: (B, 2, D//2); msb_plane: (N, D//2); block_ids: (B, J) int32
+    clamped block ids. Returns (B, J * block_rows) int32; rows past the
+    plane's end score 0 — the row-expansion/zero-pad convention lives in
+    bitplanar.gather_blocks (shared with the kernel's padded plane), so
+    the oracle can only diverge in the scoring math itself."""
+    from repro.core.bitplanar import gather_blocks
+    gathered, _ = gather_blocks(msb_plane, block_ids, block_rows)
+    return jnp.stack([stage1_scores_ref(q_eo[i], gathered[i])
+                      for i in range(block_ids.shape[0])])
+
+
 def stage2_scores_batched_ref(q_eo8: jax.Array, msb_rows: jax.Array,
                               lsb_rows: jax.Array) -> jax.Array:
     """Oracle for the batched stage-2 rescoring kernel.

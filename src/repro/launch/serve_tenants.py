@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import RetrievalConfig, energy, quantize_int8
+from repro.core.clustering import ClusterParams
 from repro.models import embedder, get_model
 from repro.serve import MultiTenantRAGPipeline
 from repro.tenancy import CrossTenantBatchScheduler
@@ -42,6 +43,10 @@ def main(argv=None):
     ap.add_argument("--topk", type=int, default=3)
     ap.add_argument("--generate", action="store_true",
                     help="also run generator answers for the last batch")
+    ap.add_argument("--clusters", type=int, default=0,
+                    help="enable the cluster-pruned cascade with this "
+                         "many centroids (0 = two-stage full scan)")
+    ap.add_argument("--nprobe", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.tenants < 1 or args.capacity < args.burst:
@@ -60,7 +65,10 @@ def main(argv=None):
     pipe = MultiTenantRAGPipeline.create(
         ecfg, eparams, gen_api, gen_params, capacity=args.capacity,
         doc_len=args.doc_len,
-        retrieval_cfg=RetrievalConfig(k=args.topk, metric="cosine"))
+        retrieval_cfg=RetrievalConfig(k=args.topk, metric="cosine"),
+        clusters=(ClusterParams(num_clusters=args.clusters,
+                                nprobe=args.nprobe, block_rows=32)
+                  if args.clusters else None))
     sched = CrossTenantBatchScheduler(pipe.index, max_batch=args.batch)
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
@@ -114,7 +122,16 @@ def main(argv=None):
                 queries += 1
 
     st = pipe.index.arena.stats
-    ledger = energy.cost_hierarchical(pipe.index.capacity, ecfg.pooled_dim)
+    # Charge the rows the last launch ACTUALLY scanned (its SchedulePlan:
+    # the tenant's window or probed cluster blocks) — the arena's full
+    # capacity grossly overstated DRAM bits for windowed/pruned launches.
+    plan = pipe.index.last_plan
+    if plan is not None:
+        ledger = energy.cost_cascade(plan.stages, ecfg.pooled_dim,
+                                     batch=plan.batch)
+    else:
+        ledger = energy.cost_hierarchical(pipe.index.capacity,
+                                          ecfg.pooled_dim)
     print(f"[trace] {args.steps} steps: {ingested} docs ingested "
           f"({st.deletes} tombstoned, {st.compactions} compactions, "
           f"{st.rebuilds} rebuilds), {queries} queries in "

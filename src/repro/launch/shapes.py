@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import ModelConfig
-from repro.models.registry import ModelApi, get_model
+from repro.models.registry import ModelApi
 
 
 @dataclasses.dataclass(frozen=True)

@@ -13,7 +13,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import constrain
 
 NEG_INF = -1e30
 

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
-from repro.models import dense
 from repro.models.common import (ModelConfig, Params, apply_rope, constrain,
                                  cross_entropy_loss, dense_init, embed_init,
                                  rmsnorm, rope_tables, swiglu)

@@ -286,7 +286,8 @@ def decode_step(params: Params, cache: dense.KVCache, tokens: jax.Array,
     pos = (length - 1).astype(jnp.int32)[:, None]
     cos, sin = rope_tables(pos, cfg.hd, cfg.rope_theta)
     blocks, dense_ffn, moe_p, sb, period = _group_params(params, cfg)
-    reshape = lambda a: a.reshape(sb, period, *a.shape[1:])
+    def reshape(a):
+        return a.reshape(sb, period, *a.shape[1:])
     kcs, vcs = reshape(cache.k), reshape(cache.v)
 
     def superblock(h, xs):
@@ -297,11 +298,13 @@ def decode_step(params: Params, cache: dense.KVCache, tokens: jax.Array,
             sub.update(jax.tree.map(lambda a: a[j], fp))
             h, nk, nv = dense.block_decode(sub, h, kc[j], vc[j], length,
                                            cos, sin, cfg)
-            nks.append(nk); nvs.append(nv)
+            nks.append(nk)
+            nvs.append(nv)
         sub = jax.tree.map(lambda a: a[period - 1], bp)
         h, nk, nv = _moe_attn_ffn_decode(sub, mp, h, kc[period - 1],
                                          vc[period - 1], length, cos, sin, cfg)
-        nks.append(nk); nvs.append(nv)
+        nks.append(nk)
+        nvs.append(nv)
         return h, (jnp.stack(nks), jnp.stack(nvs))
 
     x, (ks, vs) = jax.lax.scan(superblock, x,

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import dense, mamba2
 from repro.models.common import (ModelConfig, Params, cross_entropy_loss,
-                                 dense_init, embed_init, rmsnorm, rope_tables)
+                                 dense_init, embed_init, rope_tables)
 
 
 @dataclasses.dataclass
@@ -139,7 +139,8 @@ def decode_step(params: Params, cache: HybridCache, tokens: jax.Array,
     shared = params["shared"]
     apps = num_apps(cfg)
     l = cfg.num_layers
-    grp = lambda a: a.reshape(apps, l // apps, *a.shape[1:])
+    def grp(a):
+        return a.reshape(apps, l // apps, *a.shape[1:])
 
     def superblock(h, xs):
         mp, st, cv, kc, vc = xs

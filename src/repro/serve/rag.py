@@ -147,9 +147,13 @@ class MultiTenantRAGPipeline:
     @classmethod
     def create(cls, emb_cfg, emb_params, gen_api, gen_params, *,
                capacity: int, doc_len: int,
-               retrieval_cfg: RetrievalConfig | None = None):
+               retrieval_cfg: RetrievalConfig | None = None,
+               clusters=None):
+        """clusters: optional repro.core.clustering.ClusterParams —
+        enables the cluster-pruned cascade for this pipeline's index."""
         index = MultiTenantIndex(capacity, emb_cfg.pooled_dim,
-                                 retrieval_cfg or RetrievalConfig())
+                                 retrieval_cfg or RetrievalConfig(),
+                                 clusters=clusters)
         return cls(emb_cfg=emb_cfg, emb_params=emb_params, gen_api=gen_api,
                    gen_params=gen_params, index=index,
                    doc_tokens=np.zeros((capacity, doc_len), np.int32))
@@ -195,14 +199,18 @@ class MultiTenantRAGPipeline:
         # query's scores equally and cannot change its ranking.
         q_codes, _ = quantize_int8(q_emb, per_vector=True)
         res = self.index.retrieve(q_codes, tenant_ids)
-        # Account what the engine's schedule ACTUALLY streams per lane:
-        # the windowed policy scans only each tenant's segment window, not
-        # the whole arena (the full-arena figure was a gross upper bound).
+        # Account what the engine's schedule ACTUALLY streams: the
+        # launch's per-stage SchedulePlan ledger (windowed lanes charge
+        # their window, cluster-pruned lanes their probed blocks, the
+        # centroid plane its K rows) instead of re-deriving traffic from
+        # a full-arena scan and the default-candidates heuristic.
         plan = self.index.last_plan
-        rows = plan.rows_scanned if plan is not None else self.index.capacity
-        cands = plan.candidates if plan is not None else None
-        ledger = energy.cost_hierarchical(rows, q_emb.shape[-1],
-                                          candidates=cands)
+        if plan is not None:
+            ledger = energy.cost_cascade(plan.stages, q_emb.shape[-1],
+                                         batch=plan.batch)
+        else:
+            ledger = energy.cost_hierarchical(self.index.capacity,
+                                              q_emb.shape[-1])
         return res, ledger
 
     def answer(self, tenant_ids, query_tokens: jax.Array, *,

@@ -26,7 +26,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitplanar, quantization
+from repro.core import bitplanar
 
 NEG_INF = -1e30
 

@@ -61,6 +61,11 @@ class Arena:
         self.lsb_plane = jnp.zeros((capacity, dim // 2), jnp.uint8)
         self.norms_sq = jnp.zeros((capacity,), jnp.int32)
         self.owner = jnp.full((capacity,), FREE, jnp.int32)
+        # slot -> cluster label (host-side; -1 = unassigned/free). The
+        # arena is clustering-agnostic storage: labels are written by the
+        # index layer (repro.core.clustering assigns them) and kept in
+        # lockstep with the planes across delete/compact.
+        self.cluster_labels = np.full((capacity,), -1, np.int32)
         self._next = 0                  # bump allocator over virgin slots
         self._tombstones = 0            # dead slots awaiting compaction
         self.generation = 0             # bumped on every mutation
@@ -99,12 +104,14 @@ class Arena:
         """Pack (B, D) int8 codes into free slots for `owner_id`.
 
         Returns the assigned slot ids (B,) int64. O(B) device work — the
-        rest of the slab is untouched (no rebuild)."""
+        rest of the slab is untouched (no rebuild). Cluster labels are a
+        separate second phase (`set_labels`), so a failed insert can
+        never leave labeling half-applied."""
         codes = jnp.asarray(codes)
         if codes.dtype != jnp.int8:
             raise ValueError(f"codes must be int8 (got {codes.dtype}); "
-                             f"float embeddings go through ingest()/"
-                             f"quantize() first")
+                             "float embeddings go through ingest()/"
+                             "quantize() first")
         b, d = codes.shape
         if d != self.dim:
             raise ValueError(f"dim mismatch: arena {self.dim}, rows {d}")
@@ -127,6 +134,32 @@ class Arena:
         self.stats.inserts += b
         return slots
 
+    def set_labels(self, slots, labels) -> None:
+        """Label already-inserted slots with cluster ids (host-side only).
+
+        The index layer assigns labels AFTER a successful insert (so a
+        failed insert can never leave cluster bookkeeping half-updated);
+        this is the API for that second phase."""
+        slots = np.atleast_1d(np.asarray(slots, np.int64))
+        labels = np.asarray(labels, np.int32).reshape(-1)
+        if slots.shape[0] != labels.shape[0]:
+            raise ValueError(f"need one label per slot ({slots.shape[0]}), "
+                             f"got {labels.shape[0]}")
+        if slots.size and (slots.min() < 0 or slots.max() >= self._next):
+            raise IndexError("slot out of allocated range")
+        self.cluster_labels[slots] = labels
+
+    def read_codes(self, slots) -> jnp.ndarray:
+        """Reconstruct the full INT8 codes of `slots` from the planes.
+
+        Off the hot path (cluster bookkeeping on delete, diagnostics):
+        O(rows read), exact inverse of the insert-time packing."""
+        idx = jnp.asarray(np.atleast_1d(np.asarray(slots, np.int64)),
+                          jnp.int32)
+        return bitplanar.reconstruct_int8(
+            jnp.take(self.msb_plane, idx, axis=0),
+            jnp.take(self.lsb_plane, idx, axis=0))
+
     def delete(self, slots) -> None:
         """Tombstone slots: norm 0, planes 0, owner FREE.
 
@@ -145,6 +178,7 @@ class Arena:
         self.lsb_plane = self.lsb_plane.at[idx].set(0)
         self.norms_sq = self.norms_sq.at[idx].set(0)
         self.owner = self.owner.at[idx].set(FREE)
+        self.cluster_labels[slots] = -1
         self.generation += 1
         self._tombstones += newly_dead
         self.stats.deletes += newly_dead
@@ -164,20 +198,25 @@ class Arena:
             live = np.asarray(order, np.int64)
             if live.size and not np.all(own[live] >= 0):
                 raise ValueError("compaction order includes dead slots")
-        l = live.size
+        num_live = live.size
         idx = jnp.asarray(live, jnp.int32)
 
         def repack(arr, fill):
             out = jnp.full_like(arr, fill)
-            return out.at[:l].set(jnp.take(arr, idx, axis=0)) if l else out
+            if num_live:
+                out = out.at[:num_live].set(jnp.take(arr, idx, axis=0))
+            return out
 
         self.msb_plane = repack(self.msb_plane, 0)
         self.lsb_plane = repack(self.lsb_plane, 0)
         self.norms_sq = repack(self.norms_sq, 0)
         self.owner = repack(self.owner, FREE)
+        new_labels = np.full_like(self.cluster_labels, -1)
+        new_labels[:num_live] = self.cluster_labels[live]
+        self.cluster_labels = new_labels
         mapping = np.full(self.capacity, -1, np.int64)
-        mapping[live] = np.arange(l)
-        self._next = l
+        mapping[live] = np.arange(num_live)
+        self._next = num_live
         self._tombstones = 0
         self.generation += 1
         self.stats.compactions += 1

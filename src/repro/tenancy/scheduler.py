@@ -52,6 +52,9 @@ class CrossTenantBatchScheduler:
         # would have streamed one query at a time.
         self.stage1_bytes_streamed = 0
         self.stage1_bytes_vmapped = 0
+        # Per-CASCADE-STAGE ledger: stage name ("prune"/"approx"/"exact")
+        # -> total bytes every flush streamed for that stage.
+        self.stage_bytes: dict[str, int] = {}
 
     def submit(self, tenant_id: int, query_codes) -> int:
         """Enqueue one request; returns a ticket id resolved by flush()."""
@@ -97,6 +100,9 @@ class CrossTenantBatchScheduler:
                 self.stage1_bytes_streamed += plan.stage1_bytes
                 self.stage1_bytes_vmapped += (
                     plan.stage1_bytes_vmapped // plan.batch) * b
+                for s in plan.stages:
+                    self.stage_bytes[s.name] = (
+                        self.stage_bytes.get(s.name, 0) + s.bytes_hbm)
             for i, req in enumerate(group):
                 out[req.request_id] = RetrievalResult(
                     indices=res.indices[i], scores=res.scores[i],

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine, retrieval
+from repro.core import clustering, engine, retrieval
 from repro.tenancy.arena import Arena
 
 
@@ -74,10 +74,23 @@ class TenantTable:
         self._segments[tenant_id] = runs
         return runs
 
-    def compaction_order(self) -> np.ndarray:
+    def compaction_order(self, cluster_labels=None) -> np.ndarray:
         """Live slots grouped by tenant — compacting in this order leaves
-        every tenant as ONE contiguous segment."""
-        order = [s for t in self.tenant_ids for s in self._slots[t]]
+        every tenant as ONE contiguous segment.
+
+        cluster_labels: optional (capacity,) slot -> cluster map; when
+        given, each tenant's slots are additionally grouped by cluster,
+        so every (tenant, cluster) pair lands in a contiguous run — the
+        layout that makes the cascade's selected clusters dense block
+        gathers. Tenant contiguity (the windowed fast path's invariant)
+        is preserved either way."""
+        if cluster_labels is None:
+            order = [s for t in self.tenant_ids for s in self._slots[t]]
+        else:
+            lab = np.asarray(cluster_labels)
+            order = [s for t in self.tenant_ids
+                     for s in sorted(self._slots[t],
+                                     key=lambda sl: (lab[sl], sl))]
         return np.asarray(order, np.int64)
 
     def remap(self, mapping: np.ndarray) -> None:
@@ -99,17 +112,39 @@ class MultiTenantIndex:
 
     def __init__(self, capacity: int, dim: int,
                  cfg: retrieval.RetrievalConfig | None = None,
-                 *, scale: float | None = None):
+                 *, scale: float | None = None,
+                 clusters: clustering.ClusterParams | None = None):
         self.arena = Arena(capacity, dim, scale=scale)
         self.table = TenantTable()
         self.cfg = cfg or retrieval.RetrievalConfig()
         self._engine = engine.RetrievalEngine(self.cfg)
+        # Optional cluster-pruned cascade: an online-maintained codebook
+        # labels every ingested row; batched retrieves then run the
+        # 3-stage cascade (centroid prune -> gathered INT4 scan -> exact
+        # rescore) instead of scanning the whole arena.
+        self.cluster_params = clusters
+        if clusters is not None and capacity % clusters.block_rows:
+            # A partial tail block would force the gather kernel to pad
+            # (= copy) the whole plane on every launch; insist the block
+            # size tiles the arena so the hot path streams in place.
+            raise ValueError(
+                f"block_rows {clusters.block_rows} must divide arena "
+                f"capacity {capacity} (keeps the block-gather kernel's "
+                f"plane un-padded on the query hot path)")
+        self.clusters = (clustering.ClusterIndex(
+            clusters.num_clusters, dim, seed=clusters.seed,
+            iters=clusters.kmeans_iters) if clusters is not None else None)
         # Analytic SchedulePlan of the most recent retrieve() launch —
         # schedulers read this to account bytes streamed per flush.
         self.last_plan: engine.SchedulePlan | None = None
-        # (arena generation, tenant-id bytes) -> windowed-layout or None;
-        # schedulers re-issue the same tenant groupings between mutations.
+        # (arena generation, tenant-id bytes) -> windowed layout /
+        # ClusterPolicy / None; schedulers re-issue the same tenant
+        # groupings between mutations. Entries from older arena
+        # generations are dead weight (cluster entries pin capacity-sized
+        # device buffers), so the cache is dropped wholesale whenever the
+        # arena mutates — see _layout_cache_for_generation.
         self._layout_cache: dict = {}
+        self._layout_cache_gen = -1
 
     # -- ingestion / deletion ------------------------------------------------
 
@@ -123,17 +158,41 @@ class MultiTenantIndex:
     def ingest_codes(self, tenant_id: int, codes) -> np.ndarray:
         slots = self.arena.insert(codes, int(tenant_id))
         self.table.record_insert(tenant_id, slots)
+        if self.clusters is not None:
+            # Assign the new rows online (trains the codebook on the very
+            # first batch) and label the slots; fresh rows land at the
+            # arena tail, so their clusters pick up one extra block until
+            # the next cluster-grouped compaction re-densifies them.
+            # Labeling runs AFTER the insert succeeded, so a failed insert
+            # never leaves the codebook's running sums half-updated.
+            labels = self.clusters.add(np.asarray(codes, np.int8))
+            self.arena.set_labels(slots, labels)
         return slots
 
     def delete(self, tenant_id: int, slots) -> None:
         """Tombstone a tenant's documents (checked against ownership)."""
         self.table.record_delete(tenant_id, slots)
+        if self.clusters is not None:
+            sl = np.unique(np.atleast_1d(np.asarray(slots, np.int64)))
+            labels = self.arena.cluster_labels[sl]
+            live = labels >= 0
+            if live.any():
+                codes = self.arena.read_codes(sl[live])
+                self.clusters.remove(np.asarray(codes), labels[live])
         self.arena.delete(slots)
 
     def compact(self) -> np.ndarray:
-        """Reclaim tombstones; returns old->new slot mapping (-1 = dead)."""
-        mapping = self.arena.compact(self.table.compaction_order())
+        """Reclaim tombstones; returns old->new slot mapping (-1 = dead).
+
+        With clustering enabled the repack order groups each tenant's
+        rows by cluster (tenant contiguity preserved), and the codebook
+        refreshes from its running sums — no corpus re-read."""
+        labels = (self.arena.cluster_labels if self.clusters is not None
+                  else None)
+        mapping = self.arena.compact(self.table.compaction_order(labels))
         self.table.remap(mapping)
+        if self.clusters is not None:
+            self.clusters.refresh()
         return mapping
 
     # -- query ---------------------------------------------------------------
@@ -148,6 +207,16 @@ class MultiTenantIndex:
             self._engine = engine.RetrievalEngine(self.cfg)
         return self._engine
 
+    def _layout_cache_for_generation(self) -> dict:
+        """The layout cache, valid for the CURRENT arena generation only:
+        every mutation invalidates all cached layouts (their device
+        buffers would otherwise accumulate, one dead set per generation,
+        until the size backstop blew the live entries away too)."""
+        if self._layout_cache_gen != self.arena.generation:
+            self._layout_cache.clear()
+            self._layout_cache_gen = self.arena.generation
+        return self._layout_cache
+
     def _contiguous_layout(self, tenant_ids) -> tuple[jnp.ndarray, int] | None:
         """(per-lane segment starts, pow2 window) when every requested
         tenant is ONE contiguous slot run; None when fragmented (then only
@@ -155,9 +224,10 @@ class MultiTenantIndex:
         generation, cfg, tenant-id tuple) — cfg is part of the key because
         the window floor depends on cfg.k, and cfg may be replaced after
         construction."""
-        key = (self.arena.generation, self.cfg, tenant_ids.tobytes())
-        if key in self._layout_cache:
-            return self._layout_cache[key]
+        cache = self._layout_cache_for_generation()
+        key = (self.cfg, tenant_ids.tobytes())
+        if key in cache:
+            return cache[key]
         # window >= k keeps the in-window candidate budget well-posed even
         # for tenants holding fewer than k docs (lanes pad with -1).
         starts, longest = [], max(1, self.cfg.k)
@@ -174,16 +244,76 @@ class MultiTenantIndex:
             if window < self.arena.capacity:          # else: full scan
                 layout = (jnp.asarray(np.asarray(starts, np.int32)),
                           jnp.asarray(tenant_ids, jnp.int32), window)
-        if len(self._layout_cache) > 512:
-            self._layout_cache.clear()
-        self._layout_cache[key] = layout
+        if len(cache) > 512:          # many distinct tid tuples backstop
+            cache.clear()
+        cache[key] = layout
         return layout
 
+    def _cluster_layout(self, tids_host) -> engine.ClusterPolicy | None:
+        """The batch's ClusterPolicy: per-LANE block tables listing, for
+        each cluster, the arena blocks holding that (tenant, cluster)'s
+        rows. Correct for ANY layout (fresh tail inserts and fragmented
+        tenants just list more blocks — recall never depends on when
+        compact() last ran); after cluster-grouped compaction each entry
+        is a dense run. None when clustering is off/untrained or the
+        gathered view could not hold k rows. Cached for the current arena
+        generation per (codebook generation, cfg, tenant-id tuple)."""
+        if self.clusters is None or not self.clusters.trained:
+            return None
+        params = self.cluster_params
+        cache = self._layout_cache_for_generation()
+        key = ("cluster", self.clusters.generation, self.cfg,
+               tids_host.tobytes())
+        if key in cache:
+            return cache[key]
+        labels = self.arena.cluster_labels
+        br = params.block_rows
+        k_clusters = self.clusters.num_clusters
+        tables = {}
+        for t in np.unique(tids_host):
+            if t < 0:
+                continue
+            # restricted to the tenant's own slots, so the table lists
+            # exactly the blocks holding ITS rows — O(S log S) in the
+            # tenant's rows (one vectorized groupby pass), not O(capacity)
+            tables[int(t)] = clustering.block_table(
+                labels, k_clusters, br, pad_pow2=False,
+                rows=np.asarray(self.table.slots(int(t)), np.int64))
+        mb = max((t.shape[1] for t in tables.values()), default=1)
+        mb = 1 << (mb - 1).bit_length()      # pow2-bucket recompiles
+        nprobe = min(params.nprobe, k_clusters)
+        policy = None
+        # The prune must BUY something: when fragmentation inflates the
+        # per-lane gathered view to arena size (many interleaved
+        # single-doc ingests before a compact), the windowed/masked scan
+        # is the cheaper launch — fall back until compact() re-densifies.
+        # The lower bound keeps the in-view top-k well-posed.
+        if max(1, self.cfg.k) <= nprobe * mb * br < self.arena.capacity:
+            table = np.full((len(tids_host), k_clusters, mb), -1, np.int32)
+            for i, t in enumerate(tids_host):
+                if int(t) in tables:
+                    per = tables[int(t)]
+                    table[i, :, :per.shape[1]] = per
+            cb = self.clusters.codebook()
+            policy = engine.ClusterPolicy(
+                owner=self.arena.owner,
+                tenant_ids=jnp.asarray(tids_host, jnp.int32),
+                labels=jnp.asarray(labels),
+                centroid_msb=cb.msb_plane, centroid_norms=cb.norms_sq,
+                cluster_blocks=jnp.asarray(table),
+                nprobe=nprobe, block_rows=br)
+        if len(cache) > 512:          # many distinct tid tuples backstop
+            cache.clear()
+        cache[key] = policy
+        return policy
+
     def retrieve(self, query_codes, tenant_ids) -> retrieval.RetrievalResult:
-        """Segment-masked retrieval; single query or mixed cross-tenant batch.
+        """Per-tenant retrieval; single query or mixed cross-tenant batch.
 
         Chooses the engine POLICY host-side and hands the batch to the one
-        batched two-stage core: a batch takes the windowed fast path (each
+        batched cascade core: with clustering enabled a batch runs the
+        cluster-pruned cascade (each lane streams only its top-nprobe
+        clusters' blocks); otherwise it takes the windowed fast path (each
         lane streams only its tenant's contiguous segment) whenever the
         layout allows — after interleaved ingests fragment a tenant, it
         falls back to the full-arena masked scan until compact() restores
@@ -208,17 +338,20 @@ class MultiTenantIndex:
         # anything else negative is a caller bug that must not match rows.
         bad = tids_host[(tids_host < 0) & (tids_host != retrieval.NO_TENANT)]
         if bad.size:
-            raise ValueError(f"tenant ids must be >= 0 (or NO_TENANT for "
+            raise ValueError("tenant ids must be >= 0 (or NO_TENANT for "
                              f"padding lanes), got {bad.tolist()}")
-        layout = self._contiguous_layout(tids_host)
-        if layout is not None:
-            starts, tids, window = layout
-            policy = engine.WindowedPolicy(owner=self.arena.owner,
-                                           tenant_ids=tids, starts=starts,
-                                           window=window)
-        else:
-            policy = engine.MaskedPolicy(owner=self.arena.owner,
-                                         tenant_ids=jnp.asarray(tids_host))
+        policy = self._cluster_layout(tids_host)
+        if policy is None:
+            layout = self._contiguous_layout(tids_host)
+            if layout is not None:
+                starts, tids, window = layout
+                policy = engine.WindowedPolicy(owner=self.arena.owner,
+                                               tenant_ids=tids,
+                                               starts=starts, window=window)
+            else:
+                policy = engine.MaskedPolicy(
+                    owner=self.arena.owner,
+                    tenant_ids=jnp.asarray(tids_host))
         self.last_plan = self.engine.plan_for(db, len(tids_host), policy)
         return self.engine.retrieve(query_codes, db, policy)
 

@@ -9,7 +9,6 @@ identically to the model under pjit.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

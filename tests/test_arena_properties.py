@@ -1,0 +1,137 @@
+"""Property tests: Arena invariants under random insert/delete/compact.
+
+The arena's contract — stable slot ids, truthful live accounting, owner
+map in lockstep with the planes, cluster labels surviving repacks, slot
+reuse only after compaction — must hold for EVERY interleaving of online
+mutations, not just the sequences the unit tests happen to run. A model
+(slot -> expected owner/codes/label) is replayed against the arena and
+checked after every operation.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis; see requirements.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.tenancy.arena import FREE, Arena, ArenaFull  # noqa: E402
+
+DIM = 16
+CAPACITY = 64
+NUM_TENANTS = 3
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "compact"]),
+              st.integers(0, NUM_TENANTS - 1),   # tenant
+              st.integers(1, 6)),                # rows to insert / delete
+    min_size=1, max_size=40)
+
+
+def make_codes(counter: int, rows: int) -> np.ndarray:
+    """Deterministic distinct int8 rows (content-integrity tracers)."""
+    base = np.arange(DIM, dtype=np.int64) * 31
+    out = [((base + (counter + r) * 17) % 255 - 127) for r in range(rows)]
+    return np.asarray(out, np.int8)
+
+
+def check_model(arena: Arena, model: dict):
+    """model: slot -> (tenant, codes row, label)."""
+    owner = np.asarray(arena.owner)
+    # live-count consistency: the model, the counter, and the owner map
+    # must all agree
+    assert arena.num_live == len(model) == int((owner >= 0).sum())
+    assert 0 <= arena.num_free <= arena.capacity - arena.num_live
+    for slot, (tenant, codes, label) in model.items():
+        assert owner[slot] == tenant
+        assert arena.cluster_labels[slot] == label
+    dead = set(range(arena.capacity)) - set(model)
+    assert (owner[sorted(dead)] == FREE).all()
+    assert (arena.cluster_labels[sorted(dead)] == -1).all()
+    if model:
+        slots = sorted(model)
+        got = np.asarray(arena.read_codes(slots))
+        want = np.stack([model[s][1] for s in slots])
+        np.testing.assert_array_equal(got, want)
+
+
+@given(ops)
+@settings(max_examples=50, deadline=None)
+def test_arena_invariants_under_random_mutation(op_seq):
+    arena = Arena(CAPACITY, DIM)
+    model: dict[int, tuple] = {}
+    counter = 0
+    for op, tenant, amount in op_seq:
+        if op == "insert":
+            codes = make_codes(counter, amount)
+            label = tenant % 2            # exercise the label plumbing
+            if amount > arena.num_free:
+                with pytest.raises(ArenaFull):
+                    arena.insert(jnp.asarray(codes), tenant)
+            else:
+                slots = arena.insert(jnp.asarray(codes), tenant)
+                arena.set_labels(slots, [label] * amount)
+                # bump allocation: fresh slots, never reused before compact
+                assert len(set(slots.tolist())) == amount
+                assert not set(slots.tolist()) & set(model)
+                for i, s in enumerate(slots):
+                    model[int(s)] = (tenant, codes[i], label)
+                counter += amount
+        elif op == "delete":
+            mine = sorted(s for s, (t, _, _) in model.items() if t == tenant)
+            victims = mine[:amount]
+            before = arena.stats.deletes
+            # duplicate ids must be counted once
+            arena.delete(victims + victims[:1])
+            assert arena.stats.deletes == before + len(victims)
+            for s in victims:
+                del model[s]
+        else:
+            mapping = arena.compact()
+            # slot reuse: compaction packs live rows to the front and
+            # reclaims every tombstone
+            assert arena._next == len(model)
+            assert arena.num_free == arena.capacity - len(model)
+            new_model = {}
+            for s, entry in model.items():
+                assert mapping[s] >= 0
+                new_model[int(mapping[s])] = entry
+            assert len(new_model) == len(model)
+            # live rows land densely at the slab front, dead slots map to -1
+            assert set(new_model) == set(range(len(new_model)))
+            assert int((mapping >= 0).sum()) == len(new_model)
+            model = new_model
+        check_model(arena, model)
+
+
+@given(ops)
+@settings(max_examples=25, deadline=None)
+def test_arena_retrieval_only_sees_live_rows(op_seq):
+    """After any mutation history, a full masked scan never returns a
+    tombstoned or foreign slot (norm-0 + owner masking)."""
+    from repro.core import RetrievalConfig
+    from repro.core.retrieval import two_stage_retrieve_masked
+
+    arena = Arena(CAPACITY, DIM)
+    model = {}
+    counter = 0
+    for op, tenant, amount in op_seq:
+        if op == "insert" and amount <= arena.num_free:
+            codes = make_codes(counter, amount)
+            for i, s in enumerate(arena.insert(jnp.asarray(codes), tenant)):
+                model[int(s)] = (tenant, codes[i])
+            counter += amount
+        elif op == "delete":
+            mine = sorted(s for s, (t, _) in model.items() if t == tenant)
+            arena.delete(mine[:amount])
+            for s in mine[:amount]:
+                del model[s]
+        elif op == "compact":
+            mapping = arena.compact()
+            model = {int(mapping[s]): e for s, e in model.items()}
+    q = make_codes(counter + 1000, 1)[0]
+    res = two_stage_retrieve_masked(jnp.asarray(q), arena.db(), arena.owner,
+                                    jnp.int32(0), RetrievalConfig(k=3))
+    got = np.asarray(res.indices)
+    for s in got[got >= 0]:
+        assert s in model and model[s][0] == 0

@@ -1,0 +1,125 @@
+"""INT8 k-means codebook + online ClusterIndex maintenance invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitplanar, clustering
+
+DIM = 32
+
+
+def codes_of(n, seed=0):
+    return np.random.default_rng(seed).integers(-128, 128,
+                                                (n, DIM)).astype(np.int8)
+
+
+def test_assign_codes_matches_l2_nearest():
+    codes = codes_of(100, seed=1)
+    cents = codes_of(7, seed=2)
+    labels = clustering.assign_codes(codes, cents)
+    d2 = ((codes.astype(np.int64)[:, None, :]
+           - cents.astype(np.int64)[None, :, :]) ** 2).sum(-1)
+    # same distance minimum; ties may break differently, so compare values
+    np.testing.assert_array_equal(d2[np.arange(100), labels], d2.min(axis=1))
+
+
+def test_kmeans_deterministic_and_consistent():
+    codes = codes_of(200, seed=3)
+    c1, l1 = clustering.kmeans_int8(codes, 8, iters=4, seed=0)
+    c2, l2 = clustering.kmeans_int8(codes, 8, iters=4, seed=0)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_array_equal(l1, l2)
+    # returned labels are the assignment under the returned centroids
+    np.testing.assert_array_equal(l1, clustering.assign_codes(codes, c1))
+    assert c1.dtype == np.int8 and l1.min() >= 0 and l1.max() < 8
+
+
+def test_kmeans_clamps_k_to_rows():
+    codes = codes_of(3, seed=4)
+    cents, labels = clustering.kmeans_int8(codes, 16, iters=2)
+    assert cents.shape == (3, DIM) and len(set(labels.tolist())) <= 3
+
+
+def test_codebook_is_corpus_representation():
+    cents = codes_of(5, seed=5)
+    cb = clustering.ClusterCodebook.from_codes(cents)
+    msb, _ = bitplanar.pack_nibble_planes(jnp.asarray(cents))
+    np.testing.assert_array_equal(np.asarray(cb.msb_plane), np.asarray(msb))
+    np.testing.assert_array_equal(
+        np.asarray(cb.norms_sq),
+        (cents.astype(np.int64) ** 2).sum(-1))
+    assert cb.num_clusters == 5 and cb.dim == DIM
+
+
+def test_block_table_covers_every_row():
+    labels = np.asarray([0, 0, 2, 1, 1, 2, 2, 0, -1, 1], np.int32)
+    table = clustering.block_table(labels, 3, block_rows=4, pad_pow2=False)
+    for row, lab in enumerate(labels):
+        if lab >= 0:
+            assert row // 4 in table[lab].tolist()
+    assert (table >= -1).all()
+
+
+def test_cluster_grouped_order_groups_labels():
+    labels = np.asarray([2, 0, 1, 0, 2, 1, 0], np.int32)
+    order = clustering.cluster_grouped_order(labels)
+    grouped = labels[order]
+    np.testing.assert_array_equal(grouped, np.sort(labels))
+
+
+class TestClusterIndex:
+    def test_first_add_trains_then_assigns(self):
+        ci = clustering.ClusterIndex(4, DIM, seed=0)
+        assert not ci.trained
+        with pytest.raises(RuntimeError):
+            ci.codebook()
+        l1 = ci.add(codes_of(50, seed=6))
+        assert ci.trained and l1.shape == (50,)
+        batch = codes_of(10, seed=7)
+        l2 = ci.add(batch)
+        np.testing.assert_array_equal(
+            l2, clustering.assign_codes(batch, ci._centroids))
+
+    def test_sums_counts_track_membership(self):
+        ci = clustering.ClusterIndex(4, DIM, seed=0)
+        a = codes_of(40, seed=8)
+        b = codes_of(12, seed=9)
+        la = ci.add(a)
+        lb = ci.add(b)
+        assert ci._counts.sum() == 52
+        ci.remove(b[:5], lb[:5])
+        assert ci._counts.sum() == 47
+        all_codes = np.concatenate([a, b[5:]])
+        all_labels = np.concatenate([la, lb[5:]])
+        for c in range(4):
+            members = all_codes[all_labels == c].astype(np.float64)
+            np.testing.assert_allclose(ci._sums[c],
+                                       members.sum(axis=0), atol=1e-9)
+            assert ci._counts[c] == len(members)
+
+    def test_refresh_recomputes_centroids_from_sums(self):
+        ci = clustering.ClusterIndex(2, DIM, seed=1)
+        codes = codes_of(30, seed=10)
+        labels = ci.add(codes)
+        gen = ci.generation
+        ci.refresh()
+        for c in range(2):
+            members = codes[labels == c].astype(np.float64)
+            if len(members):
+                want = np.clip(np.rint(members.mean(axis=0)),
+                               -128, 127).astype(np.int8)
+                np.testing.assert_array_equal(ci._centroids[c], want)
+        # refresh with unchanged sums afterwards must not bump generation
+        gen2 = ci.generation
+        ci.refresh()
+        assert ci.generation == gen2
+        assert gen2 >= gen
+
+    def test_codebook_cached_per_generation(self):
+        ci = clustering.ClusterIndex(2, DIM, seed=2)
+        ci.add(codes_of(20, seed=11))
+        cb1 = ci.codebook()
+        assert ci.codebook() is cb1
+        ci.add(codes_of(200, seed=12))
+        ci.refresh()                     # centroids move -> new generation
+        assert ci.codebook() is not cb1

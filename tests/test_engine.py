@@ -2,11 +2,12 @@
 
 The engine's contract is that `backend="pallas"` (interpret mode on CPU,
 compiled Mosaic on TPU) and `backend="jnp"` run the SAME exact integer
-arithmetic, so every policy — plain, masked, windowed — must return
-identical indices, scores, and candidate sets, for cosine and MIPS,
-including fragmented tenants and tenants with fewer live docs than k.
-Also pins the single-query wrappers to lanes of the batched core and the
-analytic SchedulePlan byte model.
+arithmetic, so every policy — plain, masked, windowed, cluster-pruned —
+must return identical indices, scores, and candidate sets, for cosine and
+MIPS, including fragmented tenants and tenants with fewer live docs than
+k. Also pins the single-query wrappers to lanes of the batched core, the
+analytic per-stage SchedulePlan byte model, and the cluster cascade's
+nprobe=K degeneration to the full scan.
 """
 import dataclasses
 
@@ -14,12 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BitPlanarDB, MaskedPolicy, PlainPolicy,
-                        RetrievalConfig, RetrievalEngine, WindowedPolicy,
-                        build_database)
+from repro.core import (BitPlanarDB, ClusterParams, MaskedPolicy,
+                        PlainPolicy, RetrievalConfig, RetrievalEngine,
+                        WindowedPolicy, block_table, build_database,
+                        cluster_grouped_order, kmeans_int8)
+from repro.core import clustering
 from repro.core import engine as engine_mod
 from repro.core.retrieval import (NO_TENANT, batched_retrieve,
-                                  batched_retrieve_masked, two_stage_retrieve,
+                                  batched_retrieve_masked,
+                                  cluster_pruned_retrieve,
+                                  two_stage_retrieve,
                                   two_stage_retrieve_masked,
                                   windowed_retrieve_masked)
 from repro.core.quantization import quantize_int8
@@ -236,6 +241,181 @@ def test_scheduler_ledger_counts_real_requests_only():
     window_bytes = plan.rows_scanned * (DIM // 2)
     assert sched.stage1_bytes_streamed == 4 * window_bytes
     assert sched.stage1_bytes_vmapped == 3 * window_bytes
+
+
+# ---------------------------------------------------------------------------
+# Cluster-pruned cascade
+# ---------------------------------------------------------------------------
+
+def make_clustered_db(n=512, dim=DIM, k_clusters=16, block_rows=32, seed=0):
+    """Single-corpus clustered DB: rows packed in cluster-grouped order,
+    plus the codebook / block table / labels the cascade needs."""
+    rng = np.random.default_rng(seed)
+    docs = rng.normal(size=(n, dim)).astype(np.float32)
+    qdb = build_database(jnp.asarray(docs))
+    cents, labels = kmeans_int8(np.asarray(qdb.values), k_clusters,
+                                iters=4, seed=seed)
+    order = cluster_grouped_order(labels)
+    db = BitPlanarDB.from_quantized(
+        build_database(jnp.asarray(docs[order])))
+    labels = labels[order]
+    table = block_table(labels, k_clusters, block_rows)
+    codebook = clustering.ClusterCodebook.from_codes(cents)
+    q, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(4, dim)).astype(np.float32)), per_vector=True)
+    return db, codebook, table, labels, q
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+@pytest.mark.parametrize("nprobe", [2, 16])
+def test_cluster_policy_backend_parity(metric, nprobe):
+    """The 3-stage cascade returns identical results on both backends
+    (the gathered-scan kernel and its jnp reference are bit-equal, so the
+    candidate sets — and everything downstream — agree exactly)."""
+    db, codebook, table, labels, q = make_clustered_db()
+    cfg = RetrievalConfig(k=5, metric=metric)
+    rj, rp = run_both_backends(
+        lambda c: cluster_pruned_retrieve(q, db, codebook, table, labels,
+                                          c, nprobe=nprobe, block_rows=32),
+        cfg)
+    assert_results_equal(rj, rp)
+
+
+def test_cluster_cascade_nprobe_k_recovers_full_scan():
+    """Probing every cluster must recover exactly the full two-stage
+    scan's top-k SET (row visit order differs, so tie-broken candidate
+    sets may differ, but with the budget clamped to the whole corpus the
+    exact stage rescoresthe same winners)."""
+    db, codebook, table, labels, q = make_clustered_db(n=256, k_clusters=8)
+    cfg = RetrievalConfig(k=5, max_candidates=256)
+    full = batched_retrieve(q, db, cfg)
+    pruned = cluster_pruned_retrieve(q, db, codebook, table, labels, cfg,
+                                     nprobe=8, block_rows=32)
+    for i in range(q.shape[0]):
+        assert (set(np.asarray(full.indices)[i].tolist())
+                == set(np.asarray(pruned.indices)[i].tolist()))
+        np.testing.assert_array_equal(np.asarray(full.scores)[i],
+                                      np.asarray(pruned.scores)[i])
+
+
+def test_cluster_cascade_never_duplicates_rows():
+    """Blocks at cluster boundaries are listed under BOTH clusters; the
+    per-row label mask must keep each row visible exactly once, so no
+    document can appear twice in one lane's results."""
+    db, codebook, table, labels, q = make_clustered_db(n=300, k_clusters=8)
+    cfg = RetrievalConfig(k=10, max_candidates=300)
+    res = cluster_pruned_retrieve(q, db, codebook, table, labels, cfg,
+                                  nprobe=8, block_rows=32)
+    for lane in np.asarray(res.indices):
+        live = lane[lane >= 0]
+        assert len(live) == len(set(live.tolist()))
+
+
+def test_cluster_schedule_plan_per_stage_ledger():
+    """The cluster plan's per-stage ledger: prune streams the K-row
+    centroid plane once per batch; approx streams each lane's probed
+    blocks; exact streams candidates' full codes. The flat stage1_bytes
+    must drop below the full-scan figure by ~K/nprobe."""
+    db, codebook, table, labels, q = make_clustered_db(
+        n=512, k_clusters=16, block_rows=32)
+    cfg = RetrievalConfig(k=5)
+    eng = RetrievalEngine(cfg)
+    policy = engine_mod.ClusterPolicy(
+        owner=jnp.zeros(512, jnp.int32), tenant_ids=jnp.zeros(4, jnp.int32),
+        labels=jnp.asarray(labels), centroid_msb=codebook.msb_plane,
+        centroid_norms=codebook.norms_sq,
+        cluster_blocks=jnp.asarray(table), nprobe=2, block_rows=32)
+    plan = eng.plan_for(db, 4, policy)
+    assert plan.kind == "cluster"
+    mb = table.shape[1]
+    probe = 2 * mb * 32
+    assert plan.rows_scanned == probe
+    assert [s.name for s in plan.stages] == ["prune", "approx", "exact"]
+    prune, approx, exact = plan.stages
+    assert prune.bytes_hbm == 16 * (DIM // 2)          # codebook, per batch
+    assert prune.rows == 16 and prune.bits == 4
+    assert approx.bytes_hbm == 4 * probe * (DIM // 2)  # per-lane gathers
+    assert approx.bytes_hbm == plan.stage1_bytes
+    assert exact.bits == 8
+    assert exact.bytes_hbm == plan.stage2_bytes == 4 * plan.candidates * DIM
+    # the prune's point: each lane scans a cluster-sized slice, not the
+    # arena (the batch-level crossover vs the shared-plane scan happens
+    # once N >> B * probe — benchmarks/retrieval_bench.py checks the >=4x
+    # reduction at 64k docs)
+    assert plan.rows_scanned < 512
+    assert plan.stage1_bytes < plan.stage1_bytes_vmapped
+    assert plan.stage1_bytes_vmapped == 4 * 512 * (DIM // 2)
+
+
+def test_multitenant_cluster_path_end_to_end():
+    """MultiTenantIndex with clustering: the cascade kind is selected,
+    isolation holds, both backends agree, and recall vs the same index
+    without clustering stays high on clustered per-tenant corpora."""
+    rng = np.random.default_rng(5)
+    params = ClusterParams(num_clusters=8, nprobe=3, block_rows=32)
+    idx = MultiTenantIndex(1024, DIM, RetrievalConfig(k=3),
+                           clusters=params)
+    ref = MultiTenantIndex(1024, DIM, RetrievalConfig(k=3))
+    for t in range(3):
+        docs = rng.normal(size=(120, DIM)).astype(np.float32)
+        idx.ingest(t, jnp.asarray(docs))
+        ref.ingest(t, jnp.asarray(docs))
+    idx.compact()                       # cluster-grouped layout
+    q, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(4, DIM)).astype(np.float32)), per_vector=True)
+    tids = np.asarray([0, 1, 2, NO_TENANT], np.int32)
+    res = idx.retrieve(q, tids)
+    assert idx.last_plan.kind == "cluster"
+    assert [s.name for s in idx.last_plan.stages] == ["prune", "approx",
+                                                      "exact"]
+    owner = np.asarray(idx.arena.owner)
+    ids = np.asarray(res.indices)
+    for i, t in enumerate(tids):
+        live = ids[i][ids[i] >= 0]
+        assert (owner[live] == t).all()
+    assert (ids[3] == -1).all()         # padding lane returns nothing
+    idx.cfg = dataclasses.replace(idx.cfg, backend="pallas")
+    assert_results_equal(res, idx.retrieve(q, tids))
+    # stage-1 bytes: pruned lanes beat the full-arena masked scan
+    full_plan = ref.engine.plan_for(ref.arena.db(), 4, MaskedPolicy(
+        ref.arena.owner, jnp.asarray(tids)))
+    assert idx.last_plan.stage1_bytes < full_plan.stage1_bytes_vmapped
+
+
+def test_multitenant_cluster_falls_back_until_trained():
+    """Before any ingest trains the codebook, retrieval must fall back to
+    the windowed/masked paths instead of crashing."""
+    idx = MultiTenantIndex(256, DIM, RetrievalConfig(k=3),
+                           clusters=ClusterParams(num_clusters=4))
+    docs = np.random.default_rng(0).normal(size=(20, DIM)).astype(np.float32)
+    q, _ = quantize_int8(jnp.asarray(docs[:2]), per_vector=True)
+    # trained already by the first ingest — so drop the codebook to
+    # simulate the pre-training window
+    idx.ingest(0, jnp.asarray(docs))
+    idx.clusters._centroids = None
+    res = idx.retrieve(q, np.asarray([0, 0], np.int32))
+    assert idx.last_plan.kind in ("windowed", "masked")
+    assert np.asarray(res.indices).shape == (2, 3)
+
+
+def test_scheduler_per_stage_bytes_ledger():
+    """Scheduler flushes accumulate the per-stage cascade ledger."""
+    from repro.tenancy import CrossTenantBatchScheduler
+    rng = np.random.default_rng(9)
+    idx = MultiTenantIndex(512, DIM, RetrievalConfig(k=3),
+                           clusters=ClusterParams(num_clusters=4, nprobe=2,
+                                                  block_rows=32))
+    docs = rng.normal(size=(100, DIM)).astype(np.float32)
+    idx.ingest(0, jnp.asarray(docs))
+    idx.compact()
+    sched = CrossTenantBatchScheduler(idx, max_batch=4)
+    q, _ = quantize_int8(jnp.asarray(docs[:2]), per_vector=True)
+    for i in range(2):
+        sched.submit(0, np.asarray(q[i]))
+    sched.flush()
+    plan = idx.last_plan
+    assert plan.kind == "cluster"
+    assert sched.stage_bytes == {s.name: s.bytes_hbm for s in plan.stages}
 
 
 def test_masked_score_floor_is_comparator_safe():

@@ -8,7 +8,6 @@ from repro.core import BitPlanarDB, build_database, msb_nibble, quantize_int8
 from repro.kernels import ops, ref
 from repro.kernels.fused_topk import fused_topk_pallas
 from repro.kernels.stage1_int4 import stage1_int4_pallas
-from repro.kernels.stage2_int8 import stage2_int8_pallas
 
 
 def make(n, d, seed=0):

@@ -13,10 +13,10 @@ from repro.train import adamw, make_train_step
 
 
 def test_heartbeat_failure_detection():
-    clock = iter(float(i) for i in itertools.count())
     now = [0.0]
     mon = HeartbeatMonitor(timeout_s=5.0, clock=lambda: now[0])
-    mon.beat("w0"); mon.beat("w1")
+    mon.beat("w0")
+    mon.beat("w1")
     now[0] = 3.0
     mon.beat("w0")
     now[0] = 7.0

@@ -1,6 +1,5 @@
 """End-to-end system test: train a tiny LM with checkpointing + elastic
 restart, then serve it behind the paper's RAG retrieval pipeline."""
-import itertools
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +8,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import RetrievalConfig
-from repro.data import LMTaskConfig, lm_batches, retrieval_corpus
+from repro.data import LMTaskConfig, lm_batches
 from repro.models import embedder, get_model
 from repro.runtime import ElasticTrainer, FailureInjector
 from repro.serve import RAGPipeline

@@ -37,7 +37,8 @@ def test_adafactor_reduces_loss_on_quadratic():
     w = {"w": jnp.ones((8, 8))}
     state = opt.init(w)
     tgt = jnp.zeros((8, 8))
-    loss = lambda p: jnp.mean((p["w"] - tgt) ** 2)
+    def loss(p):
+        return jnp.mean((p["w"] - tgt) ** 2)
     l0 = float(loss(w))
     for _ in range(50):
         g = jax.grad(loss)(w)
