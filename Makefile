@@ -31,4 +31,4 @@ example:
 
 trace:
 	PYTHONPATH=src $(PY) -m repro.launch.serve_tenants --tenants 6 \
-		--capacity 512 --steps 30
+		--capacity 512 --steps 30 --clusters 8 --cache-kb 256

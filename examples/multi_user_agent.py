@@ -82,6 +82,31 @@ def main():
     print("[alice] deleted record tombstoned; after compaction "
           f"({pipe.index.num_live} live rows) results still correct")
 
+    # --- the serving runtime: deadline-batched admission with futures ----
+    # Requests trickle in; a full batch launches immediately, a partial
+    # one launches when its oldest deadline arrives — the agents never
+    # wait longer than the configured slack for a slow batch to fill.
+    from repro.core import quantize_int8
+    from repro.serve import RuntimeConfig, ServingRuntime
+
+    rt = ServingRuntime(pipe.index,
+                        RuntimeConfig(max_batch=len(USERS), max_wait=0.010))
+    handles = []
+    for uid, name in enumerate(USERS):
+        q_emb = pipe._embed(jnp.asarray(records[uid][1][3][None]))
+        q_codes, _ = quantize_int8(q_emb, per_vector=True)
+        handles.append(rt.submit(uid, np.asarray(q_codes[0]), now=0.0))
+    assert all(h.done() for h in handles)    # batch filled -> launched
+    for uid, (name, h) in enumerate(zip(USERS, handles)):
+        got = np.asarray(h.result().indices)
+        assert int(got[0]) == int(pipe.index.table.slots(uid)[3])
+    print(f"[serve ] {len(handles)} users answered in {rt.launches} "
+          f"deadline-batched launch(es); a lone request launches after "
+          f"{1e3 * rt.cfg.max_wait:.0f} ms instead of waiting forever")
+    lone = rt.submit(0, np.asarray(q_codes[0]), now=0.0)
+    assert rt.poll(now=0.005) == []          # young partial batch waits
+    assert rt.poll(now=0.010) == [lone]      # deadline forces the launch
+
 
 if __name__ == "__main__":
     main()

@@ -91,9 +91,14 @@ class CostBreakdown:
 
 
 def _cost(n_docs: int, dim: int, *, doc_bits_read, mac_terms, compares,
-          consts: EnergyConstants, include_norms: bool) -> CostBreakdown:
+          consts: EnergyConstants, include_norms: bool,
+          cached_bits: float = 0.0) -> CostBreakdown:
+    """cached_bits: doc bits served from ON-CHIP memory instead of DRAM
+    (the serving runtime's hot-cluster cache). A streamed bit is written
+    into SRAM then read back (2x); a cached bit is already resident and
+    read once — so hits are charged 1x SRAM and zero DRAM."""
     dram_bits = doc_bits_read + (n_docs * NORM_BITS if include_norms else 0)
-    sram_bits = 2 * dram_bits + dim * 8  # + one query load
+    sram_bits = 2 * dram_bits + cached_bits + dim * 8  # + one query load
     macs = sum(m for m, _, _ in mac_terms)
     pe_bits = sum(m * (ba + bb + ACC_BITS) for m, ba, bb in mac_terms)
     simcalc_bits = macs * ACC_BITS
@@ -151,15 +156,19 @@ def cost_cascade(stages, dim: int = 512, *, batch: int = 1,
     `stages` is a launch's per-stage ledger — engine.SchedulePlan.stages,
     i.e. objects with `rows` (rows scored per lane), `bits` (operand
     width), `bytes_hbm` (plane bytes the whole LAUNCH streamed for the
-    stage) and `compares` — so the ledger charges what the schedule
-    ACTUALLY streamed (windowed lanes their window, cluster-pruned lanes
-    their probed blocks, shared-plane stages amortized over `batch`)
-    instead of re-deriving traffic from the `default_candidates`
-    heuristic and a full-corpus scan.
+    stage), optional `bytes_sram` (plane bytes the launch served from the
+    serving runtime's hot-cluster cache — charged at SRAM rates, zero
+    DRAM, same MACs) and `compares` — so the ledger charges what the
+    schedule ACTUALLY streamed (windowed lanes their window, cluster-
+    pruned lanes their probed blocks, cache hits the on-chip rate,
+    shared-plane stages amortized over `batch`) instead of re-deriving
+    traffic from the `default_candidates` heuristic and a full-corpus
+    scan.
     """
     stages = tuple(stages)
     b = max(1, batch)
     doc_bits = sum(s.bytes_hbm * 8 for s in stages) / b
+    cached_bits = sum(getattr(s, "bytes_sram", 0) * 8 for s in stages) / b
     mac_terms = [(s.rows * dim, s.bits, s.bits) for s in stages]
     compares = sum(s.compares for s in stages)
     # The norms sidecar is read once per stage-1-scored row (4-bit stages
@@ -168,7 +177,8 @@ def cost_cascade(stages, dim: int = 512, *, batch: int = 1,
     norm_rows = sum(s.rows for s in stages if s.bits == 4)
     return _cost(norm_rows, dim, doc_bits_read=doc_bits,
                  mac_terms=mac_terms, compares=compares,
-                 consts=consts, include_norms=include_norms)
+                 consts=consts, include_norms=include_norms,
+                 cached_bits=cached_bits)
 
 
 # ---------------------------------------------------------------------------

@@ -134,6 +134,31 @@ class ClusterPolicy:
     block_rows: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ViewPolicy:
+    """An explicitly MATERIALIZED per-lane stage-1 row view.
+
+    The serving runtime's hot-cluster-cache path: the cluster selection
+    ran host-side (`select_clusters` + `expand_cluster_view`, the same
+    functions CentroidPrune runs in-graph) and the stage-1 plane rows
+    were assembled from cached cluster views plus fresh gathers — so the
+    engine receives the view as data instead of streaming it from the
+    plane. Bit-exact with the ClusterPolicy path by construction: `rows`
+    and `member` come from the same expansion, and `msb_rows` holds the
+    same plane bytes (padding regions may hold zeros instead of the
+    clamped block-0 bytes the gather path streams, which is invisible —
+    every padding row is masked out of both stages by `member`).
+
+    rows: (B, R) global row ids of the view (-1 holes).
+    member: (B, R) bool visibility mask (tenant + cluster + hole masking).
+    msb_rows: (B, R, D//2) uint8 gathered stage-1 plane rows.
+    """
+
+    rows: jax.Array
+    member: jax.Array
+    msb_rows: jax.Array
+
+
 jax.tree_util.register_pytree_node(
     PlainPolicy, lambda p: ((), None), lambda _, l: PlainPolicy())
 jax.tree_util.register_pytree_node(
@@ -148,8 +173,12 @@ jax.tree_util.register_pytree_node(
                 p.centroid_norms, p.cluster_blocks),
                (p.nprobe, p.block_rows)),
     lambda aux, l: ClusterPolicy(*l, nprobe=aux[0], block_rows=aux[1]))
+jax.tree_util.register_pytree_node(
+    ViewPolicy, lambda p: ((p.rows, p.member, p.msb_rows), None),
+    lambda _, l: ViewPolicy(*l))
 
-Policy = PlainPolicy | MaskedPolicy | WindowedPolicy | ClusterPolicy
+Policy = (PlainPolicy | MaskedPolicy | WindowedPolicy | ClusterPolicy
+          | ViewPolicy)
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +342,74 @@ class _CascadeCtx:
     fns: StageFns
 
 
+def select_clusters(q_msb: jax.Array, policy: ClusterPolicy,
+                    cfg: RetrievalConfig, fns: StageFns) -> jax.Array:
+    """Stage 0's cluster selection: score the K centroids and keep each
+    lane's top-`nprobe` VALID clusters (a cluster with no blocks for the
+    lane's tenant must not spend a probe: its first block id is -1).
+
+    Returns (B, nprobe) int32 cluster ids in rank order. Shared between
+    the in-graph CentroidPrune stage and the serving runtime's host-side
+    hot-cluster-cache path, so the two can never select differently.
+    """
+    k_clusters = policy.centroid_msb.shape[0]
+    nprobe = min(policy.nprobe, k_clusters)
+    scores = fns.centroid(q_msb, policy.centroid_msb)            # (B, K)
+    table = policy.cluster_blocks
+    if table.ndim == 2:
+        valid = (table[:, 0] >= 0)[None, :]
+    else:
+        valid = table[:, :, 0] >= 0
+    if cfg.metric == "cosine":
+        key = similarity.cosine_key_f32(scores, policy.centroid_norms)
+        key = jnp.where(valid, key, -jnp.inf)
+    else:
+        key = jnp.where(valid, scores, INT32_MIN)
+    _, top_clusters = jax.lax.top_k(key, nprobe)                 # (B, P)
+    return top_clusters
+
+
+def expand_cluster_view(policy: ClusterPolicy, top_clusters: jax.Array,
+                        num_docs: int
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Expand selected clusters' blocks into an explicit per-lane row view.
+
+    Returns (rows (B, R) int32 with -1 holes, member (B, R) bool,
+    clamped_block_ids (B, J) int32) — the currency ApproxScan's gather
+    branch consumes. Shared with the serving runtime so a cached view's
+    bookkeeping is the in-graph prune's bookkeeping, by construction.
+    """
+    pol, n = policy, num_docs
+    table = pol.cluster_blocks
+    if table.ndim == 2:
+        blocks = jnp.take(table, top_clusters, axis=0)           # (B, P, MB)
+    else:
+        blocks = jnp.take_along_axis(
+            table, top_clusters[:, :, None], axis=1)
+    b, _, max_blocks = blocks.shape
+    blocks = blocks.reshape(b, -1)                               # (B, J)
+    br = pol.block_rows
+    clamped = jnp.maximum(blocks, 0)
+    # Row ids come from the SAME expansion the gather backends use
+    # (bitplanar.expand_block_rows), so the prune's bookkeeping can
+    # never desynchronize from what stage 1 actually streams.
+    rows = bitplanar.expand_block_rows(clamped, br)
+    hole = jnp.repeat(blocks < 0, br, axis=1) | (rows >= n)
+    rows = jnp.where(hole, -1, rows)
+    safe = jnp.maximum(rows, 0)
+    own = jnp.take(pol.owner, safe, axis=0)
+    # A block at a cluster boundary is listed under BOTH clusters; a
+    # row is kept only through its OWN cluster's entry, so a row can
+    # never appear twice in the view (duplicates would waste candidate
+    # slots and could surface one doc twice in the final top-k).
+    owning = jnp.repeat(jnp.repeat(top_clusters, max_blocks, axis=1),
+                        br, axis=1)                              # (B, R)
+    member = (~hole & (own == pol.tenant_ids[:, None])
+              & (pol.tenant_ids >= 0)[:, None]
+              & (jnp.take(pol.labels, safe, axis=0) == owning))
+    return rows, member, clamped
+
+
 @dataclasses.dataclass(frozen=True)
 class CentroidPrune:
     """Stage 0: score the K centroids, keep the top-`nprobe` clusters'
@@ -321,50 +418,10 @@ class CentroidPrune:
     nprobe: int
 
     def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
-        pol = ctx.policy
-        n = ctx.db.num_docs
-        k_clusters = pol.centroid_msb.shape[0]
-        nprobe = min(self.nprobe, k_clusters)
-        scores = ctx.fns.centroid(ctx.q_msb, pol.centroid_msb)   # (B, K)
-        table = pol.cluster_blocks
-        # A cluster with no blocks (empty for this lane's tenant) must not
-        # spend a probe: its first block id is -1.
-        if table.ndim == 2:
-            valid = (table[:, 0] >= 0)[None, :]
-        else:
-            valid = table[:, :, 0] >= 0
-        if ctx.cfg.metric == "cosine":
-            key = similarity.cosine_key_f32(scores, pol.centroid_norms)
-            key = jnp.where(valid, key, -jnp.inf)
-        else:
-            key = jnp.where(valid, scores, INT32_MIN)
-        _, top_clusters = jax.lax.top_k(key, nprobe)             # (B, P)
-        if table.ndim == 2:
-            blocks = jnp.take(table, top_clusters, axis=0)       # (B, P, MB)
-        else:
-            blocks = jnp.take_along_axis(
-                table, top_clusters[:, :, None], axis=1)
-        b, _, max_blocks = blocks.shape
-        blocks = blocks.reshape(b, -1)                           # (B, J)
-        br = pol.block_rows
-        clamped = jnp.maximum(blocks, 0)
-        # Row ids come from the SAME expansion the gather backends use
-        # (bitplanar.expand_block_rows), so the prune's bookkeeping can
-        # never desynchronize from what stage 1 actually streams.
-        rows = bitplanar.expand_block_rows(clamped, br)
-        hole = jnp.repeat(blocks < 0, br, axis=1) | (rows >= n)
-        rows = jnp.where(hole, -1, rows)
-        safe = jnp.maximum(rows, 0)
-        own = jnp.take(pol.owner, safe, axis=0)
-        # A block at a cluster boundary is listed under BOTH clusters; a
-        # row is kept only through its OWN cluster's entry, so a row can
-        # never appear twice in the view (duplicates would waste candidate
-        # slots and could surface one doc twice in the final top-k).
-        owning = jnp.repeat(jnp.repeat(top_clusters, max_blocks, axis=1),
-                            br, axis=1)                          # (B, R)
-        member = (~hole & (own == pol.tenant_ids[:, None])
-                  & (pol.tenant_ids >= 0)[:, None]
-                  & (jnp.take(pol.labels, safe, axis=0) == owning))
+        top_clusters = select_clusters(ctx.q_msb, ctx.policy, ctx.cfg,
+                                       ctx.fns)
+        rows, member, clamped = expand_cluster_view(ctx.policy, top_clusters,
+                                                    ctx.db.num_docs)
         return dataclasses.replace(state, rows=rows, member=member,
                                    block_ids=clamped)
 
@@ -378,7 +435,24 @@ class ApproxScan:
         db, policy, cfg = ctx.db, ctx.policy, ctx.cfg
         n = db.num_docs
         member = state.member
-        if isinstance(policy, WindowedPolicy):
+        view_rows = state.rows          # view-local -> global row id map
+        if isinstance(policy, ViewPolicy):
+            # Materialized view (the serving runtime's cache path): the
+            # rows arrive as data — stage 1 runs the per-lane rows
+            # primitive over them; norms stay tiny sidecar reads from the
+            # full array, exactly like the gathered branch.
+            r = policy.rows.shape[1]
+            if r < cfg.k:
+                raise ValueError(f"materialized view holds {r} rows < k="
+                                 f"{cfg.k}: raise nprobe or block_rows")
+            c = _candidate_budget(cfg, n, r)
+            scores = ctx.fns.rows(ctx.q_msb, policy.msb_rows)  # (B, R) int32
+            norms = jnp.take(db.norms_sq, jnp.maximum(policy.rows, 0),
+                             axis=0)
+            member = policy.member
+            view_rows = policy.rows
+            base = None
+        elif isinstance(policy, WindowedPolicy):
             if policy.window < cfg.k:
                 raise ValueError(f"window {policy.window} < k={cfg.k}: "
                                  "top-k over a window needs window >= k")
@@ -428,8 +502,8 @@ class ApproxScan:
             key1 = scores if member is None else jnp.where(member, scores,
                                                            INT32_MIN)
         _, cand_local = jax.lax.top_k(key1, c)                 # (B, C) view
-        if state.rows is not None:
-            cand = jnp.take_along_axis(state.rows, cand_local, axis=1)
+        if view_rows is not None:
+            cand = jnp.take_along_axis(view_rows, cand_local, axis=1)
         elif base is not None:
             cand = cand_local + base
         else:
@@ -495,6 +569,8 @@ def cascade_stages(policy: Policy, cfg: RetrievalConfig) -> tuple:
     """
     if isinstance(policy, ClusterPolicy):
         return (CentroidPrune(policy.nprobe), ApproxScan(), ExactRescore())
+    # ViewPolicy enters at ApproxScan: its prune already ran host-side
+    # (the serving runtime's cached path) and the view arrives as data.
     return (ApproxScan(), ExactRescore())
 
 
@@ -531,8 +607,12 @@ class StagePlan:
     rows is per LANE (what one query's schedule scores); bytes_hbm is the
     total plane bytes the LAUNCH streams from HBM for this stage (shared-
     plane stages stream once per batch, per-lane views scale with B);
-    bits is the operand width of the stage's MACs; compares is the
-    per-lane comparison count the stage's select/rerank performs.
+    bytes_sram is the plane bytes the launch served from ON-CHIP memory
+    instead — the hot-cluster cache's hits, charged at SRAM rates by
+    energy.cost_cascade (the rows still flow through the PEs: MAC counts
+    are unchanged, only the fetch got cheaper); bits is the operand width
+    of the stage's MACs; compares is the per-lane comparison count the
+    stage's select/rerank performs.
     """
 
     name: str
@@ -540,6 +620,7 @@ class StagePlan:
     bits: int
     bytes_hbm: int
     compares: int
+    bytes_sram: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -557,7 +638,7 @@ class SchedulePlan:
     path streamed for the same work.
     """
 
-    kind: Literal["plain", "masked", "windowed", "cluster"]
+    kind: Literal["plain", "masked", "windowed", "cluster", "view"]
     batch: int
     rows_scanned: int          # stage-1 rows per lane (N, window, or probe)
     candidates: int            # stage-2 budget C per lane
@@ -565,6 +646,7 @@ class SchedulePlan:
     stage1_bytes_vmapped: int  # the vmapped-scalar path, for comparison
     stage2_bytes: int          # gathered candidate rows (MSB+LSB planes)
     stages: tuple[StagePlan, ...] = ()
+    stage1_bytes_sram: int = 0  # stage-1 bytes served from the hot cache
 
 
 def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
@@ -602,6 +684,16 @@ def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
         stages = (StagePlan(name="prune", rows=num_clusters, bits=4,
                             bytes_hbm=num_clusters * d2,
                             compares=num_clusters),)
+    elif kind == "view":
+        # A materialized per-lane view (the runtime's cache path): same
+        # stage-1 geometry as "cluster" but the prune ran host-side.
+        if view_rows is None:
+            raise ValueError("view plan needs view_rows")
+        rows = view_rows
+        s1 = batch * rows * d2
+        s1_vmapped = batch * num_docs * d2
+        c = _candidate_budget(cfg, num_docs, view_rows)
+        stages = ()
     else:
         if window is not None:
             raise ValueError(f"{kind} plan does not take a window")
@@ -619,6 +711,24 @@ def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
                         candidates=c, stage1_bytes=s1,
                         stage1_bytes_vmapped=s1_vmapped,
                         stage2_bytes=s2, stages=stages)
+
+
+def cache_split_plan(base: SchedulePlan, *, hbm_bytes: int,
+                     sram_bytes: int) -> SchedulePlan:
+    """Re-ledger a launch's approx stage for hot-cluster-cache service.
+
+    The analytic plan charges the whole stage-1 view to HBM; when the
+    serving runtime assembled the view partly from cached cluster slices,
+    the MEASURED split is hbm_bytes (missed clusters, freshly streamed)
+    vs sram_bytes (hits, served from on-chip cache). MAC/compare counts
+    are untouched — the cache changes where bytes come from, not how many
+    rows are scored."""
+    stages = tuple(
+        dataclasses.replace(s, bytes_hbm=hbm_bytes, bytes_sram=sram_bytes)
+        if s.name == "approx" else s
+        for s in base.stages)
+    return dataclasses.replace(base, stages=stages, stage1_bytes=hbm_bytes,
+                               stage1_bytes_sram=sram_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -655,12 +765,15 @@ class RetrievalEngine:
                  policy: Policy = PlainPolicy()) -> SchedulePlan:
         """The analytic SchedulePlan for one launch against `db`."""
         kind = {PlainPolicy: "plain", MaskedPolicy: "masked",
-                WindowedPolicy: "windowed",
-                ClusterPolicy: "cluster"}[type(policy)]
+                WindowedPolicy: "windowed", ClusterPolicy: "cluster",
+                ViewPolicy: "view"}[type(policy)]
         window = policy.window if isinstance(policy, WindowedPolicy) else None
         if isinstance(policy, ClusterPolicy):
             num_clusters = policy.centroid_msb.shape[0]
             view_rows = probe_rows(policy)
+        elif isinstance(policy, ViewPolicy):
+            num_clusters = None
+            view_rows = policy.rows.shape[1]
         else:
             num_clusters = view_rows = None
         return plan(self.cfg, num_docs=db.num_docs, dim=db.dim, batch=batch,

@@ -25,7 +25,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BLOCK_N = 256
+# 1024 doc rows per grid step. At D=512 a block is 1024 x 256 bytes =
+# 256 KiB of VMEM (512 KiB double-buffered) — comfortably inside a TPU
+# core's ~16 MiB budget, MXU-aligned (the contraction stays D/2-deep),
+# and 4x fewer grid steps than the previous 256-row blocks. The smaller
+# block was a measured LOSS on the CPU interpret path every benchmark and
+# test here runs on: per-grid-step interpreter overhead dominates below
+# ~512 rows/block, which put the single-query kernel at 0.76x the jnp
+# reference at N=4096 (BENCH_retrieval.json kernel_bench.stage1); at 1024
+# the same shape measures ~1.7x. See README "kernel block shapes".
+DEFAULT_BLOCK_N = 1024
 INT32_MIN = jnp.iinfo(jnp.int32).min
 
 

@@ -1,17 +1,22 @@
 """Multi-tenant streaming-serving launcher: simulated ingest+query trace.
 
     PYTHONPATH=src python -m repro.launch.serve_tenants --tenants 8 \
-        --capacity 1024 --steps 40 [--generate] [--seed 0]
+        --capacity 1024 --steps 40 [--clusters 16 --cache-kb 256] \
+        [--generate] [--seed 0]
 
 Drives the wearable deployment shape end to end: T users share one
 nibble-planar arena; every trace step either INGESTS a burst of new
 personal records for one user (online quantize+pack — no rebuild),
 DELETES some (tombstones), or serves a mixed QUERY batch for several
-users through the cross-tenant batch scheduler (one launch per batch).
-Compaction runs whenever tombstones exceed a threshold. The driver checks
-isolation (a user's results only ever come from their own corpus) and
-hit-rate (queries are noisy re-encodings of ingested docs), and reports
-queries/sec, ingest rows/sec and the per-query energy ledger.
+users through the SERVING RUNTIME (repro.serve.runtime): requests get
+future-style handles, batches launch on deadline-or-max-batch admission,
+and with --clusters + --cache-kb the hot-cluster cache serves repeated
+stage-1 views from on-chip memory instead of HBM. Compaction runs
+whenever tombstones exceed a threshold. The driver checks isolation (a
+user's results only ever come from their own corpus) and hit-rate
+(queries are noisy re-encodings of ingested docs), and reports
+queries/sec, ingest rows/sec, the cache's hit/byte ledger and the
+per-query energy ledger.
 """
 from __future__ import annotations
 
@@ -26,8 +31,7 @@ from repro.configs import get_config
 from repro.core import RetrievalConfig, energy, quantize_int8
 from repro.core.clustering import ClusterParams
 from repro.models import embedder, get_model
-from repro.serve import MultiTenantRAGPipeline
-from repro.tenancy import CrossTenantBatchScheduler
+from repro.serve import MultiTenantRAGPipeline, RuntimeConfig, ServingRuntime
 
 
 def main(argv=None):
@@ -47,10 +51,19 @@ def main(argv=None):
                     help="enable the cluster-pruned cascade with this "
                          "many centroids (0 = two-stage full scan)")
     ap.add_argument("--nprobe", type=int, default=4)
+    ap.add_argument("--cache-kb", type=int, default=0,
+                    help="hot-cluster cache budget in KiB (0 = off; "
+                         "needs --clusters)")
+    ap.add_argument("--max-wait-ms", type=float, default=5.0,
+                    help="deadline slack before a partial batch launches")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.tenants < 1 or args.capacity < args.burst:
         ap.error("need --tenants >= 1 and --capacity >= --burst")
+    if args.cache_kb and not args.clusters:
+        ap.error("--cache-kb caches CLUSTER views: it needs --clusters > 0 "
+                 "(without clustering every flush scans windows/masks and "
+                 "the cache would silently never be consulted)")
 
     rng = np.random.default_rng(args.seed)
     gcfg = get_config("qwen2-0.5b", smoke=True)
@@ -69,7 +82,9 @@ def main(argv=None):
         clusters=(ClusterParams(num_clusters=args.clusters,
                                 nprobe=args.nprobe, block_rows=32)
                   if args.clusters else None))
-    sched = CrossTenantBatchScheduler(pipe.index, max_batch=args.batch)
+    runtime = ServingRuntime(pipe.index, RuntimeConfig(
+        max_batch=args.batch, max_wait=args.max_wait_ms / 1e3,
+        cache_bytes=args.cache_kb * 1024, auto_flush=False))
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
         t: [] for t in range(args.tenants)}     # (slot, tokens) live docs
@@ -100,7 +115,7 @@ def main(argv=None):
             victims = [docs_of[tenant].pop(0)[0] for _ in range(4)]
             pipe.delete(tenant, victims)
         else:                                   # query burst, mixed tenants
-            want = {}
+            want = []
             for _ in range(args.batch):
                 t = int(rng.integers(args.tenants))
                 if not docs_of[t]:
@@ -108,13 +123,13 @@ def main(argv=None):
                 slot, toks = docs_of[t][int(rng.integers(len(docs_of[t])))]
                 q_emb = pipe._embed(jnp.asarray(toks[None]))
                 q_codes, _ = quantize_int8(q_emb, per_vector=True)
-                rid = sched.submit(t, np.asarray(q_codes[0]))
-                want[rid] = (t, slot)
+                want.append((runtime.submit(t, np.asarray(q_codes[0])),
+                             t, slot))
             t0 = time.perf_counter()
-            results = sched.flush()
+            runtime.flush()
             t_query += time.perf_counter() - t0
-            for rid, (t, slot) in want.items():
-                got = np.asarray(results[rid].indices)
+            for handle, t, slot in want:
+                got = np.asarray(handle.result().indices)
                 valid = got[got >= 0]
                 owner = np.asarray(pipe.index.arena.owner)
                 leaks += int(np.sum(owner[valid] != t))
@@ -135,7 +150,7 @@ def main(argv=None):
     print(f"[trace] {args.steps} steps: {ingested} docs ingested "
           f"({st.deletes} tombstoned, {st.compactions} compactions, "
           f"{st.rebuilds} rebuilds), {queries} queries in "
-          f"{sched.launches} launches")
+          f"{runtime.launches} launches")
     if queries:
         print(f"[query ] {queries / max(t_query, 1e-9):8.1f} q/s   top-1 hit "
               f"{hits}/{queries}   cross-tenant leaks {leaks} (must be 0)")
@@ -143,6 +158,13 @@ def main(argv=None):
         print(f"[ingest] {ingested / max(t_ingest, 1e-9):8.1f} rows/s online "
               f"(no rebuild; arena {pipe.index.num_live}/"
               f"{pipe.index.capacity} live)")
+    if runtime.cache is not None and queries:
+        cs = runtime.cache_stats()
+        served = runtime.stage1_bytes_streamed + runtime.stage1_bytes_sram
+        print(f"[cache ] {cs['hits']}/{cs['hits'] + cs['misses']} cluster "
+              f"hits, {runtime.stage1_bytes_sram:,}/{max(served, 1):,} "
+              f"stage-1 bytes from cache "
+              f"({cs['stale_evictions']} stale evictions)")
     print(f"[energy] {ledger.total_uj:.2f} uJ/query "
           f"(DRAM {100 * ledger.proportions()['DRAM']:.1f}%)")
 

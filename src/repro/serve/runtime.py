@@ -1,0 +1,576 @@
+"""Session-aware serving runtime: deadline batcher + hot-cluster cache.
+
+The wearable workload is a stream of small, temporally-correlated request
+bursts: T users' agents each fire a query every few seconds, and
+consecutive queries of one session probe the SAME few clusters
+(continuous monitoring revisits the same part of the corpus). This module
+is the serving layer that exploits both properties on top of the
+cluster-pruned cascade:
+
+  * `ServingRuntime` — a dynamic batcher that grew out of the synchronous
+    `tenancy.scheduler` submit/flush loop: requests get FUTURE-STYLE
+    handles, admission is deadline-OR-max-batch (a batch launches the
+    moment it is full, or when the oldest request's deadline arrives —
+    whichever comes first), partial batches pad to power-of-two buckets
+    (one compiled executable per bucket), and batch formation is
+    per-tenant fair (round-robin across tenants ordered by deadline, so
+    one chatty user cannot starve the rest of a flush).
+
+  * `HotClusterCache` — an EdgeRAG-style byte-budgeted LRU over gathered
+    stage-1 plane views, keyed by (arena generation, tenant, cluster).
+    When a flush runs the cluster cascade, the prune's cluster selection
+    runs host-side (the engine's own `select_clusters`, so the choice is
+    identical by construction) and the per-lane stage-1 view is assembled
+    from cached cluster slices plus fresh gathers; only the MISSES stream
+    plane bytes from HBM. Any arena mutation bumps the generation and
+    invalidates every entry — a stale view can never be served. A
+    per-tenant RECENT-CLUSTER prior (the clusters the tenant's last turns
+    probed) warms the cache between session turns.
+
+  * The launch ledger (`engine.SchedulePlan` via `cache_split_plan`)
+    splits stage-1 bytes into HBM misses vs SRAM hits, and
+    `energy.cost_cascade` charges hits at SRAM rates — so the runtime
+    reports the measured uJ/query saving of the cache, in the paper's
+    own accounting currency.
+
+Results are BIT-IDENTICAL to the uncached cascade (and to sequential
+retrieval): the cache changes where stage-1 bytes come from, never what
+is scored — pinned by the parity and property suites in
+tests/test_serve_runtime.py and tests/test_runtime_properties.py.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import math
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, engine, quantization
+from repro.core.retrieval import NO_TENANT, RetrievalResult
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Host-side serving knobs.
+
+    max_batch: lanes per launch (full batch => immediate launch).
+    max_wait: seconds a request may sit in the queue before its default
+        deadline forces a (possibly partial) launch. 0 = launch only when
+        full or explicitly flushed.
+    fairness: "deadline_rr" interleaves tenants round-robin (ordered by
+        their head request's deadline); "fifo" preserves strict arrival
+        order (the legacy scheduler's grouping).
+    cache_bytes: hot-cluster cache budget in bytes of cached stage-1
+        plane views (0 disables caching — every flush streams from HBM).
+    prior_clusters: how many recently-probed clusters to remember per
+        tenant (the session prior that pre-warms the cache each flush).
+    auto_flush: launch full batches directly from submit() instead of
+        waiting for poll()/flush().
+    """
+
+    max_batch: int = 16
+    max_wait: float = 0.005
+    fairness: str = "deadline_rr"
+    cache_bytes: int = 0
+    prior_clusters: int = 8
+    auto_flush: bool = True
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_wait < 0:
+            raise ValueError("max_wait must be >= 0")
+        if self.fairness not in ("deadline_rr", "fifo"):
+            raise ValueError(f"unknown fairness policy {self.fairness!r}")
+        if self.cache_bytes < 0 or self.prior_clusters < 0:
+            raise ValueError("cache_bytes/prior_clusters must be >= 0")
+
+
+class RequestHandle:
+    """Future-style handle for one submitted query.
+
+    Resolved by the runtime when the request's batch launches; `result()`
+    drains the runtime if the request is still queued (or raises with
+    ``wait=False``)."""
+
+    __slots__ = ("request_id", "tenant_id", "deadline", "launch_index",
+                 "_runtime", "_result")
+
+    def __init__(self, runtime: "ServingRuntime", request_id: int,
+                 tenant_id: int, deadline: float):
+        self.request_id = request_id
+        self.tenant_id = tenant_id
+        self.deadline = deadline
+        self.launch_index: int | None = None   # which launch resolved it
+        self._runtime = runtime
+        self._result: RetrievalResult | None = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self, *, wait: bool = True) -> RetrievalResult:
+        if self._result is None:
+            if not wait:
+                raise RuntimeError(
+                    f"request {self.request_id} still queued; poll() or "
+                    "flush() the runtime (or call result(wait=True))")
+            self._runtime.flush()
+        assert self._result is not None
+        return self._result
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        state = "done" if self.done() else "pending"
+        return (f"RequestHandle(id={self.request_id}, "
+                f"tenant={self.tenant_id}, {state})")
+
+
+@dataclasses.dataclass
+class _Pending:
+    handle: RequestHandle
+    query: np.ndarray             # (D,) int8
+    seq: int                      # arrival order
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    view: np.ndarray              # (nblocks * block_rows, D//2) uint8
+    nbytes: int
+
+
+class HotClusterCache:
+    """Byte-budgeted LRU of gathered stage-1 cluster views.
+
+    Entries are keyed (tenant, cluster) and valid only for the arena
+    generation they were gathered under: `sync_generation` clears the
+    whole cache whenever the arena mutated (insert/delete/compact all
+    bump the generation), so a stale plane view can never be served —
+    correctness never depends on the eviction heuristic. Within a
+    generation, eviction is least-recently-used under `budget_bytes`.
+    """
+
+    def __init__(self, budget_bytes: int):
+        if budget_bytes < 0:
+            raise ValueError("budget_bytes must be >= 0")
+        self.budget_bytes = budget_bytes
+        self._entries: "collections.OrderedDict[tuple[int, int], _CacheEntry]" = (
+            collections.OrderedDict())
+        self._generation = -1
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.stale_evictions = 0
+        self.rejected = 0          # views larger than the whole budget
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def sync_generation(self, generation: int) -> None:
+        """Invalidate everything gathered under an older arena state."""
+        if generation != self._generation:
+            self.stale_evictions += len(self._entries)
+            self._entries.clear()
+            self.bytes_used = 0
+            self._generation = generation
+
+    def get(self, tenant: int, cluster: int) -> _CacheEntry | None:
+        entry = self._entries.get((tenant, cluster))
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end((tenant, cluster))
+        self.hits += 1
+        return entry
+
+    def peek(self, tenant: int, cluster: int) -> bool:
+        """Membership check without touching hit/miss counters or LRU."""
+        return (tenant, cluster) in self._entries
+
+    def touch(self, tenant: int, cluster: int) -> None:
+        """Refresh an entry's LRU position without counting a hit."""
+        if (tenant, cluster) in self._entries:
+            self._entries.move_to_end((tenant, cluster))
+
+    def put(self, tenant: int, cluster: int, view: np.ndarray) -> None:
+        nbytes = int(view.nbytes)
+        key = (tenant, cluster)
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self.bytes_used -= old.nbytes
+        if nbytes > self.budget_bytes:
+            # Refuse admission outright: squeezing one oversized view in
+            # would first flush EVERY other tenant's warm entries and
+            # then evict the new entry itself — an empty cache for
+            # nothing. The cluster stays re-streamed from HBM instead.
+            self.rejected += 1
+            return
+        self._entries[key] = _CacheEntry(view=view, nbytes=nbytes)
+        self.bytes_used += nbytes
+        while self.bytes_used > self.budget_bytes and self._entries:
+            _, evicted = self._entries.popitem(last=False)
+            self.bytes_used -= evicted.nbytes
+            self.evictions += 1
+
+
+class ServingRuntime:
+    """Deadline-batched, cache-warmed serving loop over a MultiTenantIndex.
+
+    The dynamic-batcher successor of `tenancy.CrossTenantBatchScheduler`
+    (which is now a thin wrapper over this class): submit() returns a
+    future-style RequestHandle, poll(now) launches every batch that is
+    full or past its oldest deadline, flush() drains the queue. All
+    ledgers accumulate in engine.SchedulePlan units (exact analytic
+    bytes), split HBM vs cache-SRAM when the hot-cluster cache serves
+    part of a launch's stage-1 view.
+    """
+
+    def __init__(self, index, cfg: RuntimeConfig | None = None):
+        self.index = index
+        self.cfg = cfg or RuntimeConfig()
+        self.cache = (HotClusterCache(self.cfg.cache_bytes)
+                      if self.cfg.cache_bytes > 0 else None)
+        self._queues: "collections.OrderedDict[int, collections.deque[_Pending]]" = (
+            collections.OrderedDict())
+        self._num_pending = 0
+        self._next_id = 0
+        self._seq = 0
+        # (generation, host mirror of the arena MSB plane) — misses gather
+        # from here (the "HBM stream"); rebuilt only after a mutation.
+        self._plane_host: tuple[int, np.ndarray] | None = None
+        # tenant -> recently probed clusters, most recent first (the
+        # session prior that warms the cache between turns).
+        self._recent: dict[int, list[int]] = {}
+        # -- ledgers (engine.SchedulePlan units, exact bytes) --------------
+        self.launches = 0
+        self.queries_served = 0
+        self.stage1_bytes_streamed = 0    # HBM bytes, all launches
+        self.stage1_bytes_sram = 0        # cache-served bytes, all launches
+        self.stage1_bytes_vmapped = 0     # the one-query-at-a-time path
+        self.prefetch_bytes = 0           # prior-warming gathers (HBM)
+        self.stage_bytes: dict[str, int] = {}       # per-stage HBM
+        self.stage_bytes_sram: dict[str, int] = {}  # per-stage cache-SRAM
+        self.last_plan: engine.SchedulePlan | None = None
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, tenant_id: int, query_codes, *,
+               deadline: float | None = None,
+               now: float | None = None) -> RequestHandle:
+        """Enqueue one request; returns its future-style handle.
+
+        deadline: absolute time (same clock as `now`) by which the
+        request must be in a launch; defaults to now + cfg.max_wait."""
+        if int(tenant_id) < 0:
+            raise ValueError(f"tenant id must be >= 0, got {tenant_id}")
+        q = np.asarray(query_codes, np.int8)
+        if q.ndim != 1 or q.shape[0] != self.index.arena.dim:
+            raise ValueError(f"query must be ({self.index.arena.dim},) int8")
+        now = time.monotonic() if now is None else now
+        if deadline is None:
+            # max_wait == 0 means NO deadline-forced launches (the
+            # legacy scheduler contract: launch only when full or
+            # explicitly flushed), not launch-immediately.
+            deadline = (now + self.cfg.max_wait if self.cfg.max_wait > 0
+                        else math.inf)
+        handle = RequestHandle(self, self._next_id, int(tenant_id), deadline)
+        self._next_id += 1
+        pend = _Pending(handle=handle, query=q, seq=self._seq)
+        self._seq += 1
+        self._queues.setdefault(int(tenant_id), collections.deque()).append(
+            pend)
+        self._num_pending += 1
+        if self.cfg.auto_flush and self._num_pending >= self.cfg.max_batch:
+            self._launch(self._form_batch())
+        return handle
+
+    def pending(self) -> int:
+        return self._num_pending
+
+    def _oldest_deadline(self) -> float | None:
+        heads = [q[0].handle.deadline for q in self._queues.values() if q]
+        return min(heads) if heads else None
+
+    def ready(self, now: float | None = None) -> bool:
+        """Would poll() launch something right now?"""
+        if self._num_pending >= self.cfg.max_batch:
+            return True
+        oldest = self._oldest_deadline()
+        if oldest is None:
+            return False
+        now = time.monotonic() if now is None else now
+        return oldest <= now
+
+    def next_deadline(self) -> float | None:
+        """When the queue next forces a launch (None if empty or no
+        pending request carries a finite deadline)."""
+        oldest = self._oldest_deadline()
+        return None if oldest is None or math.isinf(oldest) else oldest
+
+    def poll(self, now: float | None = None) -> list[RequestHandle]:
+        """Launch every batch that is full or past its oldest deadline.
+
+        Returns the handles resolved by this call (possibly empty — a
+        young partial batch keeps waiting for more traffic)."""
+        now = time.monotonic() if now is None else now
+        resolved: list[RequestHandle] = []
+        while self._num_pending and self.ready(now):
+            resolved.extend(self._launch(self._form_batch()))
+        return resolved
+
+    def flush(self) -> list[RequestHandle]:
+        """Drain the queue unconditionally (deadlines ignored)."""
+        resolved: list[RequestHandle] = []
+        while self._num_pending:
+            resolved.extend(self._launch(self._form_batch()))
+        return resolved
+
+    def _form_batch(self) -> list[_Pending]:
+        """Pick up to max_batch pending requests.
+
+        fifo: strict arrival order (the legacy scheduler's grouping).
+        deadline_rr: one request per tenant, round-robin, tenants ordered
+        by their head request's deadline (FIFO within a tenant) — the
+        most urgent tenants are served first and no tenant can occupy
+        more than its share of a contended flush."""
+        group: list[_Pending] = []
+        if self.cfg.fairness == "fifo":
+            # k-way merge of the per-tenant FIFO queues by arrival seq:
+            # O(B log T) per batch instead of a min() scan per request.
+            heads = [(q[0].seq, t) for t, q in self._queues.items() if q]
+            heapq.heapify(heads)
+            while len(group) < self.cfg.max_batch and heads:
+                _, tid = heapq.heappop(heads)
+                group.append(self._pop_from(tid))
+                queue = self._queues.get(tid)
+                if queue:
+                    heapq.heappush(heads, (queue[0].seq, tid))
+        else:
+            # One urgency sort per BATCH (head deadline, then arrival),
+            # then round-robin passes over that order until the batch is
+            # full or the queues drain.
+            order = sorted(
+                (t for t, q in self._queues.items() if q),
+                key=lambda t: (self._queues[t][0].handle.deadline,
+                               self._queues[t][0].seq))
+            while len(group) < self.cfg.max_batch:
+                progressed = False
+                for tid in order:
+                    if len(group) >= self.cfg.max_batch:
+                        break
+                    if self._queues.get(tid):
+                        group.append(self._pop_from(tid))
+                        progressed = True
+                if not progressed:
+                    break
+        return group
+
+    def _pop_from(self, tid: int) -> _Pending:
+        """Pop a tenant's head request; drop its deque once drained so a
+        long-lived runtime's admission scans stay proportional to the
+        ACTIVE tenants, not every tenant ever seen."""
+        queue = self._queues[tid]
+        pend = queue.popleft()
+        self._num_pending -= 1
+        if not queue:
+            del self._queues[tid]
+        return pend
+
+    # -- launching ----------------------------------------------------------
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return 1 << (n - 1).bit_length() if n > 1 else 1
+
+    def _launch(self, group: list[_Pending]) -> list[RequestHandle]:
+        b = len(group)
+        if b == 0:
+            return []
+        pb = self._bucket(b)
+        queries = np.zeros((pb, self.index.arena.dim), np.int8)
+        tids = np.full((pb,), NO_TENANT, np.int32)
+        for i, req in enumerate(group):
+            queries[i] = req.query
+            tids[i] = req.handle.tenant_id
+        res, plan = self._execute(queries, tids)
+        self.launches += 1
+        self.queries_served += b
+        if plan is not None:
+            self.last_plan = plan
+            # stage1_bytes is what the launch actually streamed from HBM
+            # (padding lanes included); the vmapped comparison counts only
+            # the b REAL requests — a sequential server would never have
+            # dispatched the padding lanes.
+            self.stage1_bytes_streamed += plan.stage1_bytes
+            self.stage1_bytes_sram += plan.stage1_bytes_sram
+            self.stage1_bytes_vmapped += (
+                plan.stage1_bytes_vmapped // plan.batch) * b
+            for s in plan.stages:
+                self.stage_bytes[s.name] = (
+                    self.stage_bytes.get(s.name, 0) + s.bytes_hbm)
+                if s.bytes_sram:
+                    self.stage_bytes_sram[s.name] = (
+                        self.stage_bytes_sram.get(s.name, 0) + s.bytes_sram)
+        for i, req in enumerate(group):
+            req.handle.launch_index = self.launches - 1
+            req.handle._result = RetrievalResult(
+                indices=res.indices[i], scores=res.scores[i],
+                candidate_indices=res.candidate_indices[i])
+        return [req.handle for req in group]
+
+    def _execute(self, queries: np.ndarray, tids: np.ndarray
+                 ) -> tuple[RetrievalResult, engine.SchedulePlan | None]:
+        if self.cache is not None:
+            policy = self.index.cluster_policy(tids)
+            if isinstance(policy, engine.ClusterPolicy):
+                return self._execute_cached(queries, tids, policy)
+        res = self.index.retrieve(jnp.asarray(queries), tids)
+        return res, self.index.last_plan
+
+    # -- the hot-cluster-cache path -----------------------------------------
+
+    def _host_plane(self) -> np.ndarray:
+        gen = self.index.arena.generation
+        if self._plane_host is None or self._plane_host[0] != gen:
+            self._plane_host = (gen, np.asarray(self.index.arena.msb_plane))
+        return self._plane_host[1]
+
+    def _gather_cluster(self, plane: np.ndarray, blocks: np.ndarray,
+                        block_rows: int) -> np.ndarray:
+        """Materialize one cluster's plane view (bitplanar.gather_blocks'
+        conventions: rows past the plane read as zero rows)."""
+        n = plane.shape[0]
+        rows = (blocks[:, None] * block_rows
+                + np.arange(block_rows)).reshape(-1)
+        view = plane[np.minimum(rows, n - 1)].copy()
+        view[rows >= n] = 0
+        return view
+
+    def _cluster_blocks_of(self, table: np.ndarray, lane: int,
+                           cluster: int) -> np.ndarray:
+        row = table[lane, cluster] if table.ndim == 3 else table[cluster]
+        return row[row >= 0]
+
+    def _warm_from_prior(self, table: np.ndarray, tids: np.ndarray,
+                         plane: np.ndarray, block_rows: int) -> int:
+        """Prefetch each batch tenant's recently-probed clusters.
+
+        Touches entries that are still resident (refreshing their LRU
+        position) and re-gathers ones an arena mutation invalidated —
+        the bytes are charged to the launch as HBM traffic (`prefetch`),
+        the win is that the session's NEXT probes hit."""
+        bytes_fetched = 0
+        lane_of = {}
+        for i, t in enumerate(tids):
+            if int(t) >= 0:
+                lane_of.setdefault(int(t), i)
+        for t, lane in lane_of.items():
+            for c in self._recent.get(t, ()):
+                if self.cache.peek(t, c):
+                    self.cache.touch(t, c)
+                    continue
+                blocks = self._cluster_blocks_of(table, lane, c)
+                if blocks.size == 0:
+                    continue
+                view = self._gather_cluster(plane, blocks, block_rows)
+                self.cache.put(t, c, view)
+                bytes_fetched += int(view.nbytes)
+        return bytes_fetched
+
+    def _execute_cached(self, queries: np.ndarray, tids: np.ndarray,
+                        policy: engine.ClusterPolicy
+                        ) -> tuple[RetrievalResult, engine.SchedulePlan]:
+        index = self.index
+        db = index.arena.db()
+        self.cache.sync_generation(index.arena.generation)
+        plane = self._host_plane()
+        table = np.asarray(policy.cluster_blocks)
+        br = policy.block_rows
+        d2 = plane.shape[1]
+        mb = table.shape[-1]
+        q = jnp.asarray(queries)
+        q_msb = quantization.msb_nibble(q)
+        fns = engine.stage_fns(index.cfg.backend)
+        # The SAME selection + expansion the in-graph CentroidPrune runs:
+        # the cached path can never probe different clusters than the
+        # uncached cascade would.
+        top_clusters = engine.select_clusters(q_msb, policy, index.cfg, fns)
+        rows, member, _ = engine.expand_cluster_view(policy, top_clusters,
+                                                     db.num_docs)
+        prefetched = self._warm_from_prior(table, tids, plane, br)
+        tc = np.asarray(top_clusters)
+        bsz, nprobe = tc.shape
+        hit_bytes = miss_bytes = 0
+        view = np.zeros((bsz, nprobe * mb * br, d2), np.uint8)
+        for i in range(bsz):
+            t = int(tids[i])
+            if t < 0:
+                continue                      # padding lane: all holes
+            for p in range(nprobe):
+                c = int(tc[i, p])
+                entry = self.cache.get(t, c)
+                if entry is None:
+                    blocks = self._cluster_blocks_of(table, i, c)
+                    if blocks.size == 0:
+                        continue              # empty cluster: zero rows
+                    cluster_view = self._gather_cluster(plane, blocks, br)
+                    self.cache.put(t, c, cluster_view)
+                    miss_bytes += int(cluster_view.nbytes)
+                else:
+                    cluster_view = entry.view
+                    hit_bytes += entry.nbytes
+                view[i, p * mb * br: p * mb * br + cluster_view.shape[0]] = (
+                    cluster_view)
+        vp = engine.ViewPolicy(rows=rows, member=member,
+                               msb_rows=jnp.asarray(view))
+        res = index.engine.retrieve(q, db, vp)
+        # Ledger: the analytic cluster plan with the approx stage split
+        # into measured HBM misses (+ prior prefetches) vs cache hits.
+        base = engine.plan(index.cfg, num_docs=db.num_docs, dim=db.dim,
+                           batch=bsz, kind="cluster",
+                           num_clusters=policy.centroid_msb.shape[0],
+                           view_rows=engine.probe_rows(policy))
+        plan = engine.cache_split_plan(base,
+                                       hbm_bytes=miss_bytes + prefetched,
+                                       sram_bytes=hit_bytes)
+        self.prefetch_bytes += prefetched
+        index.last_plan = plan
+        # Refresh each tenant's session prior with the clusters this turn
+        # actually probed (most recent first, bounded).
+        if self.cfg.prior_clusters:
+            for i in range(bsz):
+                t = int(tids[i])
+                if t < 0:
+                    continue
+                fresh = list(dict.fromkeys(int(c) for c in tc[i]))
+                old = [c for c in self._recent.get(t, []) if c not in fresh]
+                self._recent[t] = (fresh + old)[:self.cfg.prior_clusters]
+        return res, plan
+
+    # -- reporting ----------------------------------------------------------
+
+    def cache_stats(self) -> dict:
+        if self.cache is None:
+            return {"enabled": False}
+        return {"enabled": True, "entries": len(self.cache),
+                "bytes_used": self.cache.bytes_used,
+                "budget_bytes": self.cache.budget_bytes,
+                "hits": self.cache.hits, "misses": self.cache.misses,
+                "evictions": self.cache.evictions,
+                "stale_evictions": self.cache.stale_evictions,
+                "rejected": self.cache.rejected}
+
+    def energy_ledger(self, dim: int | None = None):
+        """cost_cascade of the most recent launch's measured plan."""
+        if self.last_plan is None:
+            raise RuntimeError("no launch has run yet")
+        return energy.cost_cascade(self.last_plan.stages,
+                                   dim or self.index.arena.dim,
+                                   batch=self.last_plan.batch)

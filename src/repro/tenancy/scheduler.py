@@ -1,110 +1,67 @@
 """Cross-tenant batch scheduler: many users, one kernel launch.
 
-Requests from different tenants accumulate in a host-side queue; flush()
-packs up to `max_batch` of them into ONE batched segment-masked two-stage
-retrieval over the shared arena (the engine core — batch-native matmuls,
-not a vmap). A mixed batch of B users therefore costs one launch AND one
-stream of the arena's MSB plane for the whole batch, instead of B
-sequential dispatches each re-streaming the plane over B per-user
-databases. The exact analytic byte counts of every flush accumulate in
-`stage1_bytes_streamed` / `stage1_bytes_vmapped`.
-
-Partial batches are padded up to the next power of two with NO_TENANT
-lanes (a sentinel matching no arena slot, so padding returns all-invalid
-results and costs no extra compilation): jit caches one executable per
-bucket, not one per queue length.
+Historically this module owned the host-side queue + flush loop; that
+machinery grew into the full dynamic batcher in `repro.serve.runtime`
+(deadline admission, future-style handles, per-tenant fairness, the
+hot-cluster cache). `CrossTenantBatchScheduler` survives as the thin
+synchronous facade over a `ServingRuntime` configured for the legacy
+contract: strict FIFO grouping, no deadline-triggered launches, no
+cache — flush() packs up to `max_batch` requests into ONE batched
+segment-masked retrieval over the shared arena per group, padding
+partial groups to power-of-two buckets with NO_TENANT lanes, exactly as
+before. The exact analytic byte counts of every flush accumulate in
+`stage1_bytes_streamed` / `stage1_bytes_vmapped` / `stage_bytes`.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.retrieval import NO_TENANT, RetrievalResult
+from repro.core.retrieval import RetrievalResult
 from repro.tenancy.tenants import MultiTenantIndex
 
 
-@dataclasses.dataclass(frozen=True)
-class _Pending:
-    request_id: int
-    tenant_id: int
-    query_codes: np.ndarray          # (D,) int8
-
-
-def _bucket(n: int) -> int:
-    return 1 << (n - 1).bit_length() if n > 1 else 1
-
-
 class CrossTenantBatchScheduler:
-    """Queue + flush loop around MultiTenantIndex.retrieve."""
+    """Queue + flush loop around MultiTenantIndex.retrieve.
+
+    A compatibility facade: `repro.serve.runtime.ServingRuntime` is the
+    full dynamic batcher this wraps (submit there returns future-style
+    handles and batches launch on deadlines; here submit returns an int
+    ticket resolved by an explicit flush())."""
 
     def __init__(self, index: MultiTenantIndex, *, max_batch: int = 16):
-        if max_batch < 1:
-            raise ValueError("max_batch must be >= 1")
+        # Imported here: repro.serve pulls in the RAG pipelines (which
+        # import this package), so a module-level import would be cyclic.
+        from repro.serve.runtime import RuntimeConfig, ServingRuntime
         self.index = index
         self.max_batch = max_batch
-        self._queue: list[_Pending] = []
-        self._next_id = 0
-        self.launches = 0             # batched launches issued (diagnostics)
-        # Analytic traffic ledger (engine.SchedulePlan units, exact bytes):
-        # what the batched launches streamed vs what the same requests
-        # would have streamed one query at a time.
-        self.stage1_bytes_streamed = 0
-        self.stage1_bytes_vmapped = 0
-        # Per-CASCADE-STAGE ledger: stage name ("prune"/"approx"/"exact")
-        # -> total bytes every flush streamed for that stage.
-        self.stage_bytes: dict[str, int] = {}
+        self._rt = ServingRuntime(index, RuntimeConfig(
+            max_batch=max_batch, max_wait=0.0, fairness="fifo",
+            cache_bytes=0, auto_flush=False))
 
     def submit(self, tenant_id: int, query_codes) -> int:
         """Enqueue one request; returns a ticket id resolved by flush()."""
-        if int(tenant_id) < 0:
-            raise ValueError(f"tenant id must be >= 0, got {tenant_id}")
-        q = np.asarray(query_codes, np.int8)
-        if q.ndim != 1 or q.shape[0] != self.index.arena.dim:
-            raise ValueError(f"query must be ({self.index.arena.dim},) int8")
-        rid = self._next_id
-        self._next_id += 1
-        self._queue.append(_Pending(rid, int(tenant_id), q))
-        return rid
+        return self._rt.submit(tenant_id, query_codes).request_id
 
     def pending(self) -> int:
-        return len(self._queue)
+        return self._rt.pending()
+
+    @property
+    def launches(self) -> int:
+        return self._rt.launches
+
+    @property
+    def stage1_bytes_streamed(self) -> int:
+        return self._rt.stage1_bytes_streamed
+
+    @property
+    def stage1_bytes_vmapped(self) -> int:
+        return self._rt.stage1_bytes_vmapped
+
+    @property
+    def stage_bytes(self) -> dict[str, int]:
+        return self._rt.stage_bytes
 
     def flush(self) -> dict[int, RetrievalResult]:
         """Drain the queue in max_batch groups; one launch per group.
 
-        Returns {ticket id -> per-request RetrievalResult} with batch lanes
-        sliced back out (padding lanes are dropped)."""
-        out: dict[int, RetrievalResult] = {}
-        while self._queue:
-            group = self._queue[:self.max_batch]
-            del self._queue[:len(group)]
-            b = len(group)
-            pb = _bucket(b)
-            queries = np.zeros((pb, self.index.arena.dim), np.int8)
-            tids = np.full((pb,), NO_TENANT, np.int32)
-            for i, req in enumerate(group):
-                queries[i] = req.query_codes
-                tids[i] = req.tenant_id
-            # tids stay host-side: index.retrieve derives the windowed
-            # layout from them before anything touches the device.
-            res = self.index.retrieve(jnp.asarray(queries), tids)
-            self.launches += 1
-            plan = self.index.last_plan
-            if plan is not None:
-                # stage1_bytes is what the launch ACTUALLY streamed (the
-                # padded lanes included); the vmapped comparison counts
-                # only the b REAL requests — a sequential server would
-                # never have dispatched the padding lanes.
-                self.stage1_bytes_streamed += plan.stage1_bytes
-                self.stage1_bytes_vmapped += (
-                    plan.stage1_bytes_vmapped // plan.batch) * b
-                for s in plan.stages:
-                    self.stage_bytes[s.name] = (
-                        self.stage_bytes.get(s.name, 0) + s.bytes_hbm)
-            for i, req in enumerate(group):
-                out[req.request_id] = RetrievalResult(
-                    indices=res.indices[i], scores=res.scores[i],
-                    candidate_indices=res.candidate_indices[i])
-        return out
+        Returns {ticket id -> per-request RetrievalResult} with batch
+        lanes sliced back out (padding lanes are dropped)."""
+        return {h.request_id: h.result() for h in self._rt.flush()}

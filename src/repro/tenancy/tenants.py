@@ -307,6 +307,16 @@ class MultiTenantIndex:
         cache[key] = policy
         return policy
 
+    def cluster_policy(self, tenant_ids) -> engine.ClusterPolicy | None:
+        """The ClusterPolicy a batched retrieve for `tenant_ids` would run
+        (None when clustering is off/untrained or the prune would not beat
+        the windowed/masked scan). Public for the serving runtime, which
+        runs the SAME selection host-side to assemble cached stage-1
+        views — going through this method guarantees the cached path and
+        the in-graph cascade can never see different block tables."""
+        tids_host = np.atleast_1d(np.asarray(tenant_ids, np.int32))
+        return self._cluster_layout(tids_host)
+
     def retrieve(self, query_codes, tenant_ids) -> retrieval.RetrievalResult:
         """Per-tenant retrieval; single query or mixed cross-tenant batch.
 

@@ -55,3 +55,68 @@ def test_table3_sciFact_energy_scale():
 def test_monotone_in_corpus_size():
     vals = [en.cost_hierarchical(n).total_pj for n in (100, 1000, 10000)]
     assert vals[0] < vals[1] < vals[2]
+
+
+# ---------------------------------------------------------------------------
+# Hot-cluster-cache accounting (the serving runtime's SRAM-rate hits)
+# ---------------------------------------------------------------------------
+
+def _cluster_plan(hit_bytes: int, miss_bytes: int, *, batch: int = 8):
+    """A cluster-cascade SchedulePlan whose approx stage streamed
+    `miss_bytes` from HBM and served `hit_bytes` from the cache."""
+    from repro.core import engine
+    from repro.core.retrieval import RetrievalConfig
+    cfg = RetrievalConfig(k=5, metric="cosine")
+    base = engine.plan(cfg, num_docs=16384, dim=256, batch=batch,
+                       kind="cluster", num_clusters=64, view_rows=1024)
+    return engine.cache_split_plan(base, hbm_bytes=miss_bytes,
+                                   sram_bytes=hit_bytes)
+
+
+def test_fully_warm_trace_charges_zero_stage1_hbm_bytes():
+    """Every probed cluster served from the cache => the approx stage's
+    HBM ledger is exactly zero, and only the (tiny, resident-codebook)
+    prune + exact-gather stages still touch DRAM."""
+    total = 8 * 1024 * 128                       # the launch's view bytes
+    plan = _cluster_plan(hit_bytes=total, miss_bytes=0)
+    approx = [s for s in plan.stages if s.name == "approx"][0]
+    assert approx.bytes_hbm == 0 and approx.bytes_sram == total
+    assert plan.stage1_bytes == 0 and plan.stage1_bytes_sram == total
+    warm = en.cost_cascade(plan.stages, 256, batch=plan.batch)
+    cold = en.cost_cascade(_cluster_plan(0, total).stages, 256,
+                           batch=plan.batch)
+    # the warm launch's DRAM bits are exactly the cold launch's MINUS the
+    # whole stage-1 view (only prune + exact remain)
+    assert cold.dram_bits - warm.dram_bits == pytest.approx(
+        total * 8 / plan.batch)
+    # MACs are untouched: cache hits still flow through the PEs
+    assert warm.macs == cold.macs
+    assert warm.pe_bits == cold.pe_bits
+    assert warm.total_pj < cold.total_pj
+
+
+def test_cost_monotone_in_cache_budget_shrinkage():
+    """A smaller cache budget can only move stage-1 bytes from SRAM back
+    to HBM; total energy must rise monotonically as the hit share
+    shrinks (DRAM pJ/bit >> SRAM pJ/bit)."""
+    total = 8 * 1024 * 128
+    costs = []
+    for hit_frac in (1.0, 0.75, 0.5, 0.25, 0.0):  # shrinking budget
+        hit = int(total * hit_frac)
+        plan = _cluster_plan(hit_bytes=hit, miss_bytes=total - hit)
+        costs.append(en.cost_cascade(plan.stages, 256,
+                                     batch=plan.batch).total_pj)
+    assert all(a < b for a, b in zip(costs, costs[1:]))
+
+
+def test_cache_hits_charged_at_sram_not_dram_rates():
+    """A hit byte costs 1x SRAM read; a missed byte costs DRAM + 2x SRAM
+    (streamed in, read back). The delta per byte must match exactly."""
+    total = 1024 * 128
+    warm = en.cost_cascade(_cluster_plan(total, 0).stages, 256, batch=1)
+    cold = en.cost_cascade(_cluster_plan(0, total).stages, 256, batch=1)
+    bits = total * 8
+    assert cold.dram_pj - warm.dram_pj == pytest.approx(
+        bits * en.PAPER_28NM.dram)
+    assert cold.sram_pj - warm.sram_pj == pytest.approx(
+        bits * en.PAPER_28NM.sram)       # 2x streamed vs 1x cached read

@@ -1,0 +1,359 @@
+"""Serving runtime: deadline batcher, fairness, hot-cluster cache parity.
+
+The bit-exactness contract under test: the runtime's batching, padding,
+and hot-cluster cache may change WHEN work runs and WHERE stage-1 bytes
+come from, but never WHAT any request retrieves — including across arena
+mutations, where a stale cached view must be evicted, not served.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RetrievalConfig, quantize_int8
+from repro.core.clustering import ClusterParams
+from repro.serve.runtime import (HotClusterCache, RequestHandle,
+                                 RuntimeConfig, ServingRuntime)
+from repro.tenancy import MultiTenantIndex
+
+DIM = 64
+
+
+def make_clustered_index(tenants=4, docs_per_tenant=96, k=3, seed=0,
+                         num_clusters=8, nprobe=2, block_rows=32,
+                         capacity=1024):
+    rng = np.random.default_rng(seed)
+    idx = MultiTenantIndex(capacity, DIM, RetrievalConfig(k=k),
+                           clusters=ClusterParams(num_clusters=num_clusters,
+                                                  nprobe=nprobe,
+                                                  block_rows=block_rows))
+    docs = {}
+    for t in range(tenants):
+        d = rng.normal(size=(docs_per_tenant, DIM)).astype(np.float32)
+        idx.ingest(t, jnp.asarray(d))
+        docs[t] = d
+    idx.compact()
+    queries = {t: np.asarray(quantize_int8(jnp.asarray(d[:8]),
+                                           per_vector=True)[0])
+               for t, d in docs.items()}
+    return idx, queries
+
+
+def make_plain_index(tenants=3, seed=0, capacity=256, k=3):
+    """No clustering; interleaved ingests FRAGMENT every tenant so the
+    batched path falls back to the full-arena masked scan (whose per-lane
+    results are independent of batch composition by construction)."""
+    rng = np.random.default_rng(seed)
+    idx = MultiTenantIndex(capacity, DIM, RetrievalConfig(k=k))
+    docs = {t: [] for t in range(tenants)}
+    for _ in range(3):
+        for t in range(tenants):
+            d = rng.normal(size=(5, DIM)).astype(np.float32)
+            idx.ingest(t, jnp.asarray(d))
+            docs[t].append(d)
+    docs = {t: np.concatenate(v) for t, v in docs.items()}
+    assert any(len(idx.table.segments(t)) > 1 for t in range(tenants))
+    queries = {t: np.asarray(quantize_int8(jnp.asarray(d[:6]),
+                                           per_vector=True)[0])
+               for t, d in docs.items()}
+    return idx, queries
+
+
+# ---------------------------------------------------------------------------
+# Admission: deadlines, max-batch, fairness, handles
+# ---------------------------------------------------------------------------
+
+def test_deadline_admission_virtual_clock():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, max_wait=5.0,
+                                           auto_flush=False))
+    h = rt.submit(0, q[0][0], now=0.0)
+    assert not rt.ready(now=0.0) and rt.poll(now=4.9) == []
+    assert not h.done() and rt.pending() == 1
+    assert rt.next_deadline() == 5.0
+    resolved = rt.poll(now=5.0)                 # deadline forces the launch
+    assert resolved == [h] and h.done() and rt.pending() == 0
+
+
+def test_full_batch_launches_immediately_from_submit():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=2, max_wait=100.0))
+    h1 = rt.submit(0, q[0][0], now=0.0)
+    assert not h1.done()                        # partial batch waits
+    h2 = rt.submit(1, q[1][0], now=0.0)
+    assert h1.done() and h2.done() and rt.launches == 1
+
+
+def test_explicit_deadline_overrides_max_wait():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, max_wait=100.0,
+                                           auto_flush=False))
+    h = rt.submit(0, q[0][0], now=0.0, deadline=1.0)
+    assert rt.poll(now=0.5) == [] and rt.poll(now=1.0) == [h]
+
+
+def test_result_drains_and_wait_false_raises():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, auto_flush=False))
+    h = rt.submit(0, q[0][0], now=0.0)
+    with pytest.raises(RuntimeError, match="still queued"):
+        h.result(wait=False)
+    res = h.result()                            # future-style: drains
+    assert h.done() and np.asarray(res.indices).shape == (3,)
+
+
+def test_round_robin_fairness_no_tenant_starvation():
+    """A chatty tenant floods the queue; the first launch must still carry
+    the quiet tenants' requests instead of 4 lanes of the flooder."""
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=4, auto_flush=False))
+    chatty = [rt.submit(0, q[0][i], now=0.0) for i in range(6)]
+    quiet = [rt.submit(t, q[t][0], now=0.0) for t in (1, 2)]
+    rt.flush()
+    first = [h for h in chatty + quiet if h.launch_index == 0]
+    assert {h.tenant_id for h in first} == {0, 1, 2}
+    assert sum(h.tenant_id == 0 for h in first) == 2
+    # FIFO within a tenant: the flooder's own requests resolve in order.
+    order = sorted(chatty, key=lambda h: h.request_id)
+    launches = [h.launch_index for h in order]
+    assert launches == sorted(launches)
+
+
+def test_fifo_mode_preserves_arrival_grouping():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=4, fairness="fifo",
+                                           auto_flush=False))
+    handles = [rt.submit(0, q[0][i], now=0.0) for i in range(5)]
+    handles.append(rt.submit(1, q[1][0], now=0.0))
+    rt.flush()
+    assert [h.launch_index for h in handles] == [0, 0, 0, 0, 1, 1]
+
+
+def test_partial_batch_pads_to_pow2_bucket():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, auto_flush=False))
+    for i in range(3):
+        rt.submit(0, q[0][i], now=0.0)
+    rt.flush()
+    assert rt.last_plan.batch == 4              # 3 real lanes + 1 padding
+    assert rt.queries_served == 3
+
+
+def test_submit_validation():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx)
+    with pytest.raises(ValueError, match="tenant id"):
+        rt.submit(-1, q[0][0])
+    with pytest.raises(ValueError, match="query must be"):
+        rt.submit(0, q[0][0][:DIM // 2])
+    with pytest.raises(ValueError, match="max_batch"):
+        RuntimeConfig(max_batch=0)
+    with pytest.raises(ValueError, match="fairness"):
+        RuntimeConfig(fairness="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Hot-cluster cache: bit-exact parity, invalidation, accounting
+# ---------------------------------------------------------------------------
+
+def run_batch(rt, idx_queries, tenants):
+    handles = [rt.submit(t, idx_queries[t][i], now=0.0)
+               for t in tenants for i in range(2)]
+    rt.flush()
+    return handles
+
+
+def test_cache_hit_path_bit_identical_to_miss_path():
+    """Turn 2 re-issues turn 1's queries: every cluster view comes from
+    the cache, and every result must be bit-identical to the cold turn
+    AND to the uncached ClusterPolicy cascade."""
+    idx, q = make_clustered_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           auto_flush=False))
+    cold = run_batch(rt, q, range(4))
+    assert rt.cache_stats()["misses"] > 0
+    hbm_after_cold = rt.stage1_bytes_streamed
+    warm = run_batch(rt, q, range(4))
+    assert rt.stage1_bytes_streamed == hbm_after_cold   # fully warm: 0 HBM
+    assert rt.last_plan.stage1_bytes == 0
+    assert rt.last_plan.stage1_bytes_sram > 0
+    # uncached reference (same grouping, direct index.retrieve)
+    tids = np.asarray([t for t in range(4) for _ in range(2)], np.int32)
+    Q = jnp.asarray(np.stack([q[t][i] for t in range(4) for i in range(2)]))
+    ref = idx.retrieve(Q, tids)
+    for lane, (c, w) in enumerate(zip(cold, warm)):
+        for res in (c.result(), w.result()):
+            assert jnp.array_equal(res.indices, ref.indices[lane])
+            assert jnp.array_equal(res.scores, ref.scores[lane])
+            assert jnp.array_equal(res.candidate_indices,
+                                   ref.candidate_indices[lane])
+
+
+def test_cache_straddling_arena_mutation_evicts_stale_views():
+    """Warm the cache, MUTATE the arena (insert + delete), query again:
+    the stale generation's views must be evicted, and the results must
+    equal a fresh uncached retrieval over the mutated arena."""
+    rng = np.random.default_rng(7)
+    idx, q = make_clustered_index(seed=7)
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           auto_flush=False))
+    run_batch(rt, q, range(4))                      # warm
+    assert len(rt.cache) > 0
+    gen_before = idx.arena.generation
+    new = rng.normal(size=(4, DIM)).astype(np.float32)
+    idx.ingest(0, jnp.asarray(new))                 # mutation 1
+    idx.delete(1, idx.table.slots(1)[:2])           # mutation 2
+    assert idx.arena.generation > gen_before
+    handles = run_batch(rt, q, range(4))
+    assert rt.cache_stats()["stale_evictions"] > 0
+    tids = np.asarray([t for t in range(4) for _ in range(2)], np.int32)
+    Q = jnp.asarray(np.stack([q[t][i] for t in range(4) for i in range(2)]))
+    ref = idx.retrieve(Q, tids)
+    for lane, h in enumerate(handles):
+        res = h.result()
+        assert jnp.array_equal(res.indices, ref.indices[lane])
+        assert jnp.array_equal(res.scores, ref.scores[lane])
+    # a query for the newly ingested doc sees the post-mutation arena
+    # exactly as the uncached cascade does (no stale view hides it)
+    qn, _ = quantize_int8(jnp.asarray(new[:1]), per_vector=True)
+    h = rt.submit(0, np.asarray(qn[0]), now=0.0)
+    rt.flush()
+    fresh = idx.retrieve(qn, np.asarray([0], np.int32))
+    assert jnp.array_equal(h.result().indices, fresh.indices[0])
+    assert jnp.array_equal(h.result().scores, fresh.scores[0])
+    # and the tombstoned rows can never surface
+    gone = np.asarray(idx.arena.owner) < 0
+    for hh in handles:
+        got = np.asarray(hh.result().indices)
+        assert not gone[got[got >= 0]].any()
+
+
+def test_cache_budget_shrinkage_monotone_hbm_bytes():
+    """Shrinking the byte budget can only increase HBM traffic on the
+    same trace (and never changes results)."""
+    byts, results = [], []
+    for budget in (1 << 20, 6 * 1024, 0):
+        idx, q = make_clustered_index(seed=3)
+        rt = ServingRuntime(idx, RuntimeConfig(max_batch=8,
+                                               cache_bytes=budget,
+                                               auto_flush=False))
+        hs = []
+        for _ in range(3):
+            hs.extend(run_batch(rt, q, range(4)))
+        byts.append(rt.stage1_bytes_streamed)
+        results.append([np.asarray(h.result().indices) for h in hs])
+    assert byts[0] <= byts[1] <= byts[2]
+    assert byts[0] < byts[2]
+    for got in results[1:]:
+        for a, b in zip(results[0], got):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_session_prior_rewarms_cache_after_mutation():
+    """After a mutation invalidates the cache, the tenant's recent-cluster
+    prior prefetches its session's clusters at the next flush — so the
+    probes themselves hit."""
+    rng = np.random.default_rng(5)
+    idx, q = make_clustered_index(seed=5)
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           prior_clusters=8,
+                                           auto_flush=False))
+    run_batch(rt, q, range(4))                      # establishes priors
+    idx.ingest(0, jnp.asarray(rng.normal(size=(4, DIM)).astype(np.float32)))
+    hits_before = rt.cache_stats()["hits"]
+    run_batch(rt, q, range(4))                      # same session turns
+    assert rt.prefetch_bytes > 0
+    assert rt.cache_stats()["hits"] > hits_before
+
+
+def test_lru_cache_unit_behavior():
+    cache = HotClusterCache(budget_bytes=100)
+    v = np.zeros(40, np.uint8)
+    cache.sync_generation(1)
+    cache.put(0, 0, v)
+    cache.put(0, 1, v)
+    assert cache.get(0, 0) is not None              # 0 now most recent
+    cache.put(0, 2, v)                              # evicts LRU = (0, 1)
+    assert cache.bytes_used <= 100 and len(cache) == 2
+    assert cache.peek(0, 0) and not cache.peek(0, 1)
+    assert cache.evictions == 1
+    cache.sync_generation(2)                        # arena mutated
+    assert len(cache) == 0 and cache.stale_evictions == 2
+    with pytest.raises(ValueError):
+        HotClusterCache(budget_bytes=-1)
+
+
+def test_oversized_view_rejected_without_flushing_cache():
+    """A view larger than the whole budget must be refused admission —
+    NOT evict every resident tenant's entries on its way to nowhere."""
+    cache = HotClusterCache(budget_bytes=100)
+    cache.sync_generation(1)
+    cache.put(0, 0, np.zeros(40, np.uint8))
+    cache.put(1, 0, np.zeros(40, np.uint8))
+    cache.put(2, 7, np.zeros(400, np.uint8))        # > budget: rejected
+    assert cache.rejected == 1 and cache.evictions == 0
+    assert cache.peek(0, 0) and cache.peek(1, 0) and not cache.peek(2, 7)
+    assert cache.bytes_used == 80
+
+
+def test_max_wait_zero_means_no_deadline_launches():
+    """max_wait=0 is the legacy contract: partial batches launch only
+    when full or explicitly flushed, never by the clock."""
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=4, max_wait=0.0,
+                                           auto_flush=False))
+    h = rt.submit(0, q[0][0], now=0.0)
+    assert rt.next_deadline() is None
+    assert rt.poll(now=1e9) == [] and not h.done()  # clock can't force it
+    explicit = rt.submit(1, q[1][0], now=0.0, deadline=5.0)
+    assert set(rt.poll(now=5.0)) == {h, explicit}   # explicit still works
+    assert rt.pending() == 0
+
+
+def test_runtime_ledger_matches_plan_accounting():
+    idx, q = make_clustered_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           auto_flush=False))
+    run_batch(rt, q, range(4))
+    plan = rt.last_plan
+    assert plan.kind == "cluster"
+    assert rt.stage_bytes["approx"] == plan.stage1_bytes
+    assert rt.stage_bytes["prune"] == plan.stages[0].bytes_hbm
+    # hits + misses account every probed byte of the launch
+    run_batch(rt, q, range(4))
+    plan2 = rt.last_plan
+    approx = [s for s in plan2.stages if s.name == "approx"][0]
+    assert approx.bytes_hbm == plan2.stage1_bytes == 0
+    assert approx.bytes_sram == plan2.stage1_bytes_sram > 0
+    ledger = rt.energy_ledger()
+    assert ledger.total_uj > 0
+
+
+def test_scheduler_wrapper_still_fifo_and_ledgered():
+    """The legacy CrossTenantBatchScheduler facade keeps its contract on
+    top of the runtime: int tickets, FIFO groups, byte ledgers."""
+    from repro.tenancy import CrossTenantBatchScheduler
+    idx, q = make_clustered_index()
+    sched = CrossTenantBatchScheduler(idx, max_batch=4)
+    rids = [sched.submit(t, q[t][0]) for t in range(4)]
+    rids += [sched.submit(0, q[0][1])]
+    assert sched.pending() == 5
+    out = sched.flush()
+    assert sched.pending() == 0 and sched.launches == 2
+    assert set(out) == set(rids)
+    assert sched.stage1_bytes_streamed > 0
+    assert sched.stage_bytes == {
+        s.name: s.bytes_hbm for s in idx.last_plan.stages} or \
+        sum(sched.stage_bytes.values()) > 0
+
+
+def test_handles_are_single_assignment():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=2))
+    h = rt.submit(0, q[0][0], now=0.0)
+    rt.flush()
+    first = h.result()
+    assert h.result() is first                      # stable after resolve
+    assert isinstance(h, RequestHandle)
+    assert dataclasses.is_dataclass(rt.cfg)
