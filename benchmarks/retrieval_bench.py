@@ -26,11 +26,18 @@ A fourth section drives the SERVING RUNTIME (repro.serve.runtime) over a
 correlated multi-tenant session trace (8 tenants, Zipf cluster
 popularity, sticky per-session focus): the same trace runs cold
 (hot-cluster cache disabled — every flush streams its probed blocks from
-HBM, the pre-cache serving path) and warm (byte-budgeted cache +
-session prior). Gates: the warm runtime must stream >= 2x fewer stage-1
-HBM bytes per query, return BIT-IDENTICAL results to the cold run, and
-match sequential per-request retrieval — so the cache can only ever
-change where bytes come from, never what is retrieved.
+HBM, the pre-cache serving path) and warm (device-resident packed slab
+cache, preloaded). Both are timed as LONG-LIVED session servers and the
+gate compares steady-state per-turn MEDIANS (the warm first pass — slab
+allocation + every fill — is recorded separately). Gates: the warm
+runtime must stream >= 2x fewer stage-1 HBM bytes per query, return
+BIT-IDENTICAL results to the cold run, match sequential per-request
+retrieval — so the cache can only ever change where bytes come from,
+never what is retrieved — AND must not be slower than the cold cascade
+in wall-clock (warm >= cold on full runs, a relaxed bound in smoke).
+The wall-clock gate always participates in the exit code: a warm path
+that wins the bytes ledger while losing latency is a regression, not a
+win.
 
 Parity is asserted bit-for-bit on every shape before anything is timed —
 a kernel-path regression fails the checks instead of silently degrading.
@@ -63,6 +70,14 @@ from repro.kernels import ops                                  # noqa: E402
 # (tiny shapes on shared CI runners); the structural parity + byte-model
 # checks always gate.
 TIMING_CHECK = "batched stage-1 kernel faster than vmapped-scalar at B=32"
+# The serving runtime's warm-vs-cold wall-clock gate ALWAYS gates (this
+# is exactly the regression class that shipped a 0.43x warm path while
+# only bytes/parity/recall were checked): full runs demand warm >= cold;
+# smoke runs keep a relaxed bound (tiny shapes on shared runners are
+# python-overhead-dominated and noisy, but a 2x-slower warm path still
+# fails).
+SERVING_TIMING_CHECK = "serving runtime: warm wall-clock >= cold cascade"
+SERVING_SMOKE_BOUND = 0.5
 # The >= 4x stage-1 byte reduction needs arena >> batch * probe; at smoke
 # shapes the per-lane gathers don't amortize, so the gate is full-run only
 # (the byte MODEL itself — plan == analytic formula — always gates).
@@ -174,6 +189,8 @@ def run(verbose=True, smoke=False):
             serving["recall_warm"] == serving["recall_cold"],
         "serving trace recall@5 >= 0.9 vs planted gold":
             serving["recall_warm"] >= 0.9,
+        SERVING_TIMING_CHECK:
+            serving["time_ratio"] >= (SERVING_SMOKE_BOUND if smoke else 1.0),
     }
     return {"records": records, "checks": checks}
 
@@ -283,20 +300,34 @@ def _session_trace(rng, *, tenants, turns, num_focus, zipf_s=1.1,
     return trace
 
 
-def _run_trace(index, queries_per_turn, *, cache_bytes, prior):
+def _run_trace(index, queries_per_turn, *, cache_bytes, prior, rt=None):
     """Drive one ServingRuntime over the prepared per-turn query batches.
 
-    Returns (runtime, results: list of per-turn {handle list})."""
+    Blocks on every TURN's results before the next turn starts, so the
+    per-turn timings measure COMPLETED retrieval work on both paths —
+    jax dispatch is asynchronous, and a path that syncs per launch must
+    not be compared against one that only enqueued its work (delivering
+    each turn's results before the next is also what a real serving
+    loop does). Pass `rt` to keep driving an existing runtime — the
+    long-lived-session regime where a warm cache is steady-state.
+
+    Returns (runtime, per-turn handle lists, per-turn seconds)."""
     from repro.serve.runtime import RuntimeConfig, ServingRuntime
-    rt = ServingRuntime(index, RuntimeConfig(
-        max_batch=len(queries_per_turn[0]), cache_bytes=cache_bytes,
-        prior_clusters=prior, auto_flush=False))
-    turns = []
+    if rt is None:
+        rt = ServingRuntime(index, RuntimeConfig(
+            max_batch=len(queries_per_turn[0]), cache_bytes=cache_bytes,
+            prior_clusters=prior, preload=cache_bytes > 0,
+            auto_flush=False))
+    turns, per_turn = [], []
     for batch in queries_per_turn:
+        t0 = time.perf_counter()
         handles = [rt.submit(t, q) for t, q, _ in batch]
         rt.flush()
+        jax.block_until_ready([h.result(wait=False).indices
+                               for h in handles])
+        per_turn.append(time.perf_counter() - t0)
         turns.append(handles)
-    return rt, turns
+    return rt, turns, per_turn
 
 
 def _serving_section(records, *, smoke, verbose):
@@ -312,7 +343,11 @@ def _serving_section(records, *, smoke, verbose):
     if smoke:
         tenants, dpt, dim, kc, nprobe, br, turns = 8, 128, 64, 16, 4, 32, 6
     else:
-        tenants, dpt, dim, kc, nprobe, br, turns = 8, 2048, 256, 64, 16, 64, 24
+        # 48 turns: the gate is a per-turn MEDIAN over long-lived
+        # runtimes, so the trace must be long enough for the steady
+        # state to dominate the sample (and for the median to be stable
+        # against this container's multi-ms scheduler stalls).
+        tenants, dpt, dim, kc, nprobe, br, turns = 8, 2048, 256, 64, 16, 32, 48
     k = 5
     capacity = -(-(tenants * dpt + kc) // br) * br
     rng = np.random.default_rng(11)
@@ -355,21 +390,50 @@ def _serving_section(records, *, smoke, verbose):
             batch.append((t, np.asarray(qc[0]), int(slot_of[t][j])))
         queries_per_turn.append(batch)
 
-    # Budget sized so every (tenant, cluster) view fits (cached views are
-    # BLOCK-granular, so boundary blocks are stored once per adjacent
-    # cluster and the worst-case working set exceeds the raw plane
-    # bytes). This is the VMEM-resident regime — a v5e core holds ~16 MiB
-    # — and gives the cache's upper-bound saving; the byte-budget
-    # shrinkage behavior is pinned by tests/test_serve_runtime.py.
-    plane_budget = tenants * kc * 4 * br * (dim // 2)
-    t0 = time.perf_counter()
-    cold_rt, cold_turns = _run_trace(index, queries_per_turn,
-                                     cache_bytes=0, prior=0)
-    t_cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    warm_rt, warm_turns = _run_trace(index, queries_per_turn,
-                                     cache_bytes=plane_budget, prior=8)
-    t_warm = time.perf_counter() - t0
+    # Budget sized so every (tenant, cluster) view fits AT ONCE, measured
+    # from the actual block tables instead of a worst-case formula
+    # (cached views are BLOCK-granular, so boundary blocks are stored
+    # once per adjacent cluster and the per-key working set exceeds the
+    # raw plane bytes — but a 4-blocks-per-view bound over-provisioned
+    # the slab ~3x, and slab rows are real device memory the warm path
+    # pays to allocate and scatter into). This is the VMEM-resident
+    # regime — a v5e core holds ~16 MiB — and gives the cache's
+    # upper-bound saving; the byte-budget shrinkage behavior is pinned
+    # by tests/test_serve_runtime.py.
+    demand_blocks = sum(
+        int((index.cluster_layout(np.asarray([t], np.int32))[1] >= 0).sum())
+        for t in range(tenants))
+    plane_budget = demand_blocks * br * (dim // 2)
+    # Timing protocol: the regression class this section gates is a
+    # STEADY-STATE serving slowdown (the 0.43x warm path was slower on
+    # every launch, not just while the cache filled), so both paths are
+    # timed as a LONG-LIVED session server. One first pass per
+    # configuration builds the runtime, compiles both paths' executables
+    # (cold cascade / slab cascade + fill scatters) and pays the warm
+    # path's cold-start fill phase — its wall-clock is recorded
+    # separately as `first_pass_*` but does not decide the gate. The
+    # timed passes then ALTERNATE cold/warm reps on the SAME runtimes
+    # and the gate compares the per-path MEDIAN per-turn wall-clock: a
+    # per-turn median is robust to the multi-ms scheduler stalls shared
+    # CI machines inject (which a whole-trace total would pass straight
+    # into the ratio), and a steady-state warm path that is slower than
+    # the cold cascade still fails no matter how well it amortizes.
+    reps = 1 if smoke else 3
+    cold_rt, cold_turns, cold_first = _run_trace(
+        index, queries_per_turn, cache_bytes=0, prior=0)
+    warm_rt, warm_turns, warm_first = _run_trace(
+        index, queries_per_turn, cache_bytes=plane_budget, prior=8)
+    cold_pt, warm_pt = [], []
+    for _ in range(reps):
+        _, _, pt = _run_trace(index, queries_per_turn, cache_bytes=0,
+                              prior=0, rt=cold_rt)
+        cold_pt += pt
+        _, _, pt = _run_trace(index, queries_per_turn,
+                              cache_bytes=plane_budget, prior=8,
+                              rt=warm_rt)
+        warm_pt += pt
+    t_cold = sorted(cold_pt)[len(cold_pt) // 2]
+    t_warm = sorted(warm_pt)[len(warm_pt) // 2]
 
     # -- parity: the cache may never change WHAT is retrieved ------------
     warm_cold = True
@@ -405,9 +469,15 @@ def _serving_section(records, *, smoke, verbose):
     uj_cold = cold_rt.energy_ledger().total_uj
     uj_warm = warm_rt.energy_ledger().total_uj
 
+    time_ratio = t_cold / max(t_warm, 1e-9)
     records[f"serving_runtime_T{tenants}"] = {
-        "median_ms": t_warm * 1e3 / turns, "ref_median_ms": t_cold * 1e3 / turns,
-        "ratio": t_cold / max(t_warm, 1e-9),
+        "median_ms": t_warm * 1e3, "ref_median_ms": t_cold * 1e3,
+        "ratio": time_ratio,
+        "time_ratio": time_ratio,
+        # Cold-start accounting (NOT gated): the warm runtime's first
+        # pass over the trace, paying slab allocation + every fill.
+        "first_pass_warm_ms_per_turn": sum(warm_first) * 1e3 / turns,
+        "first_pass_cold_ms_per_turn": sum(cold_first) * 1e3 / turns,
         "stage1_hbm_bytes_per_query_warm": warm_bpq,
         "stage1_hbm_bytes_per_query_cold": cold_bpq,
         "hbm_reduction": reduction,
@@ -430,11 +500,14 @@ def _serving_section(records, *, smoke, verbose):
         print(f"  energy (final steady-state launch): cold {uj_cold:.2f} "
               f"uJ/query -> warm {uj_warm:.2f} uJ/query")
         print(f"  recall@{k}: cold {recall_cold:.3f} warm {recall_warm:.3f}"
-              f"   wall-clock/turn: cold {t_cold * 1e3 / turns:.1f} ms "
-              f"warm {t_warm * 1e3 / turns:.1f} ms (CPU-indicative)")
+              f"   steady-state wall-clock/turn (median): cold "
+              f"{t_cold * 1e3:.2f} ms warm {t_warm * 1e3:.2f} ms "
+              f"({time_ratio:.2f}x, warm must not be slower; warm "
+              f"first pass incl. fills "
+              f"{sum(warm_first) * 1e3 / turns:.1f} ms/turn)")
     return {"reduction": reduction, "warm_cold_parity": warm_cold,
             "sequential_parity": seq_parity, "recall_warm": recall_warm,
-            "recall_cold": recall_cold}
+            "recall_cold": recall_cold, "time_ratio": time_ratio}
 
 
 if __name__ == "__main__":

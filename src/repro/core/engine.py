@@ -138,16 +138,15 @@ class ClusterPolicy:
 class ViewPolicy:
     """An explicitly MATERIALIZED per-lane stage-1 row view.
 
-    The serving runtime's hot-cluster-cache path: the cluster selection
-    ran host-side (`select_clusters` + `expand_cluster_view`, the same
-    functions CentroidPrune runs in-graph) and the stage-1 plane rows
-    were assembled from cached cluster views plus fresh gathers — so the
-    engine receives the view as data instead of streaming it from the
-    plane. Bit-exact with the ClusterPolicy path by construction: `rows`
-    and `member` come from the same expansion, and `msb_rows` holds the
-    same plane bytes (padding regions may hold zeros instead of the
-    clamped block-0 bytes the gather path streams, which is invisible —
-    every padding row is masked out of both stages by `member`).
+    A generic entry point for callers that assembled the stage-1 rows
+    themselves (the serving runtime's pre-slab cache path used this; the
+    runtime now hands the engine a `SlabPolicy` instead so hit bytes stay
+    device-resident). Bit-exact with the ClusterPolicy path by
+    construction: `rows` and `member` come from the same expansion, and
+    `msb_rows` holds the same plane bytes (padding regions may hold zeros
+    instead of the clamped block-0 bytes the gather path streams, which
+    is invisible — every padding row is masked out of both stages by
+    `member`).
 
     rows: (B, R) global row ids of the view (-1 holes).
     member: (B, R) bool visibility mask (tenant + cluster + hole masking).
@@ -157,6 +156,75 @@ class ViewPolicy:
     rows: jax.Array
     member: jax.Array
     msb_rows: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabPolicy:
+    """ClusterPolicy whose stage-1 blocks stream from TWO sources: the
+    arena plane (misses) or a device-resident hot-cluster cache slab
+    (hits) — the serving runtime's cached path.
+
+    The slab is an EXTENSION REGION of one combined plane array,
+    ``slab_plane = [arena msb_plane | cache slab rows]`` (rows >= N are
+    cache-owned copies of hot clusters' rows), so "two sources" costs
+    exactly one block gather: `slab_blocks` is the host-built per-launch
+    indirection table — each entry either a plane block id (miss) or
+    ``N/block_rows + slab block id`` (hit). Selection stays in-graph
+    (the same centroid scoring + validity the cold cascade runs); the
+    host only resolves the (tenant, cluster) -> slab-slot map into this
+    bounded int32 table. Hit bytes are therefore never re-uploaded and a
+    cluster shared by several lanes of one tenant is stored once.
+
+    Slab blocks are DENSELY PACKED: a resident cluster's rows are copied
+    contiguously into its slots instead of mirroring whole plane blocks,
+    so a cluster run that straddles a plane-block boundary occupies
+    ``ceil(rows/block_rows)`` slab blocks (the plane needs up to one
+    more). Each combined-space block therefore carries two per-GENERATION
+    scalars, `block_gid0`/`block_count`: the global plane row id of its
+    first row and the number of live rows. For plane blocks these are
+    ``block * block_rows`` and `block_rows`; for slab blocks the cache
+    writes them at fill time. The view's global row ids and pad masking
+    are derived from these in-graph — which is what lets a fully-warm
+    launch run at a NARROWER static table width than the plane table
+    (fewer gathered rows per probe), the slab's real latency win.
+
+    Bit-parity with the ClusterPolicy cascade holds even though the slab
+    path runs a leaner schedule:
+
+      * the gather skips the reference path's clamp + zero-row mask —
+        every id in `slab_blocks` is pre-validated (holes are clamped to
+        block 0 and ride the member mask, exactly like the cold path's
+        candidate masking) and `slab_plane` is a whole number of blocks;
+      * `inv_norms` is a per-generation f32 sidecar of the cosine key's
+        ``rsqrt(max(norm, 1))`` factor (0 for empty rows), so stage 1
+        multiplies instead of gathering int64 norms and re-deriving the
+        rsqrt per launch — same f32 bits, computed once;
+      * `packed_labels` fuses the arena's per-row (owner, cluster label)
+        pair into one int32 (`packed_membership`), so the member mask is
+        one gather + one compare — injective, hence bit-identical to the
+        cold path's ``own == tenant & label == cluster`` conjunction;
+      * `cluster_valid` is the host-precomputed (B, K) selection
+        validity — the same ``first block >= 0`` bits the in-graph prune
+        derives from the plane table, so selection cannot differ between
+        table widths;
+      * packing preserves each cluster's ascending row order and every
+        pad/hole/foreign row is masked before both top-k stages, so the
+        surviving candidates and their order — and therefore the final
+        outputs — are bit-identical to the cold cascade.
+    """
+
+    packed_labels: jax.Array    # (N,) int32 packed (owner, label) rows
+    tenant_ids: jax.Array       # (B,) int32
+    centroid_msb: jax.Array     # (K, D//2) uint8
+    centroid_norms: jax.Array   # (K,) int32
+    cluster_valid: jax.Array    # (B, K) bool selection validity
+    slab_blocks: jax.Array      # (B, K, W) int32 combined-space blocks
+    block_gid0: jax.Array       # (NB + S,) int32 first global row per block
+    block_count: jax.Array      # (NB + S,) int32 live rows per block
+    slab_plane: jax.Array       # (N + S*br, D//2) uint8 plane + cache slab
+    inv_norms: jax.Array        # (N + S*br,) f32 rsqrt-norm sidecar
+    nprobe: int
+    block_rows: int
 
 
 jax.tree_util.register_pytree_node(
@@ -176,9 +244,30 @@ jax.tree_util.register_pytree_node(
 jax.tree_util.register_pytree_node(
     ViewPolicy, lambda p: ((p.rows, p.member, p.msb_rows), None),
     lambda _, l: ViewPolicy(*l))
+jax.tree_util.register_pytree_node(
+    SlabPolicy,
+    lambda p: ((p.packed_labels, p.tenant_ids, p.centroid_msb,
+                p.centroid_norms, p.cluster_valid, p.slab_blocks,
+                p.block_gid0, p.block_count, p.slab_plane, p.inv_norms),
+               (p.nprobe, p.block_rows)),
+    lambda aux, l: SlabPolicy(*l, nprobe=aux[0], block_rows=aux[1]))
+
+
+def packed_membership(owner: jax.Array, labels: jax.Array,
+                      num_clusters: int) -> jax.Array:
+    """Fuse per-row (owner, cluster label) into one int32 sidecar.
+
+    ``(owner + 1) * (K + 1) + (label + 1)`` — injective for owner >= -1
+    and label in [-1, K), so ``packed[row] == (t + 1) * (K + 1) + c + 1``
+    holds exactly when ``owner[row] == t and labels[row] == c``. Built
+    once per arena generation by the serving cache; lets the slab
+    cascade's member mask run as a single gather + compare."""
+    k1 = num_clusters + 1
+    return ((owner.astype(jnp.int32) + 1) * k1
+            + labels.astype(jnp.int32) + 1)
 
 Policy = (PlainPolicy | MaskedPolicy | WindowedPolicy | ClusterPolicy
-          | ViewPolicy)
+          | ViewPolicy | SlabPolicy)
 
 
 # ---------------------------------------------------------------------------
@@ -230,6 +319,23 @@ def stage1_gather_batched_jnp(q_msb: jax.Array, msb_plane: jax.Array,
     return stage1_rows_batched_jnp(q_msb, gathered)
 
 
+def stage1_gather_resident_jnp(q_msb: jax.Array, plane: jax.Array,
+                               block_ids: jax.Array, *,
+                               block_rows: int) -> jax.Array:
+    """Lean block-gathered stage 1 for PRE-VALIDATED ids (the slab path).
+
+    Same contract as `stage1_gather_batched_jnp` minus the out-of-range
+    convention: every id in `block_ids` must address a whole block of
+    `plane` (the serving runtime guarantees this host-side — the arena
+    is a block multiple and slab slots are always fully allocated), so
+    the reference clamp + zero-row mask over the gathered (B, R, D//2)
+    view is skipped. Bit-equal to the Pallas gather kernel, whose
+    contract never included the clamp in the first place.
+    """
+    rows = bitplanar.expand_block_rows(block_ids, block_rows)
+    return stage1_rows_batched_jnp(q_msb, jnp.take(plane, rows, axis=0))
+
+
 def stage2_rows_batched_jnp(q: jax.Array, msb_rows: jax.Array,
                             lsb_rows: jax.Array) -> jax.Array:
     """Exact INT8 rescoring of gathered per-lane candidate rows.
@@ -249,6 +355,9 @@ class StageFns:
     plane:    stage-1 shared-plane matmul            (B, D) x (N, D/2)
     rows:     stage-1 per-lane materialized rows     (B, D) x (B, W, D/2)
     gather:   stage-1 per-lane block gather          (B, D) x plane + ids
+    gather_resident: the gather over PRE-VALIDATED block ids (the slab
+              path: no clamp / zero-row convention — the Pallas kernel
+              unchanged, the jnp reference without the mask)
     centroid: stage-0 codebook scoring (the codebook is a nibble plane,
               so this is the plane matmul applied to (K, D/2))
     exact:    stage-2 INT8 rescore of gathered candidates
@@ -257,6 +366,7 @@ class StageFns:
     plane: object
     rows: object
     gather: object
+    gather_resident: object
     centroid: object
     exact: object
 
@@ -267,6 +377,7 @@ def stage_fns(backend: str) -> StageFns:
         return StageFns(plane=kops.stage1_scores_batched,
                         rows=kops.stage1_scores_rows,
                         gather=kops.stage1_scores_gather,
+                        gather_resident=kops.stage1_scores_gather_resident,
                         centroid=kops.centroid_scores_batched,
                         exact=kops.stage2_scores_batched)
 
@@ -274,9 +385,14 @@ def stage_fns(backend: str) -> StageFns:
         return stage1_gather_batched_jnp(q_msb, plane, block_ids,
                                          block_rows=block_rows)
 
+    def _gather_resident(q_msb, plane, block_ids, block_rows):
+        return stage1_gather_resident_jnp(q_msb, plane, block_ids,
+                                          block_rows=block_rows)
+
     return StageFns(plane=stage1_plane_batched_jnp,
                     rows=stage1_rows_batched_jnp,
                     gather=_gather,
+                    gather_resident=_gather_resident,
                     centroid=stage1_plane_batched_jnp,
                     exact=stage2_rows_batched_jnp)
 
@@ -305,28 +421,36 @@ def _candidate_budget(cfg: RetrievalConfig, num_docs: int,
     return c
 
 
-def probe_rows(policy: ClusterPolicy) -> int:
+def probe_rows(policy: "ClusterPolicy | SlabPolicy") -> int:
     """Static per-lane row count of the cluster policy's gathered view."""
-    max_blocks = policy.cluster_blocks.shape[-1]
+    table = (policy.slab_blocks if isinstance(policy, SlabPolicy)
+             else policy.cluster_blocks)
     return min(policy.nprobe,
-               policy.centroid_msb.shape[0]) * max_blocks * policy.block_rows
+               policy.centroid_msb.shape[0]) * table.shape[-1] \
+        * policy.block_rows
 
 
 @dataclasses.dataclass
 class _CascadeState:
     """The currency cascade stages refine: WHICH rows are still alive.
 
-    rows:   (B, R) explicit global row ids of the current view (-1 holes),
-            or None when the view is implicit (whole plane / window).
+    rows:   (B, R) explicit global row ids of the current view (-1 holes;
+            the slab path clamps holes instead and lets `member` carry
+            them), or None when the view is implicit (plane / window).
     member: visibility mask aligned with the view (None = all visible).
     block_ids: (B, J) clamped block ids backing `rows` when the view is a
-            block gather (the scalar-prefetch kernel's operand).
+            block gather (the scalar-prefetch kernel's operand; combined
+            plane+slab space under a SlabPolicy).
+    top_clusters: (B, nprobe) selected cluster ids when a centroid prune
+            ran (the serving runtime reads this back for its cache
+            ledger — selection itself stays in-graph).
     result: the final RetrievalResult, set by the terminal stage.
     """
 
     rows: jax.Array | None = None
     member: jax.Array | None = None
     block_ids: jax.Array | None = None
+    top_clusters: jax.Array | None = None
     result: RetrievalResult | None = None
 
 
@@ -342,7 +466,7 @@ class _CascadeCtx:
     fns: StageFns
 
 
-def select_clusters(q_msb: jax.Array, policy: ClusterPolicy,
+def select_clusters(q_msb: jax.Array, policy: "ClusterPolicy | SlabPolicy",
                     cfg: RetrievalConfig, fns: StageFns) -> jax.Array:
     """Stage 0's cluster selection: score the K centroids and keep each
     lane's top-`nprobe` VALID clusters (a cluster with no blocks for the
@@ -355,11 +479,16 @@ def select_clusters(q_msb: jax.Array, policy: ClusterPolicy,
     k_clusters = policy.centroid_msb.shape[0]
     nprobe = min(policy.nprobe, k_clusters)
     scores = fns.centroid(q_msb, policy.centroid_msb)            # (B, K)
-    table = policy.cluster_blocks
-    if table.ndim == 2:
-        valid = (table[:, 0] >= 0)[None, :]
+    if isinstance(policy, SlabPolicy):
+        # Host-precomputed from the same plane table (first block >= 0):
+        # identical bits at any launch table width.
+        valid = policy.cluster_valid
     else:
-        valid = table[:, :, 0] >= 0
+        table = policy.cluster_blocks
+        if table.ndim == 2:
+            valid = (table[:, 0] >= 0)[None, :]
+        else:
+            valid = table[:, :, 0] >= 0
     if cfg.metric == "cosine":
         key = similarity.cosine_key_f32(scores, policy.centroid_norms)
         key = jnp.where(valid, key, -jnp.inf)
@@ -410,6 +539,48 @@ def expand_cluster_view(policy: ClusterPolicy, top_clusters: jax.Array,
     return rows, member, clamped
 
 
+def expand_slab_view(policy: SlabPolicy, top_clusters: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The slab path's lean expansion of the selected clusters.
+
+    Returns (rows (B, R) int32 CLAMPED global plane row ids — holes and
+    pads point at in-range rows and ride the member mask instead of a -1
+    marking, member (B, R) bool, comb_ids (B, J) int32 clamped
+    COMBINED-space block ids for the gather). Row ids are derived from
+    the per-block `block_gid0`/`block_count` origin scalars, so the same
+    code serves both whole-plane-block mirrors (gid0 = block *
+    block_rows, count = block_rows — bitwise the cold path's expansion)
+    and densely packed slab blocks (gid0 = the run row the block starts
+    at, count < block_rows on the tail block, pads masked by `count`).
+    The final outputs are sanitized by ExactRescore's member masking, so
+    the -1 row marking is redundant work; parity with the cold cascade
+    is pinned by tests on both backends.
+    """
+    pol = policy
+    comb = jnp.take_along_axis(pol.slab_blocks,
+                               top_clusters[:, :, None], axis=1)
+    b, _, w = comb.shape
+    comb = comb.reshape(b, -1)                                   # (B, J)
+    br = pol.block_rows
+    hole = comb < 0
+    safe_blk = jnp.maximum(comb, 0)
+    gid0 = jnp.take(pol.block_gid0, safe_blk, axis=0)            # (B, J)
+    cnt = jnp.take(pol.block_count, safe_blk, axis=0)            # (B, J)
+    offs = jnp.arange(br, dtype=jnp.int32)
+    rows = (gid0[:, :, None] + offs[None, None, :]).reshape(b, -1)
+    live = (offs[None, None, :] < cnt[:, :, None]).reshape(b, -1)
+    n = pol.packed_labels.shape[0]
+    rows = jnp.minimum(rows, n - 1)      # tail pads stay gatherable
+    owning = jnp.repeat(jnp.repeat(top_clusters, w, axis=1),
+                        br, axis=1)                              # (B, R)
+    k1 = pol.centroid_msb.shape[0] + 1
+    expected = (pol.tenant_ids[:, None] + 1) * k1 + owning + 1
+    member = (~jnp.repeat(hole, br, axis=1) & live
+              & (jnp.take(pol.packed_labels, rows, axis=0) == expected)
+              & (pol.tenant_ids >= 0)[:, None])
+    return rows, member, safe_blk
+
+
 @dataclasses.dataclass(frozen=True)
 class CentroidPrune:
     """Stage 0: score the K centroids, keep the top-`nprobe` clusters'
@@ -420,10 +591,16 @@ class CentroidPrune:
     def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
         top_clusters = select_clusters(ctx.q_msb, ctx.policy, ctx.cfg,
                                        ctx.fns)
+        if isinstance(ctx.policy, SlabPolicy):
+            rows, member, comb = expand_slab_view(ctx.policy, top_clusters)
+            return dataclasses.replace(state, rows=rows, member=member,
+                                       block_ids=comb,
+                                       top_clusters=top_clusters)
         rows, member, clamped = expand_cluster_view(ctx.policy, top_clusters,
                                                     ctx.db.num_docs)
         return dataclasses.replace(state, rows=rows, member=member,
-                                   block_ids=clamped)
+                                   block_ids=clamped,
+                                   top_clusters=top_clusters)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -436,7 +613,36 @@ class ApproxScan:
         n = db.num_docs
         member = state.member
         view_rows = state.rows          # view-local -> global row id map
-        if isinstance(policy, ViewPolicy):
+        key1 = None                     # set directly by the slab branch
+        if isinstance(policy, SlabPolicy):
+            # Slab-sourced gather (the serving runtime's cached path):
+            # one lean block gather over the combined plane+slab array —
+            # hits stream from the cache region, misses from the plane,
+            # neither is clamped or zero-masked (ids are pre-validated
+            # host-side). The cosine key multiplies the per-generation
+            # f32 rsqrt-norm sidecar instead of gathering int64 norms:
+            # same f32 bits as cosine_key_f32 on the gathered norms (the
+            # trailing + 0.0 canonicalizes the sidecar's masked-zero rows
+            # to the reference's literal +0.0).
+            r = state.rows.shape[1]
+            if r < cfg.k:
+                raise ValueError(f"slab view holds {r} rows < k="
+                                 f"{cfg.k}: raise nprobe or block_rows")
+            c = _candidate_budget(cfg, n, r)
+            scores = ctx.fns.gather_resident(ctx.q_msb, policy.slab_plane,
+                                             state.block_ids,
+                                             block_rows=policy.block_rows)
+            if cfg.metric == "cosine":
+                comb_rows = bitplanar.expand_block_rows(state.block_ids,
+                                                        policy.block_rows)
+                key1 = (scores.astype(jnp.float32)
+                        * jnp.take(policy.inv_norms, comb_rows, axis=0)
+                        + 0.0)
+                key1 = jnp.where(member, key1, -jnp.inf)
+            else:
+                key1 = jnp.where(member, scores, INT32_MIN)
+            base = None
+        elif isinstance(policy, ViewPolicy):
             # Materialized view (the serving runtime's cache path): the
             # rows arrive as data — stage 1 runs the per-lane rows
             # primitive over them; norms stay tiny sidecar reads from the
@@ -490,7 +696,7 @@ class ApproxScan:
                           & (policy.tenant_ids >= 0)[:, None])
             base = None
 
-        if cfg.metric == "cosine":
+        if key1 is None and cfg.metric == "cosine":
             # Approximate cosine key; norms are tiny sidecar reads (the
             # paper stores doc norms in DRAM alongside the planes).
             # Tombstoned rows carry norm 0 (key 0), so even an
@@ -498,7 +704,7 @@ class ApproxScan:
             key1 = similarity.cosine_key_f32(scores, norms)
             if member is not None:
                 key1 = jnp.where(member, key1, -jnp.inf)
-        else:
+        elif key1 is None:
             key1 = scores if member is None else jnp.where(member, scores,
                                                            INT32_MIN)
         _, cand_local = jax.lax.top_k(key1, c)                 # (B, C) view
@@ -567,11 +773,23 @@ def cascade_stages(policy: Policy, cfg: RetrievalConfig) -> tuple:
     path prepends the centroid prune. Future stages (e.g. a binary-sketch
     pre-prune between prune and scan) slot in here.
     """
-    if isinstance(policy, ClusterPolicy):
+    if isinstance(policy, (ClusterPolicy, SlabPolicy)):
         return (CentroidPrune(policy.nprobe), ApproxScan(), ExactRescore())
     # ViewPolicy enters at ApproxScan: its prune already ran host-side
-    # (the serving runtime's cached path) and the view arrives as data.
+    # and the view arrives as data.
     return (ApproxScan(), ExactRescore())
+
+
+def _run_cascade(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                 policy: Policy, cfg: RetrievalConfig) -> _CascadeState:
+    ctx = _CascadeCtx(query_codes=query_codes,
+                      q_msb=quantization.msb_nibble(query_codes),
+                      db=db, policy=policy, cfg=cfg,
+                      fns=stage_fns(cfg.backend))
+    state = _CascadeState()
+    for stage in cascade_stages(policy, cfg):
+        state = stage.run(state, ctx)
+    return state
 
 
 def _cascade_batched(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
@@ -583,17 +801,25 @@ def _cascade_batched(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
     indices are global row/slot ids (-1 for lanes' unfillable positions
     under masking policies).
     """
-    ctx = _CascadeCtx(query_codes=query_codes,
-                      q_msb=quantization.msb_nibble(query_codes),
-                      db=db, policy=policy, cfg=cfg,
-                      fns=stage_fns(cfg.backend))
-    state = _CascadeState()
-    for stage in cascade_stages(policy, cfg):
-        state = stage.run(state, ctx)
-    return state.result
+    return _run_cascade(query_codes, db, policy, cfg).result
+
+
+def _cascade_batched_aux(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
+                         policy: Policy, cfg: RetrievalConfig
+                         ) -> tuple[RetrievalResult, jax.Array | None]:
+    """The cascade plus its selection as an auxiliary output.
+
+    Returns (result, top_clusters) — top_clusters is the (B, nprobe)
+    int32 output of the in-graph CentroidPrune (None for policies without
+    a prune stage). The serving runtime reads this tiny array back after
+    a cached launch to maintain its slot map and hit/miss ledger, instead
+    of re-running selection host-side."""
+    state = _run_cascade(query_codes, db, policy, cfg)
+    return state.result, state.top_clusters
 
 
 retrieve_batched = jax.jit(_cascade_batched, static_argnames=("cfg",))
+retrieve_batched_aux = jax.jit(_cascade_batched_aux, static_argnames=("cfg",))
 
 
 # ---------------------------------------------------------------------------
@@ -761,14 +987,23 @@ class RetrievalEngine:
         """(D,) int8 query -> unbatched result (a B=1 lane of the core)."""
         return _lane(self.retrieve(query_codes[None], db, policy), 0)
 
+    def retrieve_with_clusters(self, query_codes: jax.Array,
+                               db: bitplanar.BitPlanarDB, policy: Policy
+                               ) -> tuple[RetrievalResult, jax.Array | None]:
+        """Batched retrieval plus the prune's (B, nprobe) cluster
+        selection (None for policies without a prune stage). Same jitted
+        cascade; the aux output lets the serving runtime account cache
+        hits without re-deriving selection host-side."""
+        return retrieve_batched_aux(query_codes, db, policy, self.cfg)
+
     def plan_for(self, db: bitplanar.BitPlanarDB, batch: int,
                  policy: Policy = PlainPolicy()) -> SchedulePlan:
         """The analytic SchedulePlan for one launch against `db`."""
         kind = {PlainPolicy: "plain", MaskedPolicy: "masked",
                 WindowedPolicy: "windowed", ClusterPolicy: "cluster",
-                ViewPolicy: "view"}[type(policy)]
+                ViewPolicy: "view", SlabPolicy: "cluster"}[type(policy)]
         window = policy.window if isinstance(policy, WindowedPolicy) else None
-        if isinstance(policy, ClusterPolicy):
+        if isinstance(policy, (ClusterPolicy, SlabPolicy)):
             num_clusters = policy.centroid_msb.shape[0]
             view_rows = probe_rows(policy)
         elif isinstance(policy, ViewPolicy):

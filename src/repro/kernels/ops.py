@@ -147,6 +147,31 @@ def stage1_scores_gather(q_msb: jax.Array, msb_plane: jax.Array,
                                          interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def stage1_scores_gather_resident(q_msb: jax.Array, plane: jax.Array,
+                                  block_ids: jax.Array, *,
+                                  block_rows: int = _sg.DEFAULT_BLOCK_ROWS
+                                  ) -> jax.Array:
+    """The block gather over a RESIDENT, pre-validated plane (slab path).
+
+    Kernel-backed drop-in for engine.stage1_gather_resident_jnp: the
+    serving runtime's combined plane+slab array is always a whole number
+    of `block_rows` blocks and every id in `block_ids` addresses a live
+    block (misses point into the arena region, hits into the cache slab
+    region), so the general wrapper's pad-to-multiple step is skipped
+    outright instead of being a per-launch no-op check. The kernel's
+    contract never included clamping — the gather IS the scan's input
+    stream, two memory regions behind one scalar-prefetched id table."""
+    n = plane.shape[0]
+    if n % block_rows:
+        raise ValueError(f"resident plane must be a block multiple, got "
+                         f"{n} rows with block_rows={block_rows}")
+    q_eo = pack_queries_even_odd(q_msb)
+    return _sg.stage1_int4_gather_pallas(q_eo, plane, block_ids,
+                                         block_rows=block_rows,
+                                         interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("block_k",))
 def centroid_scores_batched(q_msb: jax.Array, centroid_msb: jax.Array,
                             block_k: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:

@@ -93,6 +93,20 @@ def stage1_gather_batched_ref(q_eo: jax.Array, msb_plane: jax.Array,
                       for i in range(block_ids.shape[0])])
 
 
+def stage1_gather_resident_ref(q_eo: jax.Array, plane: jax.Array,
+                               block_ids: jax.Array,
+                               block_rows: int) -> jax.Array:
+    """Oracle for the gather kernel over a RESIDENT pre-validated plane
+    (the serving runtime's combined plane+slab array: every block id is
+    live, the plane is a whole number of blocks, so no clamp or zero-row
+    convention applies — pure gather + score)."""
+    from repro.core.bitplanar import expand_block_rows
+    rows = expand_block_rows(block_ids, block_rows)
+    gathered = jnp.take(plane, rows, axis=0)
+    return jnp.stack([stage1_scores_ref(q_eo[i], gathered[i])
+                      for i in range(block_ids.shape[0])])
+
+
 def stage2_scores_batched_ref(q_eo8: jax.Array, msb_rows: jax.Array,
                               lsb_rows: jax.Array) -> jax.Array:
     """Oracle for the batched stage-2 rescoring kernel.

@@ -23,6 +23,16 @@ masks hole scores downstream via its membership mask, exactly like the
 dense paths mask out-of-segment rows. The plane is padded to a block
 multiple with zero rows, so out-of-range rows score 0 — the jnp reference
 (engine.stage1_gather_batched_jnp) reproduces this bit-for-bit.
+
+The serving runtime's hot-cluster cache drives this SAME kernel over TWO
+sources at once: its `plane` operand is the combined ``[arena plane |
+device-resident cache slab]`` array, and the prefetched id table mixes
+arena-region block ids (cache misses — streamed from HBM) with
+slab-region ids (hits — the cache-owned copies, never re-uploaded). The
+kernel is indifferent: a block id is a block id; on hardware the slab
+region is the natural candidate for pinning in faster memory. That path
+is pre-validated host-side, so its jnp reference is the unclamped
+engine.stage1_gather_resident_jnp / ref.stage1_gather_resident_ref.
 """
 from __future__ import annotations
 

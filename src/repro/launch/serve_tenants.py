@@ -52,8 +52,14 @@ def main(argv=None):
                          "many centroids (0 = two-stage full scan)")
     ap.add_argument("--nprobe", type=int, default=4)
     ap.add_argument("--cache-kb", type=int, default=0,
-                    help="hot-cluster cache budget in KiB (0 = off; "
-                         "needs --clusters)")
+                    help="hot-cluster cache budget in KiB — the size of "
+                         "the device-resident slab carved next to the "
+                         "arena plane (0 = off; needs --clusters)")
+    ap.add_argument("--no-preload", action="store_true",
+                    help="disable the EdgeRAG-style hot preload (pin a "
+                         "session's clusters into the slab when the "
+                         "budget fits; preloaded tenants are served "
+                         "from the compact slab table)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="deadline slack before a partial batch launches")
     ap.add_argument("--seed", type=int, default=0)
@@ -84,7 +90,9 @@ def main(argv=None):
                   if args.clusters else None))
     runtime = ServingRuntime(pipe.index, RuntimeConfig(
         max_batch=args.batch, max_wait=args.max_wait_ms / 1e3,
-        cache_bytes=args.cache_kb * 1024, auto_flush=False))
+        cache_bytes=args.cache_kb * 1024,
+        preload=args.cache_kb > 0 and not args.no_preload,
+        auto_flush=False))
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
         t: [] for t in range(args.tenants)}     # (slot, tokens) live docs

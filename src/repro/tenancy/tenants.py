@@ -249,15 +249,19 @@ class MultiTenantIndex:
         cache[key] = layout
         return layout
 
-    def _cluster_layout(self, tids_host) -> engine.ClusterPolicy | None:
-        """The batch's ClusterPolicy: per-LANE block tables listing, for
-        each cluster, the arena blocks holding that (tenant, cluster)'s
-        rows. Correct for ANY layout (fresh tail inserts and fragmented
-        tenants just list more blocks — recall never depends on when
-        compact() last ran); after cluster-grouped compaction each entry
-        is a dense run. None when clustering is off/untrained or the
-        gathered view could not hold k rows. Cached for the current arena
-        generation per (codebook generation, cfg, tenant-id tuple)."""
+    def _cluster_layout(self, tids_host
+                        ) -> tuple[engine.ClusterPolicy, np.ndarray] | None:
+        """The batch's (ClusterPolicy, host block table): per-LANE block
+        tables listing, for each cluster, the arena blocks holding that
+        (tenant, cluster)'s rows. Correct for ANY layout (fresh tail
+        inserts and fragmented tenants just list more blocks — recall
+        never depends on when compact() last ran); after cluster-grouped
+        compaction each entry is a dense run. None when clustering is
+        off/untrained or the gathered view could not hold k rows. The
+        host-side np table mirrors `policy.cluster_blocks` — the serving
+        runtime's slot-map lookups read it without a device sync. Cached
+        for the current arena generation per (codebook generation, cfg,
+        tenant-id tuple)."""
         if self.clusters is None or not self.clusters.trained:
             return None
         params = self.cluster_params
@@ -282,7 +286,7 @@ class MultiTenantIndex:
         mb = max((t.shape[1] for t in tables.values()), default=1)
         mb = 1 << (mb - 1).bit_length()      # pow2-bucket recompiles
         nprobe = min(params.nprobe, k_clusters)
-        policy = None
+        layout = None
         # The prune must BUY something: when fragmentation inflates the
         # per-lane gathered view to arena size (many interleaved
         # single-doc ingests before a compact), the windowed/masked scan
@@ -302,18 +306,59 @@ class MultiTenantIndex:
                 centroid_msb=cb.msb_plane, centroid_norms=cb.norms_sq,
                 cluster_blocks=jnp.asarray(table),
                 nprobe=nprobe, block_rows=br)
+            layout = (policy, table)
         if len(cache) > 512:          # many distinct tid tuples backstop
             cache.clear()
-        cache[key] = policy
-        return policy
+        cache[key] = layout
+        return layout
+
+    def cluster_rows(self, tenant: int) -> dict[int, np.ndarray]:
+        """Host-side per-cluster row ids of one tenant, each ASCENDING —
+        the exact rows (and row order) that cluster's view streams in the
+        batched cascade. The serving runtime's hot-cluster cache admits
+        entries from these lists (a contiguous run packs densely into
+        slab slots; row order is what keeps the packed view bit-identical
+        to the cold cascade). Cached per (arena generation, codebook
+        generation, tenant); empty dict when clustering is off/untrained.
+        """
+        if self.clusters is None or not self.clusters.trained:
+            return {}
+        cache = self._layout_cache_for_generation()
+        key = ("cluster_rows", self.clusters.generation, int(tenant))
+        if key in cache:
+            return cache[key]
+        out: dict[int, np.ndarray] = {}
+        slots = np.sort(np.asarray(self.table.slots(int(tenant)), np.int64))
+        if slots.size:
+            labs = np.asarray(self.arena.cluster_labels)[slots]
+            order = np.argsort(labs, kind="stable")   # rows stay ascending
+            labs, rows = labs[order], slots[order].astype(np.int32)
+            bounds = np.flatnonzero(np.diff(labs)) + 1
+            for lab, grp in zip(labs[np.r_[0, bounds]] if labs.size else (),
+                                np.split(rows, bounds)):
+                if lab >= 0:
+                    out[int(lab)] = grp
+        if len(cache) > 512:
+            cache.clear()
+        cache[key] = out
+        return out
 
     def cluster_policy(self, tenant_ids) -> engine.ClusterPolicy | None:
         """The ClusterPolicy a batched retrieve for `tenant_ids` would run
         (None when clustering is off/untrained or the prune would not beat
-        the windowed/masked scan). Public for the serving runtime, which
-        runs the SAME selection host-side to assemble cached stage-1
-        views — going through this method guarantees the cached path and
-        the in-graph cascade can never see different block tables."""
+        the windowed/masked scan)."""
+        layout = self.cluster_layout(tenant_ids)
+        return None if layout is None else layout[0]
+
+    def cluster_layout(self, tenant_ids
+                       ) -> tuple[engine.ClusterPolicy, np.ndarray] | None:
+        """The (ClusterPolicy, host-side (B, K, MB) np block table) a
+        batched retrieve for `tenant_ids` would run. Public for the
+        serving runtime: its hot-cluster cache resolves slot-map lookups
+        against the host table (no device sync) and hands the engine a
+        SlabPolicy built from the SAME policy — going through this method
+        guarantees the cached path and the in-graph cascade can never see
+        different block tables."""
         tids_host = np.atleast_1d(np.asarray(tenant_ids, np.int32))
         return self._cluster_layout(tids_host)
 
@@ -350,7 +395,8 @@ class MultiTenantIndex:
         if bad.size:
             raise ValueError("tenant ids must be >= 0 (or NO_TENANT for "
                              f"padding lanes), got {bad.tolist()}")
-        policy = self._cluster_layout(tids_host)
+        layout = self._cluster_layout(tids_host)
+        policy = None if layout is None else layout[0]
         if policy is None:
             layout = self._contiguous_layout(tids_host)
             if layout is not None:

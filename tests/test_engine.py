@@ -347,6 +347,120 @@ def test_cluster_schedule_plan_per_stage_ledger():
     assert plan.stage1_bytes_vmapped == 4 * 512 * (DIM // 2)
 
 
+# ---------------------------------------------------------------------------
+# Device-resident slab policy (the serving runtime's cached path)
+# ---------------------------------------------------------------------------
+
+def make_slab_setup(metric="cosine", seed=0):
+    """Multi-tenant clustered index + the (policy, host table) layout a
+    batched retrieve would run, with a NO_TENANT padding lane."""
+    rng = np.random.default_rng(seed)
+    idx = MultiTenantIndex(512, DIM, RetrievalConfig(k=3, metric=metric),
+                           clusters=ClusterParams(num_clusters=8, nprobe=3,
+                                                  block_rows=32))
+    for t in range(3):
+        idx.ingest(t, jnp.asarray(
+            rng.normal(size=(96, DIM)).astype(np.float32)))
+    idx.compact()
+    tids = np.asarray([0, 1, 1, 2, NO_TENANT], np.int32)
+    policy, table = idx.cluster_layout(tids)
+    q, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(5, DIM)).astype(np.float32)), per_vector=True)
+    return idx, policy, table, tids, q
+
+
+def make_slab_policy(idx, policy, table, tids, resident_frac, seed=0):
+    """Hand-build a SlabPolicy mirroring `resident_frac` of the
+    (tenant, cluster) views into a slab extension region, exactly as the
+    serving runtime's HotClusterCache does (device block copies)."""
+    import jax
+    db = idx.arena.db()
+    n, d2 = db.msb_plane.shape
+    br = policy.block_rows
+    rng = np.random.default_rng(seed)
+    keys, seen = [], set()
+    for i, t in enumerate(tids.tolist()):
+        if t < 0:
+            continue
+        for c in range(table.shape[1]):
+            bl = table[i, c]
+            bl = bl[bl >= 0]
+            if bl.size and (t, c) not in seen:
+                seen.add((t, c))
+                keys.append((t, c, bl))
+    rng.shuffle(keys)
+    resident = keys[: round(len(keys) * resident_frac)]
+    s_blocks = max(sum(len(bl) for _, _, bl in resident), 1)
+    comb = jnp.concatenate([db.msb_plane,
+                            jnp.zeros((s_blocks * br, d2), jnp.uint8)])
+    nf = jnp.maximum(db.norms_sq.astype(jnp.float32), 1.0)
+    inv = jnp.where(db.norms_sq > 0, jax.lax.rsqrt(nf), 0.0)
+    inv = jnp.concatenate([inv, jnp.zeros((s_blocks * br,), jnp.float32)])
+    slab_tbl = table.copy()
+    base, nxt = n // br, 0
+    gid0 = np.concatenate([np.arange(base, dtype=np.int32) * br,
+                           np.zeros(s_blocks, np.int32)])
+    cnt = np.concatenate([np.full(base, br, np.int32),
+                          np.zeros(s_blocks, np.int32)])
+    src, dst = [], []
+    for t, c, bl in resident:
+        slots = np.arange(nxt, nxt + len(bl), dtype=np.int32)
+        nxt += len(bl)
+        for lane in np.nonzero(tids == t)[0]:
+            slab_tbl[lane, c, :len(bl)] = slots + base
+        # whole-plane-block mirrors: each slot's origin is its source
+        # block's first row, at full occupancy
+        gid0[slots + base] = bl * br
+        cnt[slots + base] = br
+        src.extend(bl.tolist())
+        dst.extend((slots + base).tolist())
+    if src:
+        rows_s = (np.asarray(src)[:, None] * br + np.arange(br)).reshape(-1)
+        rows_d = (np.asarray(dst)[:, None] * br + np.arange(br)).reshape(-1)
+        comb = comb.at[jnp.asarray(rows_d)].set(comb[jnp.asarray(rows_s)])
+        inv = inv.at[jnp.asarray(rows_d)].set(inv[jnp.asarray(rows_s)])
+    return engine_mod.SlabPolicy(
+        packed_labels=engine_mod.packed_membership(
+            policy.owner, policy.labels, policy.centroid_msb.shape[0]),
+        tenant_ids=policy.tenant_ids, centroid_msb=policy.centroid_msb,
+        centroid_norms=policy.centroid_norms,
+        cluster_valid=jnp.asarray(table[:, :, 0] >= 0),
+        slab_blocks=jnp.asarray(slab_tbl), block_gid0=jnp.asarray(gid0),
+        block_count=jnp.asarray(cnt), slab_plane=comb, inv_norms=inv,
+        nprobe=policy.nprobe, block_rows=br)
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+@pytest.mark.parametrize("resident_frac", [0.0, 0.5, 1.0])
+def test_slab_policy_bit_identical_to_cluster_cascade(metric, resident_frac):
+    """The slab path — cold (all blocks stream from the plane region),
+    mixed hit/miss, and fully warm (every probed view slab-resident) —
+    must return results bit-identical to the in-graph ClusterPolicy
+    cascade, on both backends, including the NO_TENANT padding lane and
+    the aux selection output."""
+    idx, policy, table, tids, q = make_slab_setup(metric)
+    db = idx.arena.db()
+    ref = idx.engine.retrieve(q, db, policy)
+    slab = make_slab_policy(idx, policy, table, tids, resident_frac)
+    for backend in ("jnp", "pallas"):
+        eng = RetrievalEngine(dataclasses.replace(idx.cfg, backend=backend))
+        res, tc = eng.retrieve_with_clusters(q, db, slab)
+        assert_results_equal(ref, res)
+        # selection is the SAME in-graph select_clusters the cold prune runs
+        _, ref_tc = eng.retrieve_with_clusters(q, db, policy)
+        np.testing.assert_array_equal(np.asarray(tc), np.asarray(ref_tc))
+    # padding lane surfaces nothing
+    assert np.all(np.asarray(ref.indices)[-1] == -1)
+
+
+def test_slab_policy_plan_maps_to_cluster_kind():
+    idx, policy, table, tids, q = make_slab_setup()
+    slab = make_slab_policy(idx, policy, table, tids, 1.0)
+    plan = idx.engine.plan_for(idx.arena.db(), len(tids), slab)
+    ref = idx.engine.plan_for(idx.arena.db(), len(tids), policy)
+    assert plan == ref and plan.kind == "cluster"
+
+
 def test_multitenant_cluster_path_end_to_end():
     """MultiTenantIndex with clustering: the cascade kind is selected,
     isolation holds, both backends agree, and recall vs the same index

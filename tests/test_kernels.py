@@ -194,3 +194,55 @@ def test_fused_candidates_batched_masked_recall():
     for i in range(b):
         true = set(np.argsort(-masked[i], kind="stable")[:c].tolist())
         assert set(np.asarray(cands)[i].tolist()) == true
+
+
+@pytest.mark.parametrize("n,d,b,j,br", [(256, 256, 4, 6, 32),
+                                        (512, 128, 8, 4, 64),
+                                        (128, 512, 2, 8, 32)])
+def test_stage1_gather_kernels_two_region_slab(n, d, b, j, br):
+    """The scalar-prefetch gather kernel over a combined [plane | slab]
+    array: slab-region blocks mirror plane blocks (the hot-cluster
+    cache's fills), and scoring through either region is bit-equal to
+    the oracles and to the plain-plane gather — the kernel is
+    indifferent to WHICH region an id addresses."""
+    _, bp, q = make_batch(n, d, b, seed=n + b)
+    q_msb = msb_nibble(q)
+    q_eo = ops.pack_queries_even_odd(q_msb)
+    rng = np.random.default_rng(j)
+    ids = jnp.asarray(rng.integers(0, n // br, (b, j)).astype(np.int32))
+    # general wrapper == oracle (clamped/zero-mask convention)
+    got = ops.stage1_scores_gather(q_msb, bp.msb_plane, ids, block_rows=br)
+    want = ref.stage1_gather_batched_ref(q_eo, bp.msb_plane, ids, br)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # two-region slab: copy half the referenced blocks into a slab
+    # extension and remap their ids — scores must not change at all
+    uniq = np.unique(np.asarray(ids))
+    hot = uniq[: max(1, len(uniq) // 2)]
+    slab = jnp.concatenate(
+        [bp.msb_plane,
+         jnp.zeros((len(hot) * br, d // 2), jnp.uint8)])
+    base = n // br
+    remap = {int(pb): base + s for s, pb in enumerate(hot)}
+    rows_s = (hot[:, None] * br + np.arange(br)).reshape(-1)
+    rows_d = np.arange(len(hot) * br) + n
+    slab = slab.at[jnp.asarray(rows_d)].set(slab[jnp.asarray(rows_s)])
+    sids = jnp.asarray(np.vectorize(lambda x: remap.get(int(x), int(x)))(
+        np.asarray(ids)).astype(np.int32))
+    got_slab = ops.stage1_scores_gather_resident(q_msb, slab, sids,
+                                                 block_rows=br)
+    want_slab = ref.stage1_gather_resident_ref(q_eo, slab, sids, br)
+    np.testing.assert_array_equal(np.asarray(got_slab),
+                                  np.asarray(want_slab))
+    np.testing.assert_array_equal(np.asarray(got_slab), np.asarray(got))
+    # the engine's lean jnp reference agrees too
+    from repro.core.engine import stage1_gather_resident_jnp
+    lean = stage1_gather_resident_jnp(q_msb, slab, sids, block_rows=br)
+    np.testing.assert_array_equal(np.asarray(lean), np.asarray(got))
+
+
+def test_stage1_gather_resident_rejects_partial_plane():
+    _, bp, q = make_batch(96, 128, 2, seed=3)
+    ids = jnp.zeros((2, 2), jnp.int32)
+    with pytest.raises(ValueError, match="block multiple"):
+        ops.stage1_scores_gather_resident(msb_nibble(q), bp.msb_plane, ids,
+                                          block_rows=64)

@@ -267,34 +267,196 @@ def test_session_prior_rewarms_cache_after_mutation():
     assert rt.cache_stats()["hits"] > hits_before
 
 
+def _blk_rows(*blocks, br=4):
+    """Row ids of whole plane blocks (mirror-equivalent views)."""
+    return np.concatenate([np.arange(br) + b * br for b in blocks])
+
+
 def test_lru_cache_unit_behavior():
+    """Slot-map LRU over the slab arena: two slots of 40 bytes each."""
     cache = HotClusterCache(budget_bytes=100)
-    v = np.zeros(40, np.uint8)
+    cache.configure(block_rows=4, bytes_per_row=10)   # slot = 40 B, 2 slots
     cache.sync_generation(1)
-    cache.put(0, 0, v)
-    cache.put(0, 1, v)
-    assert cache.get(0, 0) is not None              # 0 now most recent
-    cache.put(0, 2, v)                              # evicts LRU = (0, 1)
+    assert cache.num_slab_blocks == 2
+    assert list(cache.put(0, 0, _blk_rows(3))) == [0]  # blk 3 -> slot 0
+    assert list(cache.put(0, 1, _blk_rows(5))) == [1]
+    assert cache.get(0, 0) is not None                # 0 now most recent
+    slots = cache.put(0, 2, _blk_rows(7))             # evicts LRU = (0, 1)
+    assert slots is not None and len(slots) == 1
     assert cache.bytes_used <= 100 and len(cache) == 2
     assert cache.peek(0, 0) and not cache.peek(0, 1)
     assert cache.evictions == 1
-    cache.sync_generation(2)                        # arena mutated
+    cache.sync_generation(2)                          # arena mutated
     assert len(cache) == 0 and cache.stale_evictions == 2
+    assert len(cache._free) == 2                      # slots reclaimed
     with pytest.raises(ValueError):
         HotClusterCache(budget_bytes=-1)
 
 
+def test_packed_admission_uses_fewer_slots_than_straddling_blocks():
+    """A contiguous run that straddles a plane-block boundary packs into
+    ceil(rows/br) slots — one fewer than mirroring its two blocks — and
+    a fragmented run falls back to whole-block mirroring."""
+    cache = HotClusterCache(budget_bytes=400)
+    cache.configure(block_rows=4, bytes_per_row=10)
+    cache.sync_generation(1)
+    straddle = np.arange(2, 6)                 # rows 2..5: blocks 0 and 1
+    assert len(cache.put(0, 0, straddle)) == 1          # packed: 1 slot
+    assert cache._entries[(0, 0)].n_rows == 4
+    fragmented = np.asarray([0, 1, 9, 10])     # two separate runs
+    assert len(cache.put(0, 1, fragmented)) == 2        # mirrors 2 blocks
+    assert cache.entry_blocks(straddle, 4) == 1
+    assert cache.entry_blocks(fragmented, 4) == 2
+
+
+def test_eviction_skips_zero_slot_empty_cluster_memos():
+    """Slot pressure must evict entries that actually FREE slots: an
+    empty-cluster memo holds none, so evicting it would only destroy the
+    memoization (re-skewing the miss ledger) and inflate the counter."""
+    cache = HotClusterCache(budget_bytes=100)
+    cache.configure(block_rows=4, bytes_per_row=10)   # 2 slots
+    cache.sync_generation(1)
+    cache.put(0, 5, [])                 # empty-cluster memo, oldest
+    cache.put(0, 0, _blk_rows(1))
+    cache.put(0, 1, _blk_rows(2))
+    cache.put(0, 2, _blk_rows(3))       # needs a slot: evicts (0, 0)
+    assert cache.peek(0, 5)             # the zero-slot memo survived
+    assert not cache.peek(0, 0) and cache.evictions == 1
+    with pytest.raises(ValueError, match="preload"):
+        RuntimeConfig(preload=True)     # preload needs a budget
+
+
 def test_oversized_view_rejected_without_flushing_cache():
-    """A view larger than the whole budget must be refused admission —
+    """A view larger than the whole slab must be refused admission —
     NOT evict every resident tenant's entries on its way to nowhere."""
     cache = HotClusterCache(budget_bytes=100)
+    cache.configure(block_rows=4, bytes_per_row=10)   # 2 slots
     cache.sync_generation(1)
-    cache.put(0, 0, np.zeros(40, np.uint8))
-    cache.put(1, 0, np.zeros(40, np.uint8))
-    cache.put(2, 7, np.zeros(400, np.uint8))        # > budget: rejected
+    cache.put(0, 0, _blk_rows(1))
+    cache.put(1, 0, _blk_rows(2))
+    assert cache.put(2, 7, _blk_rows(3, 4, 5)) is None  # > slab: rejected
     assert cache.rejected == 1 and cache.evictions == 0
     assert cache.peek(0, 0) and cache.peek(1, 0) and not cache.peek(2, 7)
     assert cache.bytes_used == 80
+
+
+def test_rejected_reput_keeps_resident_entry():
+    """Regression: the oversized check must run BEFORE the resident entry
+    is popped — a rejected re-put of an existing key used to destroy the
+    valid cached entry and leak its bytes from the working set."""
+    cache = HotClusterCache(budget_bytes=100)
+    cache.configure(block_rows=4, bytes_per_row=10)   # 2 slots
+    cache.sync_generation(1)
+    cache.put(0, 0, _blk_rows(1))
+    used = cache.bytes_used
+    assert cache.put(0, 0, _blk_rows(1, 2, 3)) is None  # oversized re-put
+    assert cache.rejected == 1
+    assert cache.peek(0, 0)                           # entry survived
+    assert cache.bytes_used == used                   # no byte leak
+    entry = cache.get(0, 0)
+    assert entry is not None and entry.n_rows == 4
+    # and a legal re-put still replaces (old slots reclaimed, no leak)
+    assert cache.put(0, 0, _blk_rows(2, 3)) is not None
+    assert cache.bytes_used == 80 and len(cache) == 1
+
+
+def test_empty_clusters_memoized_as_zero_byte_hits():
+    """Regression: empty-cluster probes used to be uncacheable, so every
+    repeat probe counted a fresh miss and skewed the hit rate. They are
+    now memoized as zero-slot entries: repeats hit (for free), and the
+    fully-warm plan still charges zero stage-1 HBM bytes."""
+    # Tenant 3's docs all sit in ONE planted cluster, so its lanes must
+    # probe nprobe=2 clusters of which at least one is empty for it.
+    rng = np.random.default_rng(9)
+    idx = MultiTenantIndex(1024, DIM, RetrievalConfig(k=3),
+                           clusters=ClusterParams(num_clusters=8, nprobe=2,
+                                                  block_rows=32))
+    docs = {}
+    for t in range(3):
+        d = rng.normal(size=(96, DIM)).astype(np.float32)
+        idx.ingest(t, jnp.asarray(d))
+        docs[t] = d
+    base = rng.normal(size=(1, DIM)).astype(np.float32)
+    d3 = (base + 0.01 * rng.normal(size=(24, DIM))).astype(np.float32)
+    idx.ingest(3, jnp.asarray(d3))
+    docs[3] = d3
+    idx.compact()
+    labels = np.asarray(idx.arena.cluster_labels)
+    owner = np.asarray(idx.arena.owner)
+    assert len(set(labels[owner == 3])) < 2           # sparse tenant
+    queries = {t: np.asarray(quantize_int8(jnp.asarray(d[:2]),
+                                           per_vector=True)[0])
+               for t, d in docs.items()}
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           prior_clusters=0,
+                                           auto_flush=False))
+    run_batch(rt, queries, range(4))                  # cold turn
+    misses_cold = rt.cache_stats()["misses"]
+    assert misses_cold > 0
+    for _ in range(3):                                # identical re-probes
+        run_batch(rt, queries, range(4))
+    stats = rt.cache_stats()
+    assert stats["misses"] == misses_cold             # no repeat misses
+    assert stats["hits"] > 0
+    assert rt.last_plan.stage1_bytes == 0             # fully warm
+    # hit rate converges instead of being dragged down by empty probes
+    assert stats["hits"] / (stats["hits"] + stats["misses"]) >= 0.7
+
+
+def test_preload_under_slab_pressure_stays_bit_identical():
+    """Regression: with the slab sized for only PART of the tenant set,
+    a batch's preload admissions can evict another batch tenant's
+    entries (the demand check bounds the batch, not the whole slab) —
+    the runtime must then fall back to the full-width table instead of
+    serving a compact table with silently holed clusters. Rotating
+    batches churn admissions/evictions; every result must stay
+    bit-identical to the uncached index."""
+    idx, q = make_clustered_index(tenants=4)
+    # Budget ~ covers roughly half the tenants' packed views at once.
+    demand = sum(
+        HotClusterCache.entry_blocks(rows, 32) * 32 * (DIM // 2)
+        for t in range(4) for rows in idx.cluster_rows(t).values())
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8,
+                                           cache_bytes=demand // 2,
+                                           preload=True, auto_flush=False))
+    batches = [(0,), (1,), (2, 3), (0, 1), (1, 2, 3), (0, 1, 2, 3), (0, 1)]
+    for tenants in batches:
+        handles = [(t, i, rt.submit(t, q[t][i], now=0.0))
+                   for t in tenants for i in range(2)]
+        rt.flush()
+        for t, i, h in handles:
+            ref = idx.retrieve(jnp.asarray(q[t][i])[None],
+                               np.asarray([t], np.int32))
+            res = h.result()
+            assert jnp.array_equal(res.indices, ref.indices[0])
+            assert jnp.array_equal(res.scores, ref.scores[0])
+    assert rt.cache_stats()["evictions"] > 0    # pressure actually hit
+
+
+def test_preload_serves_compact_table_when_budget_fits():
+    """With the whole tenant set inside the budget, preloaded launches
+    run from the compact slab table (narrower than the plane table) and
+    every probe hits — still bit-identical to the uncached index."""
+    idx, q = make_clustered_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           preload=True, auto_flush=False))
+    for _ in range(2):
+        handles = run_batch(rt, q, range(4))
+    stats = rt.cache_stats()
+    assert stats["misses"] == 0                 # preload pinned everything
+    assert rt.last_plan.stage1_bytes == 0
+    assert rt.last_plan.stage1_bytes_sram > 0
+    tids = np.asarray([t for t in range(4) for _ in range(2)], np.int32)
+    Q = jnp.asarray(np.stack([q[t][i] for t in range(4) for i in range(2)]))
+    ref = idx.retrieve(Q, tids)
+    for lane, h in enumerate(handles):
+        assert jnp.array_equal(h.result().indices, ref.indices[lane])
+        assert jnp.array_equal(h.result().scores, ref.scores[lane])
+    # the compact table is narrower than (or equal to) the plane table,
+    # and the plan's view accounting reflects the narrower launch
+    _, table = idx.cluster_layout(tids)
+    compact, w = rt.cache.compact_table(tids, table.shape[1])
+    assert w <= table.shape[2]
 
 
 def test_max_wait_zero_means_no_deadline_launches():
@@ -346,6 +508,57 @@ def test_scheduler_wrapper_still_fifo_and_ledgered():
     assert sched.stage_bytes == {
         s.name: s.bytes_hbm for s in idx.last_plan.stages} or \
         sum(sched.stage_bytes.values()) > 0
+
+
+def test_cached_path_trace_stability():
+    """The silent failure mode of shape-dependent view building is a
+    recompile per launch. The slab path must compile a BOUNDED number of
+    jit traces across launches with varying hit/miss patterns, batch
+    sizes, and cache states: one cascade trace per pow2 batch bucket
+    (hit/miss patterns only change ARRAY VALUES — the indirection table,
+    never shapes) and a pow2-bounded family of fill scatters."""
+    from repro.core.engine import retrieve_batched_aux
+    from repro.serve.runtime import _apply_fills
+    idx, q = make_clustered_index(docs_per_tenant=96)
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8,
+                                           cache_bytes=24 * 1024,
+                                           auto_flush=False))
+    casc0 = retrieve_batched_aux._cache_size()
+    fill0 = _apply_fills._cache_size()
+    # Many launches: varying batch compositions (1..8 lanes), repeated
+    # and disjoint tenant mixes, a tiny budget that forces eviction/
+    # re-admission churn, and arena mutations in between.
+    rng = np.random.default_rng(0)
+
+    def varied_launches(turns):
+        # lane counts cycle over every pow2 bucket {1, 2, 4, 8} with a
+        # fixed tenant rotation (shapes deterministic per bucket) while
+        # the QUERIES vary freely — so consecutive launches see fresh
+        # hit/miss/eviction patterns at identical trace shapes
+        for i in range(turns):
+            for j in range((1, 2, 3, 8)[i % 4]):
+                t = j % 4
+                rt.submit(t, q[t][int(rng.integers(8))], now=0.0)
+            rt.flush()
+
+    varied_launches(12)
+    idx.ingest(0, jnp.asarray(rng.normal(size=(4, DIM)).astype(np.float32)))
+    varied_launches(4)
+    casc_traces = retrieve_batched_aux._cache_size() - casc0
+    # pow2 batch buckets {1, 2, 4, 8} x at most 2 table-width buckets
+    # (full-width vs compact, and the mutation can re-bucket the block
+    # table once) -> bounded, nowhere near the 16 launches.
+    assert casc_traces <= 12, f"cascade recompiled per launch: {casc_traces}"
+    # fill scatters: pow2 (row-count, block-count) bucket pairs,
+    # logarithmic^2 in the largest fill, reused across launches
+    assert _apply_fills._cache_size() - fill0 <= 24
+    # The sharp property: once the shape buckets exist, MORE launches with
+    # fresh hit/miss/eviction patterns compile NOTHING new — patterns only
+    # change array values (the indirection table), never trace shapes.
+    stable0 = retrieve_batched_aux._cache_size()
+    varied_launches(8)
+    assert retrieve_batched_aux._cache_size() == stable0
+    assert rt.cache_stats()["hits"] > 0 and rt.cache_stats()["evictions"] > 0
 
 
 def test_handles_are_single_assignment():
