@@ -181,6 +181,26 @@ def cost_cascade(stages, dim: int = 512, *, batch: int = 1,
                  cached_bits=cached_bits)
 
 
+def observe_cost(registry, cost: CostBreakdown, *, queries: int = 1) -> None:
+    """Record a launch's priced PER-QUERY cost into a metrics registry.
+
+    Feeds the serving stack's energy distributions: `energy_uj_per_query`
+    is the headline µJ/query histogram (p50/p99 over the ACTUAL served
+    trace, not the last launch), plus a per-module breakdown so exporter
+    output mirrors the paper's Table II columns. `queries` weights the
+    sample by the launch's real batch occupancy so trace-level medians
+    are per QUERY, not per launch. Duck-typed against
+    repro.obs.MetricsRegistry and a no-op when disabled."""
+    if not getattr(registry, "enabled", False):
+        return
+    registry.histogram("energy_uj_per_query").observe(cost.total_uj,
+                                                      queries)
+    for module, pj in (("dram", cost.dram_pj), ("sram", cost.sram_pj),
+                       ("pe", cost.pe_pj), ("simcalc", cost.simcalc_pj),
+                       ("rerank", cost.rerank_pj)):
+        registry.histogram("energy_uj_per_query_module",
+                           module=module).observe(pj * 1e-6, queries)
+
 # ---------------------------------------------------------------------------
 # Paper-figure helpers
 # ---------------------------------------------------------------------------

@@ -874,6 +874,26 @@ class SchedulePlan:
     stages: tuple[StagePlan, ...] = ()
     stage1_bytes_sram: int = 0  # stage-1 bytes served from the hot cache
 
+    def publish(self, registry) -> None:
+        """Fan this launch's per-stage ledger out to a metrics registry.
+
+        Duck-typed against repro.obs.MetricsRegistry (counter(name,
+        **labels).inc(v)); a no-op for disabled registries. Host-side
+        arithmetic over already-computed ints — never called from jitted
+        code."""
+        if not getattr(registry, "enabled", False):
+            return
+        for st in self.stages:
+            registry.counter("stage_rows", stage=st.name).inc(
+                st.rows * self.batch)
+            registry.counter("stage_bytes_hbm", stage=st.name).inc(
+                st.bytes_hbm)
+            if st.bytes_sram:
+                registry.counter("stage_bytes_sram", stage=st.name).inc(
+                    st.bytes_sram)
+            registry.counter("stage_compares", stage=st.name).inc(
+                st.compares * self.batch)
+
 
 def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
          kind: str = "plain", window: int | None = None,

@@ -31,6 +31,8 @@ from repro.configs import get_config
 from repro.core import RetrievalConfig, energy, quantize_int8
 from repro.core.clustering import ClusterParams
 from repro.models import embedder, get_model
+from repro.obs import (MetricsRegistry, Tracer, prometheus_text,
+                       write_chrome_trace)
 from repro.serve import MultiTenantRAGPipeline, RuntimeConfig, ServingRuntime
 
 
@@ -63,6 +65,12 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="deadline slack before a partial batch launches")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the end-of-run metrics registry here in "
+                         "Prometheus text exposition format")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write the request-lifecycle trace here as Chrome "
+                         "trace_event JSON (open in ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.tenants < 1 or args.capacity < args.burst:
         ap.error("need --tenants >= 1 and --capacity >= --burst")
@@ -88,11 +96,17 @@ def main(argv=None):
         clusters=(ClusterParams(num_clusters=args.clusters,
                                 nprobe=args.nprobe, block_rows=32)
                   if args.clusters else None))
+    # The launcher always serves through a REAL registry (per-event cost
+    # is one int add; it also feeds the energy/latency report below);
+    # tracing records one event per request lifecycle stage, so it is
+    # opt-in via --trace-out.
+    registry = MetricsRegistry()
+    tracer = Tracer() if args.trace_out else None
     runtime = ServingRuntime(pipe.index, RuntimeConfig(
         max_batch=args.batch, max_wait=args.max_wait_ms / 1e3,
         cache_bytes=args.cache_kb * 1024,
         preload=args.cache_kb > 0 and not args.no_preload,
-        auto_flush=False))
+        auto_flush=False), registry=registry, tracer=tracer)
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
         t: [] for t in range(args.tenants)}     # (slot, tokens) live docs
@@ -145,16 +159,6 @@ def main(argv=None):
                 queries += 1
 
     st = pipe.index.arena.stats
-    # Charge the rows the last launch ACTUALLY scanned (its SchedulePlan:
-    # the tenant's window or probed cluster blocks) — the arena's full
-    # capacity grossly overstated DRAM bits for windowed/pruned launches.
-    plan = pipe.index.last_plan
-    if plan is not None:
-        ledger = energy.cost_cascade(plan.stages, ecfg.pooled_dim,
-                                     batch=plan.batch)
-    else:
-        ledger = energy.cost_hierarchical(pipe.index.capacity,
-                                          ecfg.pooled_dim)
     print(f"[trace] {args.steps} steps: {ingested} docs ingested "
           f"({st.deletes} tombstoned, {st.compactions} compactions, "
           f"{st.rebuilds} rebuilds), {queries} queries in "
@@ -173,8 +177,23 @@ def main(argv=None):
               f"hits, {runtime.stage1_bytes_sram:,}/{max(served, 1):,} "
               f"stage-1 bytes from cache "
               f"({cs['stale_evictions']} stale evictions)")
-    print(f"[energy] {ledger.total_uj:.2f} uJ/query "
-          f"(DRAM {100 * ledger.proportions()['DRAM']:.1f}%)")
+    # Per-query energy from the ACTUAL served trace: every launch priced
+    # its measured SchedulePlan into the registry's µJ/query histogram
+    # (weighted by real batch occupancy), so the medians below describe
+    # the distribution the trace experienced — not whichever launch
+    # happened to run last. The analytic fallback covers --steps traces
+    # that never served a query.
+    ehist = registry.get("histogram", "energy_uj_per_query")
+    if ehist is not None and ehist.count:
+        ep = ehist.percentiles((50, 99))
+        print(f"[energy] {ep['p50']:.2f} uJ/query median "
+              f"(p99 {ep['p99']:.2f}, {ehist.count} queries served)")
+    else:
+        ledger = energy.cost_hierarchical(pipe.index.capacity,
+                                          ecfg.pooled_dim)
+        print(f"[energy] {ledger.total_uj:.2f} uJ/query (analytic "
+              f"full-corpus estimate; no query was served)")
+    _obs_report(args, registry, tracer)
 
     if args.generate and queries:
         tids = np.asarray([t for t in range(args.tenants)
@@ -184,6 +203,36 @@ def main(argv=None):
         print(f"[gen   ] answered {out.shape[0]} users, "
               f"{out.shape[1]} tokens each")
     return 1 if leaks else 0
+
+
+def _obs_report(args, registry, tracer) -> None:
+    """End-of-run observability summary + optional artifact exports."""
+    rows = []
+    for hname, label, unit, scale in (
+            ("serve_queue_wait_seconds", "queue wait", "ms", 1e3),
+            ("serve_launch_wall_seconds", "launch wall", "ms", 1e3),
+            ("serve_batch_occupancy", "batch occupancy", "req", 1.0),
+            ("energy_uj_per_query", "energy/query", "uJ", 1.0)):
+        h = registry.get("histogram", hname)
+        if h is None or not h.count:
+            continue
+        pc = h.percentiles((50, 95, 99))
+        rows.append((label, h.count, pc["p50"] * scale, pc["p95"] * scale,
+                     pc["p99"] * scale, unit))
+    if rows:
+        print(f"[obs   ] {'metric':<16} {'count':>7} {'p50':>9} "
+              f"{'p95':>9} {'p99':>9}")
+        for label, count, p50, p95, p99, unit in rows:
+            print(f"[obs   ] {label:<16} {count:>7} {p50:>9.3f} "
+                  f"{p95:>9.3f} {p99:>9.3f}  {unit}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(prometheus_text(registry))
+        print(f"[obs   ] metrics -> {args.metrics_out} (prometheus text)")
+    if args.trace_out and tracer is not None:
+        n = write_chrome_trace(args.trace_out, tracer)
+        print(f"[obs   ] trace   -> {args.trace_out} "
+              f"({n} events; open in ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,24 @@
+"""Unified observability layer: metrics registry, tracing, exporters.
+
+The serving stack publishes its exact analytic ledgers (stage bytes,
+cache hits, µJ/query) and request lifecycles here. Host-side only —
+never inside jitted code — and zero-cost when disabled via
+`NULL_REGISTRY`/`NULL_TRACER`. See repro.obs.metrics / .tracing /
+.export for the pieces, and the README's "Observability" section for
+the architecture and overhead contract.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               NullRegistry, NULL_REGISTRY)
+from repro.obs.tracing import (NullTracer, NULL_TRACER, TraceEvent, Tracer)
+from repro.obs.export import (chrome_trace, metrics_jsonl_records,
+                              parse_prometheus, prometheus_text,
+                              trace_jsonl_records, write_chrome_trace,
+                              write_jsonl)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
+    "NULL_REGISTRY", "NullTracer", "NULL_TRACER", "TraceEvent", "Tracer",
+    "chrome_trace", "metrics_jsonl_records", "parse_prometheus",
+    "prometheus_text", "trace_jsonl_records", "write_chrome_trace",
+    "write_jsonl",
+]

@@ -72,6 +72,8 @@ import numpy as np
 
 from repro.core import energy, engine
 from repro.core.retrieval import NO_TENANT, RetrievalResult
+from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
+from repro.obs.tracing import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -167,6 +169,7 @@ class _Pending:
     handle: RequestHandle
     query: np.ndarray             # (D,) int8
     seq: int                      # arrival order
+    submit_ts: float = 0.0        # submit clock (queue-wait histogram)
 
 
 @dataclasses.dataclass
@@ -248,9 +251,27 @@ class HotClusterCache:
     zero-slot entries so their repeat probes are hits, not fresh misses.
     """
 
-    def __init__(self, budget_bytes: int):
+    def __init__(self, budget_bytes: int, *, registry=None):
         if budget_bytes < 0:
             raise ValueError("budget_bytes must be >= 0")
+        # Counters live in a metrics registry (the serving runtime's when
+        # observability is on, a private one otherwise — a counter update
+        # is one int add either way, and hits/misses/... stay readable as
+        # attributes for existing callers). snapshot()/reset_stats() give
+        # WINDOWED reads: a long-lived runtime or a bench section resets,
+        # runs its window, and reads rates for just that window instead
+        # of a lifetime-cumulative mixed-window average.
+        self.registry = registry if registry is not None else (
+            MetricsRegistry())
+        self._hits = self.registry.counter("cache_hits")
+        self._misses = self.registry.counter("cache_misses")
+        self._evictions = self.registry.counter("cache_evictions")
+        self._stale_evictions = self.registry.counter(
+            "cache_stale_evictions")
+        self._rejected = self.registry.counter("cache_rejected")
+        self._fill_bytes = self.registry.counter("cache_fill_bytes")
+        self._fill_dispatches = self.registry.counter(
+            "cache_fill_dispatches")
         self.budget_bytes = budget_bytes
         self.block_rows: int | None = None
         self.bytes_per_row: int | None = None
@@ -284,14 +305,53 @@ class HotClusterCache:
         self._fill_rows: dict[int, int] = {}          # dst slab row -> src
         self._fill_blocks: dict[int, tuple[int, int]] = {}  # slot -> scalars
         self.bytes_used = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.stale_evictions = 0
-        self.rejected = 0          # views larger than the whole slab
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    # Registry-backed counters, still readable as plain attributes.
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
+    @property
+    def stale_evictions(self) -> int:
+        return self._stale_evictions.value
+
+    @property
+    def rejected(self) -> int:
+        """Views larger than the whole slab (refused admission)."""
+        return self._rejected.value
+
+    def snapshot(self) -> dict:
+        """Current counter values (cumulative since the last
+        `reset_stats`). Pair with `reset_stats` for windowed hit rates:
+        ``reset_stats(); <serve a window>; snapshot()`` reads rates for
+        exactly that window, not a lifetime average over mixed phases
+        (cold fill + steady state)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "stale_evictions": self.stale_evictions,
+                "rejected": self.rejected,
+                "fill_bytes": self._fill_bytes.value,
+                "fill_dispatches": self._fill_dispatches.value}
+
+    def reset_stats(self) -> None:
+        """Zero the event counters (hit/miss/eviction/fill ledgers) —
+        the cache CONTENTS and byte accounting are untouched, so this
+        only re-bases what `snapshot` reports."""
+        for c in (self._hits, self._misses, self._evictions,
+                  self._stale_evictions, self._rejected, self._fill_bytes,
+                  self._fill_dispatches):
+            c.reset()
 
     @property
     def generation(self) -> int:
@@ -328,7 +388,7 @@ class HotClusterCache:
         if (block_rows, bytes_per_row) == (self.block_rows,
                                            self.bytes_per_row):
             return
-        self.stale_evictions += len(self._entries)
+        self._stale_evictions.inc(len(self._entries))
         self.block_rows = block_rows
         self.bytes_per_row = bytes_per_row
         self.num_slab_blocks = self.budget_bytes // (block_rows
@@ -340,7 +400,7 @@ class HotClusterCache:
     def sync_generation(self, generation: int) -> None:
         """Invalidate everything copied under an older arena state."""
         if generation != self._generation:
-            self.stale_evictions += len(self._entries)
+            self._stale_evictions.inc(len(self._entries))
             self._slab_plane = self._inv_norms = self._packed = None
             self._gid0 = self._cnt = None
             self._reset_slots()
@@ -398,10 +458,10 @@ class HotClusterCache:
     def get(self, tenant: int, cluster: int) -> _SlabEntry | None:
         entry = self._entries.get((tenant, cluster))
         if entry is None:
-            self.misses += 1
+            self._misses.inc()
             return None
         self._entries.move_to_end((tenant, cluster))
-        self.hits += 1
+        self._hits.inc()
         return entry
 
     def lookup_lane(self, tenant: int, clusters) -> tuple[int, list[int]]:
@@ -415,7 +475,7 @@ class HotClusterCache:
         every launch's (B, nprobe) selection readback)."""
         resident = self._by_tenant.get(tenant)
         if not resident:
-            self.misses += len(clusters)
+            self._misses.inc(len(clusters))
             return 0, list(clusters)
         entries = self._entries
         hit_bytes = 0
@@ -429,8 +489,8 @@ class HotClusterCache:
                 nhits += 1
             else:
                 missing.append(c)
-        self.hits += nhits
-        self.misses += len(missing)
+        self._hits.inc(nhits)
+        self._misses.inc(len(missing))
         return hit_bytes, missing
 
     def peek(self, tenant: int, cluster: int) -> bool:
@@ -500,7 +560,7 @@ class HotClusterCache:
             # would first flush EVERY other tenant's warm entries and
             # then evict the new entry itself — an empty cache for
             # nothing. The cluster stays re-streamed from HBM instead.
-            self.rejected += 1
+            self._rejected.inc()
             return None
         key = (tenant, cluster)
         old = self._entries.pop(key, None)
@@ -515,12 +575,13 @@ class HotClusterCache:
             if victim is None:
                 break
             self._drop_entry(victim, self._entries.pop(victim))
-            self.evictions += 1
+            self._evictions.inc()
         dst = np.asarray([self._free.pop() for _ in range(nblk)], np.int32)
         nbytes = nblk * br * self.bytes_per_row
         self._entries[key] = _SlabEntry(slab_blocks=dst, n_rows=n_rows,
                                         nbytes=nbytes)
         self.bytes_used += nbytes
+        self._fill_bytes.inc(nbytes)
         self._by_tenant.setdefault(tenant, set()).add(cluster)
         if n_rows:
             self._nonempty[tenant] = self._nonempty.get(tenant, 0) + 1
@@ -579,6 +640,7 @@ class HotClusterCache:
         sizes re-use a bounded family of compiled scatters."""
         if not self._fill_blocks or self._slab_plane is None:
             return
+        self._fill_dispatches.inc()
         base_row = self._plane_rows
         base_blk = self._plane_rows // self.block_rows
         rows = sorted(self._fill_rows.items())            # (dst, src)
@@ -697,10 +759,36 @@ class ServingRuntime:
     part of a launch's stage-1 view.
     """
 
-    def __init__(self, index, cfg: RuntimeConfig | None = None):
+    def __init__(self, index, cfg: RuntimeConfig | None = None, *,
+                 registry=None, tracer=None):
         self.index = index
         self.cfg = cfg or RuntimeConfig()
-        self.cache = (HotClusterCache(self.cfg.cache_bytes)
+        # Observability handles (repro.obs). Defaults are the null
+        # implementations: every instrumentation site below is a no-op
+        # call and every derived publication (plan fan-out, energy
+        # pricing) is skipped behind `registry.enabled` — the
+        # metrics-off hot path is the pre-observability hot path, pinned
+        # by the bench's parity + zero-extra-compiles + overhead gates.
+        self.registry = NULL_REGISTRY if registry is None else registry
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        reg = self.registry
+        self._m_submitted = reg.counter("serve_requests_submitted")
+        self._m_resolved = reg.counter("serve_requests_resolved")
+        self._m_launches = reg.counter("serve_launches")
+        self._m_deferred_fills = reg.counter("serve_deferred_fill_entries")
+        self._m_prefetch_bytes = reg.counter("serve_prefetch_bytes")
+        self._m_queue_wait = reg.histogram("serve_queue_wait_seconds")
+        self._m_occupancy = reg.histogram("serve_batch_occupancy")
+        self._m_launch_wall = reg.histogram("serve_launch_wall_seconds")
+        # Clock discipline: `now` is injectable everywhere (simulated
+        # clocks in tests); once any caller supplies one, implicit
+        # clocks (flush() via result()) reuse the last seen value so
+        # traces stay deterministic instead of mixing in wall time.
+        self._last_now = 0.0
+        self._simulated = False
+        self.cache = (HotClusterCache(self.cfg.cache_bytes,
+                                      registry=(reg if reg.enabled
+                                                else None))
                       if self.cfg.cache_bytes > 0 else None)
         self._queues: "collections.OrderedDict[int, collections.deque[_Pending]]" = (
             collections.OrderedDict())
@@ -744,7 +832,7 @@ class ServingRuntime:
         q = np.asarray(query_codes, np.int8)
         if q.ndim != 1 or q.shape[0] != self.index.arena.dim:
             raise ValueError(f"query must be ({self.index.arena.dim},) int8")
-        now = time.monotonic() if now is None else now
+        now = self._clock(now)
         if deadline is None:
             # max_wait == 0 means NO deadline-forced launches (the
             # legacy scheduler contract: launch only when full or
@@ -753,14 +841,32 @@ class ServingRuntime:
                         else math.inf)
         handle = RequestHandle(self, self._next_id, int(tenant_id), deadline)
         self._next_id += 1
-        pend = _Pending(handle=handle, query=q, seq=self._seq)
+        pend = _Pending(handle=handle, query=q, seq=self._seq, submit_ts=now)
         self._seq += 1
         self._queues.setdefault(int(tenant_id), collections.deque()).append(
             pend)
         self._num_pending += 1
+        self._m_submitted.inc()
+        self.tracer.begin("request", handle.request_id, now=now,
+                          tid=int(tenant_id), request=handle.request_id)
         if self.cfg.auto_flush and self._num_pending >= self.cfg.max_batch:
-            self._launch(self._form_batch())
+            self._launch(self._form_batch(), now)
         return handle
+
+    def _clock(self, now: float | None) -> float:
+        """Resolve an optional caller-supplied timestamp.
+
+        The first explicit `now` switches the runtime to simulated time:
+        from then on calls WITHOUT a timestamp (flush() via result())
+        reuse the last seen value instead of mixing in wall-clock reads,
+        so queue-wait histograms and traces stay deterministic under the
+        test suite's simulated schedules."""
+        if now is None:
+            now = self._last_now if self._simulated else time.monotonic()
+        else:
+            self._simulated = True
+        self._last_now = now
+        return now
 
     def pending(self) -> int:
         return self._num_pending
@@ -790,17 +896,18 @@ class ServingRuntime:
 
         Returns the handles resolved by this call (possibly empty — a
         young partial batch keeps waiting for more traffic)."""
-        now = time.monotonic() if now is None else now
+        now = self._clock(now)
         resolved: list[RequestHandle] = []
         while self._num_pending and self.ready(now):
-            resolved.extend(self._launch(self._form_batch()))
+            resolved.extend(self._launch(self._form_batch(), now))
         return resolved
 
-    def flush(self) -> list[RequestHandle]:
+    def flush(self, now: float | None = None) -> list[RequestHandle]:
         """Drain the queue unconditionally (deadlines ignored)."""
+        now = self._clock(now)
         resolved: list[RequestHandle] = []
         while self._num_pending:
-            resolved.extend(self._launch(self._form_batch()))
+            resolved.extend(self._launch(self._form_batch(), now))
         return resolved
 
     def _form_batch(self) -> list[_Pending]:
@@ -860,17 +967,28 @@ class ServingRuntime:
     def _bucket(n: int) -> int:
         return 1 << (n - 1).bit_length() if n > 1 else 1
 
-    def _launch(self, group: list[_Pending]) -> list[RequestHandle]:
+    def _launch(self, group: list[_Pending],
+                now: float | None = None) -> list[RequestHandle]:
         b = len(group)
         if b == 0:
             return []
+        now = self._clock(now)
         pb = self._bucket(b)
         queries = np.zeros((pb, self.index.arena.dim), np.int8)
         tids = np.full((pb,), NO_TENANT, np.int32)
         for i, req in enumerate(group):
             queries[i] = req.query
             tids[i] = req.handle.tenant_id
-        res, plan = self._execute(queries, tids)
+            self.tracer.instant("admit", now=now, tid=req.handle.tenant_id,
+                                request=req.handle.request_id,
+                                launch=self.launches)
+        t0 = time.monotonic()
+        with self.tracer.span("launch", now=now, batch=b, padded=pb,
+                              index=self.launches):
+            res, plan = self._execute(queries, tids)
+        self._m_launch_wall.observe(time.monotonic() - t0)
+        self._m_launches.inc()
+        self._m_occupancy.observe(float(b))
         self.launches += 1
         self.queries_served += b
         if plan is not None:
@@ -889,6 +1007,15 @@ class ServingRuntime:
                 if s.bytes_sram:
                     self.stage_bytes_sram[s.name] = (
                         self.stage_bytes_sram.get(s.name, 0) + s.bytes_sram)
+            if self.registry.enabled:
+                # Derived publications (per-stage fan-out + energy
+                # pricing) only when someone is listening: keeps the
+                # metrics-off launch path byte-identical to pre-obs.
+                plan.publish(self.registry)
+                energy.observe_cost(
+                    self.registry,
+                    energy.cost_cascade(plan.stages, self.index.arena.dim,
+                                        batch=plan.batch), queries=b)
         # Materialize the batch ONCE and hand out numpy row views: slicing
         # jnp arrays per lane would dispatch 3 eager device ops per
         # request (a measurable per-flush tax at serving batch sizes).
@@ -900,6 +1027,11 @@ class ServingRuntime:
             req.handle._result = RetrievalResult(
                 indices=indices[i], scores=scores[i],
                 candidate_indices=cands[i])
+            self._m_queue_wait.observe(max(0.0, now - req.submit_ts))
+            self.tracer.end(req.handle.request_id, now=now,
+                            request=req.handle.request_id,
+                            launch=self.launches - 1)
+        self._m_resolved.inc(b)
         return [req.handle for req in group]
 
     def _execute(self, queries: np.ndarray, tids: np.ndarray
@@ -1084,6 +1216,7 @@ class ServingRuntime:
                 # a miss streamed the cluster's PLANE blocks from HBM
                 miss_bytes += to_admit[key] * block_bytes
         if to_admit:
+            self._m_deferred_fills.inc(len(to_admit))
             for (t, c) in to_admit:
                 cache.put(t, c, index.cluster_rows(t).get(c, ()))
                 # fills applied by the NEXT launch's flush
@@ -1107,6 +1240,7 @@ class ServingRuntime:
                                        hbm_bytes=miss_bytes + prefetched,
                                        sram_bytes=hit_bytes)
         self.prefetch_bytes += prefetched
+        self._m_prefetch_bytes.inc(prefetched)
         index.last_plan = plan
         # Refresh each tenant's session prior with the clusters this turn
         # actually probed (most recent first, bounded). Compact launches
@@ -1134,10 +1268,7 @@ class ServingRuntime:
                 "slab_blocks": self.cache.num_slab_blocks,
                 "slab_blocks_used": (self.cache.num_slab_blocks
                                      - len(self.cache._free)),
-                "hits": self.cache.hits, "misses": self.cache.misses,
-                "evictions": self.cache.evictions,
-                "stale_evictions": self.cache.stale_evictions,
-                "rejected": self.cache.rejected}
+                **self.cache.snapshot()}
 
     def energy_ledger(self, dim: int | None = None):
         """cost_cascade of the most recent launch's measured plan."""

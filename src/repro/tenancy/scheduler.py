@@ -26,7 +26,8 @@ class CrossTenantBatchScheduler:
     handles and batches launch on deadlines; here submit returns an int
     ticket resolved by an explicit flush())."""
 
-    def __init__(self, index: MultiTenantIndex, *, max_batch: int = 16):
+    def __init__(self, index: MultiTenantIndex, *, max_batch: int = 16,
+                 registry=None, tracer=None):
         # Imported here: repro.serve pulls in the RAG pipelines (which
         # import this package), so a module-level import would be cyclic.
         from repro.serve.runtime import RuntimeConfig, ServingRuntime
@@ -34,7 +35,18 @@ class CrossTenantBatchScheduler:
         self.max_batch = max_batch
         self._rt = ServingRuntime(index, RuntimeConfig(
             max_batch=max_batch, max_wait=0.0, fairness="fifo",
-            cache_bytes=0, auto_flush=False))
+            cache_bytes=0, auto_flush=False),
+            registry=registry, tracer=tracer)
+
+    @property
+    def registry(self):
+        """The wrapped runtime's metrics registry (repro.obs)."""
+        return self._rt.registry
+
+    @property
+    def tracer(self):
+        """The wrapped runtime's request-lifecycle tracer (repro.obs)."""
+        return self._rt.tracer
 
     def submit(self, tenant_id: int, query_codes) -> int:
         """Enqueue one request; returns a ticket id resolved by flush()."""

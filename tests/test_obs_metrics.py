@@ -1,0 +1,211 @@
+"""Properties of the metrics substrate (repro.obs.metrics).
+
+The load-bearing claims, each pinned here:
+
+  * every reported percentile of a log-bucketed histogram is within the
+    DOCUMENTED relative-error bound of the exact order statistic, for
+    arbitrary value distributions (mixed scales, zeros, near-boundary
+    values — fuzzed by hypothesis where available, swept
+    deterministically always);
+  * merging registries is associative/commutative for every percentile
+    (integer bucket counts — merge order can never change a quantile);
+  * the Prometheus text export round-trips through the validating parser
+    with cumulative bucket counts intact;
+  * the NullRegistry exposes the full API as no-ops.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                       NULL_REGISTRY, parse_prometheus, prometheus_text)
+
+# The hypothesis-based properties skip (not fail) where hypothesis is
+# absent — mirroring test_runtime_properties — but the deterministic
+# tests below always run.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def exact_percentile(values, q):
+    """The rank-ceil(q/100*n) order statistic (the histogram's target)."""
+    vals = sorted(values)
+    rank = max(1, math.ceil(q / 100.0 * len(vals)))
+    return vals[rank - 1]
+
+
+def _assert_percentile_bound(vals, q):
+    h = Histogram("t")
+    for v in vals:
+        h.observe(v)
+    got = h.percentile(q)
+    want = exact_percentile(vals, q)
+    if want <= 0.0:
+        assert got == 0.0                 # zero bucket is exact
+    else:
+        # small slack: float log2 at an exact bucket edge may land the
+        # observation one bucket over, which still satisfies the bound
+        # up to fp rounding of the edge itself.
+        bound = h.rel_error_bound * 1.0001 + 1e-12
+        assert abs(got - want) <= bound * want, (got, want, q)
+
+
+def _merge_three_ways(a, b, c):
+    def reg(vals):
+        r = MetricsRegistry()
+        hist = r.histogram("lat")
+        for v in vals:
+            hist.observe(v)
+        r.counter("n").inc(len(vals))
+        return r
+
+    left = reg(a).merge(reg(b)).merge(reg(c))      # (a + b) + c
+    right = reg(c).merge(reg(b)).merge(reg(a))     # c + (b + a)
+    hl = left.get("histogram", "lat")
+    hr = right.get("histogram", "lat")
+    assert hl.buckets == hr.buckets and hl.count == hr.count
+    assert hl.zero_count == hr.zero_count
+    for q in (1, 50, 95, 99, 100):
+        assert hl.percentile(q) == hr.percentile(q)
+    # float totals are only approximately order-independent
+    assert hl.total == pytest.approx(hr.total, rel=1e-9, abs=1e-12)
+    assert left.get("counter", "n").value == right.get("counter", "n").value
+
+
+if HAVE_HYPOTHESIS:
+    # Mixed magnitudes spanning ~12 decades plus exact zeros: the bound
+    # must hold with no a-priori value range.
+    observations = st.lists(
+        st.one_of(st.floats(1e-9, 1e3), st.just(0.0),
+                  st.floats(0.999, 1.001)),   # near a bucket boundary
+        min_size=1, max_size=200)
+
+    @settings(max_examples=200, deadline=None)
+    @given(vals=observations,
+           q=st.sampled_from([1, 25, 50, 90, 95, 99, 100]))
+    def test_percentile_within_documented_relative_error(vals, q):
+        _assert_percentile_bound(vals, q)
+
+    @settings(max_examples=100, deadline=None)
+    @given(a=observations, b=observations, c=observations)
+    def test_registry_merge_is_associative_for_percentiles(a, b, c):
+        _merge_three_ways(a, b, c)
+
+
+def test_percentile_bound_on_random_distributions():
+    """Deterministic sweep of the same property the hypothesis test
+    fuzzes: uniform/lognormal/zero-heavy samples at many sizes."""
+    rng = np.random.default_rng(0)
+    cases = []
+    for n in (1, 2, 3, 17, 100, 999):
+        cases.append(rng.uniform(1e-6, 1e3, n))
+        cases.append(rng.lognormal(0.0, 2.0, n))
+        cases.append(np.concatenate([np.zeros(n // 2 + 1),
+                                     rng.uniform(0.5, 2.0, n)]))
+    for vals in cases:
+        for q in (1, 25, 50, 90, 95, 99, 100):
+            _assert_percentile_bound([float(v) for v in vals], q)
+
+
+def test_merge_associativity_deterministic():
+    rng = np.random.default_rng(1)
+    a = [float(v) for v in rng.lognormal(0, 3, 50)]
+    b = [0.0] + [float(v) for v in rng.uniform(1e-7, 1e4, 80)]
+    c = [float(v) for v in rng.normal(5, 1, 30).clip(min=0)]
+    _merge_three_ways(a, b, c)
+
+
+def test_histogram_weighted_observe_equals_repeats():
+    h1, h2 = Histogram("a"), Histogram("b")
+    for _ in range(7):
+        h1.observe(3.5)
+    h2.observe(3.5, 7)
+    assert h1.buckets == h2.buckets and h1.count == h2.count == 7
+    assert h1.total == pytest.approx(h2.total)
+    with pytest.raises(ValueError):
+        h2.observe(1.0, 0)
+
+
+def test_percentiles_against_numpy_on_lognormal():
+    rng = np.random.default_rng(3)
+    vals = rng.lognormal(mean=-2.0, sigma=1.5, size=5000)
+    h = Histogram("lat")
+    for v in vals:
+        h.observe(float(v))
+    for q in (50, 95, 99):
+        want = exact_percentile(vals, q)
+        assert abs(h.percentile(q) - want) <= h.rel_error_bound * want * 1.001
+
+
+def test_counter_gauge_and_registry_basics():
+    r = MetricsRegistry()
+    c = r.counter("req", path="warm")
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    assert r.counter("req", path="warm") is c          # get-or-create
+    assert r.counter("req", path="cold") is not c      # labels distinguish
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = r.gauge("depth")
+    g.set(7.0)
+    assert r.get("gauge", "depth").value == 7.0
+    assert r.get("counter", "missing") is None
+    snap = r.snapshot()
+    assert snap["counters"]["req{path=warm}"] == 5
+    r.reset()
+    assert c.value == 0 and g.value == 0.0
+    assert isinstance(c, Counter) and isinstance(g, Gauge)
+
+
+def test_histogram_empty_and_zero_behaviour():
+    h = Histogram("t")
+    assert math.isnan(h.percentile(50))
+    h.observe(0.0)
+    h.observe(-1.0)                       # clamped into the zero bucket
+    assert h.percentile(99) == 0.0 and h.count == 2
+    with pytest.raises(ValueError):
+        h.observe(float("nan"))
+    with pytest.raises(ValueError):
+        h.percentile(101)
+
+
+def test_prometheus_roundtrip_cumulative_buckets():
+    r = MetricsRegistry()
+    r.counter("hits", tier="l1").inc(3)
+    r.gauge("depth").set(2.5)
+    h = r.histogram("lat", path="warm")
+    for v in (0.0, 0.001, 0.002, 0.002, 5.0):
+        h.observe(v)
+    text = prometheus_text(r)
+    parsed = parse_prometheus(text)
+    assert parsed["hits"] == [({"tier": "l1"}, 3.0)]
+    assert parsed["depth"] == [({}, 2.5)]
+    buckets = parsed["lat_bucket"]
+    # cumulative and capped by +Inf == count
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts)
+    assert buckets[-1][0]["le"] == "+Inf" and buckets[-1][1] == 5.0
+    assert parsed["lat_count"] == [({"path": "warm"}, 5.0)]
+    assert parsed["lat_sum"][0][1] == pytest.approx(5.005)
+    # the zero bucket exports as le="0"
+    assert buckets[0][0]["le"] == "0" and buckets[0][1] == 1.0
+    with pytest.raises(ValueError):
+        parse_prometheus("not a metric line at all!")
+
+
+def test_null_registry_is_inert():
+    n = NULL_REGISTRY
+    assert not n.enabled
+    c = n.counter("x")
+    c.inc(5)
+    n.histogram("h").observe(1.0, 3)
+    n.gauge("g").set(2.0)
+    assert c.value == 0 and n.metrics() == [] and n.get("counter", "x") is None
+    assert n.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert n.merge(MetricsRegistry()) is n
+    n.reset()

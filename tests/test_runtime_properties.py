@@ -125,6 +125,72 @@ def test_runtime_never_drops_duplicates_or_leaks(schedule, max_batch,
                                ref.candidate_indices[0])
 
 
+@settings(max_examples=15, deadline=None)
+@given(schedule=schedules,
+       max_batch=st.sampled_from([1, 2, 4]),
+       fairness=st.sampled_from(["deadline_rr", "fifo"]))
+def test_trace_completeness_under_random_schedules(schedule, max_batch,
+                                                   fairness):
+    """Every submitted request yields EXACTLY one balanced submit->resolve
+    ("request" B/E) span chain under arbitrary submit/poll/flush
+    interleavings — no orphan spans, no duplicates — and the span ids
+    are exactly the submitted request ids. Runs under the simulated
+    clock, so the whole trace (timestamps included) must be
+    deterministic: replaying the schedule yields a bit-identical event
+    list."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    def drive():
+        reg, tracer = MetricsRegistry(), Tracer()
+        rt = ServingRuntime(_IDX, RuntimeConfig(
+            max_batch=max_batch, max_wait=1.0, fairness=fairness,
+            auto_flush=False), registry=reg, tracer=tracer)
+        now = 0.0
+        submitted = []
+        for op, a, b, c in schedule:
+            if op == "submit":
+                submitted.append(rt.submit(a, _POOL[a][b], now=now,
+                                           deadline=now + c))
+            elif op == "poll":
+                now += a
+                rt.poll(now=now)
+            else:
+                rt.flush()
+        rt.flush()
+        return reg, tracer, submitted
+
+    reg, tracer, submitted = drive()
+    assert tracer.open_spans() == []                  # nothing dangling
+    begins = [e for e in tracer.spans("request") if e.ph == "B"]
+    ends = [e for e in tracer.spans("request") if e.ph == "E"]
+    assert len(begins) == len(ends) == len(submitted)
+    want_ids = sorted(h.request_id for h in submitted)
+    assert sorted(e.attrs["request"] for e in begins) == want_ids
+    assert sorted(e.attrs["request"] for e in ends) == want_ids
+    # ids unique in both phases => exactly one chain per request
+    assert len({e.attrs["request"] for e in begins}) == len(begins)
+    assert len({e.attrs["request"] for e in ends}) == len(ends)
+    # resolve never precedes submit, and every resolve names its launch
+    t_begin = {e.attrs["request"]: e.ts for e in begins}
+    for e in ends:
+        assert e.ts >= t_begin[e.attrs["request"]]
+        assert e.attrs["launch"] >= 0
+    # registry totals agree with the trace
+    assert reg.get("counter", "serve_requests_submitted").value == \
+        len(submitted)
+    assert reg.get("counter", "serve_requests_resolved").value == \
+        len(submitted)
+    qh = reg.get("histogram", "serve_queue_wait_seconds")
+    assert qh.count == len(submitted)
+    # simulated clock => the trace is bit-identical on replay
+    _, tracer2, _ = drive()
+    key = [(e.name, e.ph, e.ts, e.tid, tuple(sorted(e.attrs.items())))
+           for e in tracer.spans()]
+    key2 = [(e.name, e.ph, e.ts, e.tid, tuple(sorted(e.attrs.items())))
+            for e in tracer2.spans()]
+    assert key == key2
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(1, 12), max_batch=st.sampled_from([2, 4]))
 def test_deadlines_eventually_force_every_launch(n, max_batch):

@@ -561,6 +561,85 @@ def test_cached_path_trace_stability():
     assert rt.cache_stats()["hits"] > 0 and rt.cache_stats()["evictions"] > 0
 
 
+def test_cache_stats_snapshot_and_reset_windows():
+    """Satellite fix: cache counters were lifetime-cumulative only.
+    `snapshot()` gives a plain-data view and `reset_stats()` opens a new
+    window (steady-state hit rates after a fill phase) WITHOUT touching
+    residency — entries, slab bytes, and results are unaffected."""
+    idx, q = make_clustered_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=4,
+                                           cache_bytes=256 * 1024,
+                                           auto_flush=False))
+    for turn in range(3):                    # fill phase: misses then hits
+        for t in range(4):
+            rt.submit(t, q[t][turn], now=0.0)
+        rt.flush()
+    fill = rt.cache.snapshot()
+    assert fill["misses"] > 0 and fill["fill_bytes"] > 0
+    assert set(fill) == {"hits", "misses", "evictions", "stale_evictions",
+                         "rejected", "fill_bytes", "fill_dispatches"}
+    entries_before = len(rt.cache)
+    rt.cache.reset_stats()
+    assert rt.cache.hits == 0 and rt.cache.misses == 0
+    assert len(rt.cache) == entries_before   # residency untouched
+    for turn in range(3):                    # steady state: all hits
+        for t in range(4):
+            rt.submit(t, q[t][turn], now=0.0)
+        rt.flush()
+    steady = rt.cache.snapshot()
+    assert steady["hits"] > 0 and steady["misses"] == 0
+    assert steady["fill_bytes"] == 0
+    # cache_stats() serves the same windowed numbers
+    cs = rt.cache_stats()
+    assert cs["hits"] == steady["hits"] and cs["fill_bytes"] == 0
+    assert cs["bytes_used"] == rt.cache.bytes_used > 0
+
+
+def test_observability_zero_compiles_and_bit_parity():
+    """The observability overhead contract, unit-scale: serving the SAME
+    schedule with a real registry + tracer must (a) return bit-identical
+    results, (b) compile ZERO additional jit traces (metrics never reach
+    jitted code), and (c) leave a balanced trace whose totals match the
+    registry."""
+    from repro.core.engine import retrieve_batched_aux
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.serve.runtime import _apply_fills
+    idx, q = make_clustered_index(docs_per_tenant=96)
+    cfg = RuntimeConfig(max_batch=8, cache_bytes=256 * 1024,
+                        auto_flush=False)
+
+    def drive(rt):
+        out = []
+        for turn in range(4):
+            hs = [rt.submit(t, q[t][turn % 8], now=float(turn))
+                  for t in range(4)]
+            rt.flush()
+            out.extend(h.result() for h in hs)
+        return out
+
+    base = drive(ServingRuntime(idx, cfg))   # compiles the shape buckets
+    casc0 = retrieve_batched_aux._cache_size()
+    fill0 = _apply_fills._cache_size()
+    reg, tracer = MetricsRegistry(), Tracer()
+    obs = drive(ServingRuntime(idx, cfg, registry=reg, tracer=tracer))
+    assert retrieve_batched_aux._cache_size() == casc0
+    assert _apply_fills._cache_size() == fill0
+    for a, b in zip(base, obs):
+        assert jnp.array_equal(a.indices, b.indices)
+        assert jnp.array_equal(a.scores, b.scores)
+        assert jnp.array_equal(a.candidate_indices, b.candidate_indices)
+    assert tracer.open_spans() == []
+    assert reg.get("counter", "serve_requests_submitted").value == 16
+    assert reg.get("counter", "serve_requests_resolved").value == 16
+    assert reg.get("counter", "serve_launches").value == 4
+    assert reg.get("histogram", "serve_batch_occupancy").count == 4
+    assert reg.get("histogram", "energy_uj_per_query").count == 16
+    # per-stage plan fan-out reached the registry
+    assert reg.get("counter", "stage_bytes_hbm", stage="approx").value > 0
+    # cache counters live on the SAME registry when one is supplied
+    assert reg.get("counter", "cache_misses").value > 0
+
+
 def test_handles_are_single_assignment():
     idx, q = make_plain_index()
     rt = ServingRuntime(idx, RuntimeConfig(max_batch=2))
