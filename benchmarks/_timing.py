@@ -1,9 +1,12 @@
 """Shared wall-clock timer for the benchmark modules.
 
-One methodology everywhere: the warmup call is BLOCKED (so the first
-timed rep never absorbs a still-executing async dispatch tail), then the
-reported figure is the median of `reps` fully-blocked timings — robust to
-the occasional preemption spike on shared machines.
+One methodology everywhere: jax dispatch is ASYNCHRONOUS, so a timed
+region that does not `block_until_ready` every device output it produced
+measures the enqueue, not the work. Every timed rep here is fully
+synchronized; the warmup call is BLOCKED too (so the first timed rep
+never absorbs a still-executing async dispatch tail), then the reported
+figure is the median of `reps` fully-blocked timings — robust to the
+occasional preemption spike on shared machines.
 """
 from __future__ import annotations
 
@@ -12,12 +15,19 @@ import time
 import jax
 
 
+def wall_seconds(fn, *args) -> float:
+    """One fully-synchronized wall-clock measurement of ``fn(*args)``,
+    in seconds: the clock stops only after every device output is ready.
+    Callers timing their own regions (e.g. the serving sections) must
+    uphold the same discipline — block on every timed device output
+    inside the region."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
 def median_ms(fn, *args, reps: int = 5) -> float:
     """Median wall-clock of ``fn(*args)`` over `reps` runs, in ms."""
     jax.block_until_ready(fn(*args))       # compile/warm outside the clock
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return sorted(times)[len(times) // 2] * 1e3
+    times = sorted(wall_seconds(fn, *args) for _ in range(reps))
+    return times[len(times) // 2] * 1e3

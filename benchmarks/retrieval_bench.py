@@ -90,6 +90,38 @@ BYTES_CHECK = "cascade stage-1 bytes >= 4x below the full scan (analytic)"
 OBS_TIMING_CHECK = ("serving obs: metrics-enabled warm path within 2% "
                     "median wall-clock of NullRegistry")
 OBS_OVERHEAD_BOUND = 1.02
+# Open-loop serving protocol (tail-latency SLO): requests arrive on a
+# wall-clock schedule the server does not control. The p99 gate compares
+# the async pipeline against the synchronous path at an arrival rate the
+# ASYNC server sustains (gap = 1.15x its saturated per-turn service
+# time): if the pipeline genuinely overlaps host bookkeeping with device
+# execution, the sync path is overloaded at that rate and its queue —
+# hence its p99 — grows with the trace, while async stays flat. Smoke
+# keeps the gate in the exit code with a relaxed bound (tiny shapes on
+# shared runners are scheduler-noise-dominated).
+#
+# The >= 1.3x target needs hardware concurrency: overlap requires the
+# host thread and the XLA executor to run AT THE SAME TIME, so on a
+# single-core CPU host (os.cpu_count() == 1, as in some CI containers)
+# host+device work is serialized no matter how it is pipelined and the
+# best async can do is tie. There the gate degrades to NON-REGRESSION:
+# the pipeline's extra machinery must not make the tail meaningfully
+# worse. The record carries `overlap_capable`/`host_cores` so a reader
+# knows which regime a given artifact measured.
+OPENLOOP_P99_CHECK = ("open-loop serving: async p99 turn latency >= 1.3x "
+                      "better than sync (seeded Poisson; single-core "
+                      "hosts gate non-regression)")
+OPENLOOP_P99_RATIO = 1.3
+OPENLOOP_P99_SINGLE_CORE = 0.75
+OPENLOOP_WALL_CHECK = ("open-loop serving: async wall-clock <= sync "
+                       "wall-clock (seeded Poisson; single-core hosts "
+                       "gate non-regression)")
+OPENLOOP_WALL_SINGLE_CORE = 0.85
+OPENLOOP_TAIL_CHECK = ("open-loop serving: async p99/p50 tail ratio "
+                       "bounded (Poisson, stable regime)")
+OPENLOOP_TAIL_BOUND = 10.0
+AUTOTUNE_CHECK = ("autotuner: chosen block >= 1.0x DEFAULT_BLOCK_N at "
+                  "every benched point")
 
 
 def _build(n, d, bmax, seed=0):
@@ -106,6 +138,12 @@ def run(verbose=True, smoke=False):
     n, d = (512, 128) if smoke else (4096, 512)
     batches = (4,) if smoke else (8, 32, 128)
     reps = 3 if smoke else 5
+    records: dict[str, dict] = {}
+    # Tune FIRST: installation is trace-time, so running the measured
+    # search before anything compiles means every later section — the
+    # kernel sweeps, the cascade, the serving engines — traces with the
+    # tuned shapes (and the parity checks below then cover them).
+    tuned = _autotune_section(records, smoke=smoke, verbose=verbose)
     cfg = RetrievalConfig(k=5, metric="cosine")
     eng = RetrievalEngine(cfg)
     bp, q_all = _build(n, d, max(batches))
@@ -114,7 +152,6 @@ def run(verbose=True, smoke=False):
     vmapped_stage1 = jax.jit(jax.vmap(
         lambda qm: ops.stage1_scores(qm, bp.msb_plane)))
 
-    records: dict[str, dict] = {}
     parity_ok, plan_ok = True, True
     for b in batches:
         q = q_all[:b]
@@ -162,6 +199,8 @@ def run(verbose=True, smoke=False):
         print("== batched engine vs vmapped-scalar path "
               f"(N={n} D={d}; {mode}) ==")
         for name, r in records.items():
+            if "median_ms" not in r:        # e.g. the autotune record
+                continue
             line = (f"  {name:>22}: {r['median_ms']:9.2f} ms   "
                     f"ref {r['ref_median_ms']:9.2f} ms   "
                     f"speedup {r['ratio']:6.2f}x")
@@ -175,6 +214,10 @@ def run(verbose=True, smoke=False):
     cascade = _cascade_section(records, smoke=smoke, reps=reps,
                                verbose=verbose)
     serving = _serving_section(records, smoke=smoke, verbose=verbose)
+    openloop = _openloop_section(records, smoke=smoke, verbose=verbose,
+                                 index=serving["index"],
+                                 queries_per_turn=serving["queries_per_turn"],
+                                 cache_bytes=serving["plane_budget"])
 
     mid = f"stage1_kernel_B{32 if not smoke else batches[0]}"
     checks = {
@@ -208,8 +251,58 @@ def run(verbose=True, smoke=False):
         "serving obs: prometheus export parses with latency/energy series":
             serving["obs_prom_ok"],
         OBS_TIMING_CHECK: serving["obs_overhead"] <= OBS_OVERHEAD_BOUND,
+        AUTOTUNE_CHECK: tuned["ok"],
+        "open-loop serving: async results bit-identical to sync "
+        "(both arrival models)": openloop["parity"],
+        OPENLOOP_P99_CHECK: openloop["p99_ratio_poisson"] >= (
+            SERVING_SMOKE_BOUND if smoke
+            else OPENLOOP_P99_RATIO if openloop["overlap_capable"]
+            else OPENLOOP_P99_SINGLE_CORE),
+        OPENLOOP_WALL_CHECK: openloop["wall_ratio"] >= (
+            SERVING_SMOKE_BOUND if smoke
+            else 1.0 if openloop["overlap_capable"]
+            else OPENLOOP_WALL_SINGLE_CORE),
+        OPENLOOP_TAIL_CHECK: openloop["tail_ratio"] <= OPENLOOP_TAIL_BOUND,
     }
     return {"records": records, "checks": checks}
+
+
+def _autotune_section(records, *, smoke, verbose):
+    """Measured kernel autotuner: replaces the hand-found DEFAULT_BLOCK_N
+    crossover with a timed search on THIS device. The winning table is
+    installed process-wide (every later section traces with tuned
+    shapes) and saved as the CI artifact `BENCH_autotune.json`, keyed by
+    device kind so a run on other hardware refuses it."""
+    from repro.kernels import autotune
+    if smoke:
+        table = autotune.autotune(n=512, d=128, batches=(1, 8),
+                                  candidates=(128, 256, 1024), reps=1,
+                                  kernels=("stage1_batched", "fused_topk"))
+    else:
+        table = autotune.autotune(reps=3)
+    autotune.install(table)
+    table.save("BENCH_autotune.json")
+    ok = bool(table.entries) and all(e["speedup_vs_default"] >= 1.0
+                                     for e in table.entries.values())
+    records["autotune"] = {
+        "signature": table.signature,
+        "entries": {key: {"block_n": e["block_n"],
+                          "default_block_n": e["default_block_n"],
+                          "speedup_vs_default": e["speedup_vs_default"]}
+                    for key, e in table.entries.items()},
+    }
+    if verbose:
+        sig = table.signature
+        print(f"== kernel block autotuner (device={sig['device_kind']} "
+              f"backend={sig['backend']} interpret={sig['interpret']}) ==")
+        for key in sorted(table.entries):
+            e = table.entries[key]
+            print(f"  {key:>20}: block {e['block_n']:>4}   "
+                  f"default {e['default_block_n']:>4}   "
+                  f"{e['speedup_vs_default']:5.2f}x vs default")
+        print("  table installed for every later section; artifact: "
+              "BENCH_autotune.json")
+    return {"ok": ok, "table": table}
 
 
 def _cascade_section(records, *, smoke, reps, verbose):
@@ -340,9 +433,11 @@ def _run_trace(index, queries_per_turn, *, cache_bytes, prior, rt=None,
     for batch in queries_per_turn:
         t0 = time.perf_counter()
         handles = [rt.submit(t, q) for t, q, _ in batch]
-        rt.flush()
-        jax.block_until_ready([h.result(wait=False).indices
-                               for h in handles])
+        rt.flush()                         # barrier: drains the pipeline
+        # result(wait=False) is now a None not-ready signal; result()
+        # resolves, and blocking the indices keeps the timed region
+        # honest even if materialization semantics change.
+        jax.block_until_ready([h.result().indices for h in handles])
         per_turn.append(time.perf_counter() - t0)
         turns.append(handles)
     return rt, turns, per_turn
@@ -625,7 +720,204 @@ def _serving_section(records, *, smoke, verbose):
             "recall_cold": recall_cold, "time_ratio": time_ratio,
             "obs_parity": obs_parity, "obs_zero_compiles": obs_zero_compiles,
             "obs_trace_ok": obs_trace_ok, "obs_prom_ok": obs_prom_ok,
-            "obs_overhead": obs_overhead}
+            "obs_overhead": obs_overhead,
+            # non-serialized: the open-loop section reuses the corpus
+            "index": index, "queries_per_turn": queries_per_turn,
+            "plane_budget": plane_budget}
+
+
+# ---------------------------------------------------------------------------
+# Open-loop serving: arrival-driven tail latency
+# ---------------------------------------------------------------------------
+
+def _poisson_arrivals(rng, turns, gap):
+    """Seeded Poisson process: i.i.d. exponential inter-arrivals with
+    mean `gap` seconds."""
+    return np.cumsum(rng.exponential(gap, size=turns))
+
+
+def _bursty_arrivals(rng, turns, gap):
+    """Two-state Markov-modulated Poisson process: a FAST state (mean
+    0.4*gap) and a SLOW state (mean 1.6*gap) with symmetric switch
+    probability 0.3 per arrival — stationary mix keeps the long-run rate
+    at ~1/gap while clumping arrivals into bursts that briefly exceed
+    even the async service rate (the tail-latency shape wearable agents
+    produce: quiet monitoring punctuated by event flurries)."""
+    out, t, state = [], 0.0, 0
+    for _ in range(turns):
+        t += float(rng.exponential(gap * (0.4 if state == 0 else 1.6)))
+        out.append(t)
+        if rng.random() < 0.3:
+            state = 1 - state
+    return np.asarray(out)
+
+
+def _drive_openloop(index, queries_per_turn, arrivals, *, depth,
+                    cache_bytes, registry=None):
+    """Serve the trace open-loop: turn i's batch is submitted when the
+    wall clock reaches arrivals[i], ready or not. Between arrivals the
+    driver reaps finished launches (the async pipeline's lazy-retire
+    path); per-turn latency is measured from the SCHEDULED arrival to
+    the instant all of the turn's handles are resolved, so a backlogged
+    server pays its queue in the tail. One untimed closed-loop pass
+    first: compiles both paths and fills the cache to steady state."""
+    from repro.serve.runtime import RuntimeConfig, ServingRuntime
+    rt = ServingRuntime(index, RuntimeConfig(
+        max_batch=len(queries_per_turn[0]), cache_bytes=cache_bytes,
+        prior_clusters=8 if cache_bytes else 0, preload=cache_bytes > 0,
+        auto_flush=True, async_depth=depth), registry=registry)
+    for batch in queries_per_turn:          # untimed warm pass
+        for t, q, _ in batch:
+            rt.submit(t, q)
+        rt.flush()
+
+    pending, lat, all_handles = [], [], []
+
+    def now():
+        return time.perf_counter() - t0
+
+    def harvest():
+        # launches retire FIFO, so turn completion is FIFO too
+        while pending and all(h.done() for h in pending[0][1]):
+            arr, _ = pending.pop(0)
+            lat.append(now() - arr)
+
+    t0 = time.perf_counter()
+    for batch, arr in zip(queries_per_turn, arrivals):
+        while True:
+            remaining = arr - now()
+            if remaining <= 0:
+                break
+            rt.reap()
+            harvest()
+            # YIELD, never hot-spin: a spinning driver starves the XLA
+            # executor of the very cycles the in-flight launches need
+            # (fatal on few-core hosts), and burying the core in
+            # is_ready() probes is not part of any serving protocol.
+            time.sleep(min(2e-4, max(remaining, 0.0)))
+        hs = [rt.submit(t, q, now=now()) for t, q, _ in batch]
+        all_handles.append(hs)
+        pending.append((arr, hs))
+        harvest()
+    rt.flush()                              # drain + barrier
+    harvest()
+    wall = now()
+    assert not pending, "open-loop drive left unresolved turns"
+    return rt, all_handles, np.asarray(lat), wall
+
+
+def _openloop_section(records, *, smoke, verbose, index, queries_per_turn,
+                      cache_bytes):
+    """Tail-latency SLO protocol: the closed-loop sections above measure
+    service time; real serving is OPEN-LOOP — arrivals do not wait for
+    the server, so latency = queueing + service and the p99 exposes
+    whether the async pipeline's overlap buys real headroom. Both
+    arrival models are seeded; the same schedules drive the sync
+    (async_depth=0) and async (async_depth=2) paths over the same warm
+    corpus, and results must be bit-identical."""
+    turns = len(queries_per_turn)
+    tenants = len(queries_per_turn[0])
+    seed = 1234
+    host_cores = os.cpu_count() or 1
+    # Overlap needs hardware concurrency: a non-CPU backend executes on
+    # the accelerator while the host queues, and a multi-core CPU host
+    # runs the XLA executor beside the driver. One CPU core has neither
+    # — the async win degrades to "don't regress" (see constants above).
+    overlap_capable = jax.default_backend() != "cpu" or host_cores > 1
+
+    # -- calibrate: saturated (all-arrivals-at-0) per-turn service time --
+    t_pt = {}
+    for mode, depth in (("sync", 0), ("async", 2)):
+        _, _, _, wall = _drive_openloop(
+            index, queries_per_turn, np.zeros(turns), depth=depth,
+            cache_bytes=cache_bytes)
+        t_pt[mode] = wall / turns
+    gap = 1.15 * t_pt["async"]
+
+    models = {
+        "poisson": _poisson_arrivals(np.random.default_rng(seed), turns,
+                                     gap),
+        "bursty": _bursty_arrivals(np.random.default_rng(seed + 1), turns,
+                                   gap),
+    }
+    from repro.obs import MetricsRegistry
+    lat_ms, walls, handles, breakdown = {}, {}, {}, {}
+    for model, arrivals in models.items():
+        lat_ms[model], walls[model], handles[model] = {}, {}, {}
+        for mode, depth in (("sync", 0), ("async", 2)):
+            reg = MetricsRegistry()         # fresh window per measured run
+            rt, hs, lat, wall = _drive_openloop(
+                index, queries_per_turn, arrivals, depth=depth,
+                cache_bytes=cache_bytes, registry=reg)
+            lat_ms[model][mode] = {
+                f"p{p}": float(np.percentile(lat, p)) * 1e3
+                for p in (50, 95, 99)}
+            walls[model][mode] = wall
+            handles[model][mode] = hs
+            if model == "poisson":
+                qw = reg.get("histogram", "serve_queue_wait_seconds")
+                rl = reg.get("histogram", "serve_resolve_lag_seconds")
+                breakdown[mode] = {
+                    "queue_wait_ms": {p: v * 1e3 for p, v in
+                                      qw.percentiles((50, 99)).items()},
+                    "resolve_lag_ms": {p: v * 1e3 for p, v in
+                                       rl.percentiles((50, 99)).items()},
+                }
+
+    parity = True
+    for model in models:
+        for hs_s, hs_a in zip(handles[model]["sync"],
+                              handles[model]["async"]):
+            for s, a in zip(hs_s, hs_a):
+                rs, ra = s.result(), a.result()
+                parity &= bool(
+                    jnp.array_equal(rs.indices, ra.indices)
+                    and jnp.array_equal(rs.scores, ra.scores)
+                    and jnp.array_equal(rs.candidate_indices,
+                                        ra.candidate_indices))
+
+    p99_ratio = {m: lat_ms[m]["sync"]["p99"] / max(lat_ms[m]["async"]["p99"],
+                                                   1e-9)
+                 for m in models}
+    tail_ratio = (lat_ms["poisson"]["async"]["p99"]
+                  / max(lat_ms["poisson"]["async"]["p50"], 1e-9))
+    wall_ratio = walls["poisson"]["sync"] / max(walls["poisson"]["async"],
+                                                1e-9)
+    records[f"serving_openloop_T{tenants}"] = {
+        "arrival_seed": seed,
+        "arrival_gap_ms": gap * 1e3,
+        "host_cores": host_cores,
+        "overlap_capable": overlap_capable,
+        "service_ms_per_turn": {m: t_pt[m] * 1e3 for m in t_pt},
+        "turn_latency_ms": lat_ms,
+        "wall_s": walls,
+        "p99_ratio": p99_ratio,
+        "tail_ratio_async_poisson": tail_ratio,
+        "queue_wait_vs_resolve_lag": breakdown,
+    }
+    if verbose:
+        regime = ("overlap-capable" if overlap_capable
+                  else f"single-core host ({host_cores} core, "
+                       f"non-regression gates)")
+        print(f"== open-loop serving (T={tenants} turns={turns} "
+              f"gap={gap * 1e3:.2f} ms = 1.15x async service; "
+              f"seed={seed}; {regime}) ==")
+        print(f"  saturated service ms/turn: sync "
+              f"{t_pt['sync'] * 1e3:.2f}   async {t_pt['async'] * 1e3:.2f}")
+        for m in models:
+            s, a = lat_ms[m]["sync"], lat_ms[m]["async"]
+            print(f"  {m:>8}: sync  p50/p99 {s['p50']:8.2f}/{s['p99']:8.2f}"
+                  f" ms   async p50/p99 {a['p50']:8.2f}/{a['p99']:8.2f} ms"
+                  f"   p99 ratio {p99_ratio[m]:5.2f}x")
+        bd = breakdown["async"]
+        print(f"  async breakdown (poisson): queue wait p50/p99 "
+              f"{bd['queue_wait_ms']['p50']:.2f}/"
+              f"{bd['queue_wait_ms']['p99']:.2f} ms   resolve lag p50/p99 "
+              f"{bd['resolve_lag_ms']['p50']:.2f}/"
+              f"{bd['resolve_lag_ms']['p99']:.2f} ms")
+    return {"parity": parity, "p99_ratio_poisson": p99_ratio["poisson"],
+            "wall_ratio": wall_ratio, "tail_ratio": tail_ratio,
+            "overlap_capable": overlap_capable, "host_cores": host_cores}
 
 
 if __name__ == "__main__":
@@ -641,5 +933,6 @@ if __name__ == "__main__":
         print(f"wrote {path}")
     gating = {k: v for k, v in out["checks"].items()
               if not (smoke and k in (TIMING_CHECK, BYTES_CHECK,
-                                      OBS_TIMING_CHECK))}
+                                      OBS_TIMING_CHECK,
+                                      OPENLOOP_TAIL_CHECK))}
     sys.exit(0 if all(gating.values()) else 1)

@@ -96,10 +96,15 @@ def main():
         q_emb = pipe._embed(jnp.asarray(records[uid][1][3][None]))
         q_codes, _ = quantize_int8(q_emb, per_vector=True)
         handles.append(rt.submit(uid, np.asarray(q_codes[0]), now=0.0))
-    assert all(h.done() for h in handles)    # batch filled -> launched
+    # The batch filled, so the launch DISPATCHED immediately — but with
+    # async_depth=2 (the default) it may still be IN FLIGHT on the
+    # device: result(wait=False) returns None while unresolved, and
+    # result() blocks until the answer is ready.
+    assert rt.launches == 1
     for uid, (name, h) in enumerate(zip(USERS, handles)):
-        got = np.asarray(h.result().indices)
+        got = np.asarray(h.result().indices)     # blocks until resolved
         assert int(got[0]) == int(pipe.index.table.slots(uid)[3])
+    assert all(h.done() for h in handles)        # resolved, not just sent
     print(f"[serve ] {len(handles)} users answered in {rt.launches} "
           f"deadline-batched launch(es); a lone request launches after "
           f"{1e3 * rt.cfg.max_wait:.0f} ms instead of waiting forever")

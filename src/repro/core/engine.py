@@ -996,6 +996,15 @@ class RetrievalEngine:
 
     cfg: RetrievalConfig
 
+    def __post_init__(self):
+        # Block-shape autotuning hook: if REPRO_AUTOTUNE_CACHE names a
+        # valid artifact for this device, install it before any cascade
+        # traces — block choice is resolved at trace time (see
+        # kernels/autotune.py). No-op (deterministic DEFAULT_BLOCK_N)
+        # without an artifact.
+        from repro.kernels import autotune
+        autotune.ensure_default_installed()
+
     def retrieve(self, query_codes: jax.Array, db: bitplanar.BitPlanarDB,
                  policy: Policy = PlainPolicy()) -> RetrievalResult:
         """Batched retrieval: (B, D) int8 queries -> batched result."""

@@ -8,8 +8,10 @@
 
 ops.py: jit'd wrappers (interpret on CPU, Mosaic on TPU).
 ref.py: pure-jnp oracles; tests assert exact equality against them.
+autotune.py: measured block-shape search; ops wrappers consult the
+installed table (falling back to DEFAULT_BLOCK_N when none).
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.stage1_int4 import stage1_int4_pallas
 from repro.kernels.stage1_gather import stage1_int4_gather_pallas
 from repro.kernels.stage2_int8 import stage2_int8_pallas

@@ -4,6 +4,14 @@ These expose the same signatures the pure-jnp reference engine uses
 (repro.core.retrieval stage functions), handling query even/odd packing,
 row padding to block multiples, and interpret-mode selection (interpret on
 CPU, compiled Mosaic on TPU).
+
+Block shapes: the tunable wrappers (stage1_* matmuls and the fused top-k)
+take `block_n=None` and resolve the block at *trace time* from the
+installed `repro.kernels.autotune` table (measured per device and batch
+bucket), falling back deterministically to the kernel's `DEFAULT_BLOCK_N`
+when no table is installed. Pass an explicit `block_n` to bypass the
+table (tests and the autotuner itself do). Block choice never affects
+results — only the schedule — which is pinned by the parity suites.
 """
 from __future__ import annotations
 
@@ -12,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels import fused_topk as _fk
 from repro.kernels import stage1_gather as _sg
 from repro.kernels import stage1_int4 as _s1
@@ -52,14 +61,22 @@ def _pad_axis1(a: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
 
 
-@functools.partial(jax.jit, static_argnames=("block_n",))
 def stage1_scores(q_msb: jax.Array, msb_plane: jax.Array,
-                  block_n: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+                  block_n: int | None = None) -> jax.Array:
     """Kernel-backed drop-in for retrieval.stage1_scores_jnp.
 
     q_msb: (D,) int8 signed MSB nibbles of the query.
     msb_plane: (N, D//2) packed uint8. Returns (N,) int32.
+    block_n None -> the installed autotune table's choice (default 1024).
     """
+    if block_n is None:
+        block_n = _at.lookup("stage1_single", 1, _s1.DEFAULT_BLOCK_N)
+    return _stage1_scores_jit(q_msb, msb_plane, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _stage1_scores_jit(q_msb: jax.Array, msb_plane: jax.Array,
+                       block_n: int) -> jax.Array:
     n = msb_plane.shape[0]
     block_n = min(block_n, max(8, n))
     plane = _pad_rows(msb_plane, block_n)
@@ -88,15 +105,25 @@ def stage2_scores(q: jax.Array, msb_rows: jax.Array, lsb_rows: jax.Array,
     return out[:c]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n",))
 def stage1_scores_batched(q_msb: jax.Array, msb_plane: jax.Array,
-                          block_n: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+                          block_n: int | None = None) -> jax.Array:
     """Kernel-backed drop-in for engine.stage1_plane_batched_jnp.
 
     q_msb: (B, D) int8 signed MSB nibbles of the whole query batch.
     msb_plane: (N, D//2) packed uint8. Returns (B, N) int32. ONE launch;
     each doc block is streamed from HBM once per BATCH, not once per query.
+    block_n None -> the installed autotune table's choice for this batch
+    bucket (default 1024).
     """
+    if block_n is None:
+        block_n = _at.lookup("stage1_batched", q_msb.shape[0],
+                             _s1.DEFAULT_BLOCK_N)
+    return _stage1_scores_batched_jit(q_msb, msb_plane, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _stage1_scores_batched_jit(q_msb: jax.Array, msb_plane: jax.Array,
+                               block_n: int) -> jax.Array:
     n = msb_plane.shape[0]
     block_n = min(block_n, max(8, n))
     plane = _pad_rows(msb_plane, block_n)
@@ -106,13 +133,22 @@ def stage1_scores_batched(q_msb: jax.Array, msb_plane: jax.Array,
     return out[:, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_w",))
 def stage1_scores_rows(q_msb: jax.Array, msb_rows: jax.Array,
-                       block_w: int = _s1.DEFAULT_BLOCK_N) -> jax.Array:
+                       block_w: int | None = None) -> jax.Array:
     """Kernel-backed drop-in for engine.stage1_rows_batched_jnp.
 
     q_msb: (B, D) int8 nibbles; msb_rows: (B, W, D//2) per-lane packed row
-    blocks (e.g. each tenant's arena window). Returns (B, W) int32."""
+    blocks (e.g. each tenant's arena window). Returns (B, W) int32.
+    block_w None -> the installed autotune table's choice (default 1024)."""
+    if block_w is None:
+        block_w = _at.lookup("stage1_rows", q_msb.shape[0],
+                             _s1.DEFAULT_BLOCK_N)
+    return _stage1_scores_rows_jit(q_msb, msb_rows, block_w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w",))
+def _stage1_scores_rows_jit(q_msb: jax.Array, msb_rows: jax.Array,
+                            block_w: int) -> jax.Array:
     w = msb_rows.shape[1]
     block_w = min(block_w, max(8, w))
     rows = _pad_axis1(msb_rows, block_w)
@@ -203,13 +239,13 @@ def stage2_scores_batched(q: jax.Array, msb_rows: jax.Array,
     return out[:, :c]
 
 
-@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
 def fused_candidates_batched(q_msb: jax.Array, msb_plane: jax.Array,
                              owner: jax.Array | None = None,
                              tenant_ids: jax.Array | None = None, *, c: int,
                              k_per_block: int = 8,
-                             block_n: int = _fk.DEFAULT_BLOCK_N) -> jax.Array:
+                             block_n: int | None = None) -> jax.Array:
     """Batched fused stage-1 candidate generation (optionally masked).
+    block_n None -> the installed autotune table's choice (default 512).
 
     q_msb: (B, D) int8 nibbles. With owner/tenant_ids, each lane's tenant
     segment mask is applied INSIDE the kernel, so out-of-segment scores
@@ -217,6 +253,21 @@ def fused_candidates_batched(q_msb: jax.Array, msb_plane: jax.Array,
     condition as `fused_candidates` per lane. Lanes whose live segment is
     smaller than c pad with masked entries (id < n but score INT32_MIN
     upstream — callers mask via membership like the dense path)."""
+    if block_n is None:
+        block_n = _at.lookup("fused_topk", q_msb.shape[0],
+                             _fk.DEFAULT_BLOCK_N)
+    return _fused_candidates_batched_jit(q_msb, msb_plane, owner, tenant_ids,
+                                         c=c, k_per_block=k_per_block,
+                                         block_n=block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
+def _fused_candidates_batched_jit(q_msb: jax.Array, msb_plane: jax.Array,
+                                  owner: jax.Array | None = None,
+                                  tenant_ids: jax.Array | None = None, *,
+                                  c: int, k_per_block: int = 8,
+                                  block_n: int = _fk.DEFAULT_BLOCK_N
+                                  ) -> jax.Array:
     n = msb_plane.shape[0]
     block_n = min(block_n, max(8, n))
     plane = _pad_rows(msb_plane, block_n)
@@ -234,17 +285,27 @@ def fused_candidates_batched(q_msb: jax.Array, msb_plane: jax.Array,
     return jnp.take_along_axis(flat_i, sel, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
 def fused_candidates(q_msb: jax.Array, msb_plane: jax.Array, *, c: int,
                      k_per_block: int = 8,
-                     block_n: int = _fk.DEFAULT_BLOCK_N) -> jax.Array:
+                     block_n: int | None = None) -> jax.Array:
     """Stage-1 candidate generation via the fused score+top-k kernel.
 
     Returns (c,) int32 global doc ids (approximate top-c). Exact whenever
     c <= k_per_block * num_blocks and no block contributes more than
     k_per_block of the true top-c (guaranteed when k_per_block >= c or by
     choosing k_per_block >= c / num_blocks safety factor — see tests).
+    block_n None -> the installed autotune table's choice (default 512).
     """
+    if block_n is None:
+        block_n = _at.lookup("fused_topk", 1, _fk.DEFAULT_BLOCK_N)
+    return _fused_candidates_jit(q_msb, msb_plane, c=c,
+                                 k_per_block=k_per_block, block_n=block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "k_per_block", "block_n"))
+def _fused_candidates_jit(q_msb: jax.Array, msb_plane: jax.Array, *, c: int,
+                          k_per_block: int = 8,
+                          block_n: int = _fk.DEFAULT_BLOCK_N) -> jax.Array:
     n = msb_plane.shape[0]
     block_n = min(block_n, max(8, n))
     plane = _pad_rows(msb_plane, block_n)

@@ -27,13 +27,13 @@ from jax.experimental import pallas as pl
 
 # 1024 doc rows per grid step. At D=512 a block is 1024 x 256 bytes =
 # 256 KiB of VMEM (512 KiB double-buffered) — comfortably inside a TPU
-# core's ~16 MiB budget, MXU-aligned (the contraction stays D/2-deep),
-# and 4x fewer grid steps than the previous 256-row blocks. The smaller
-# block was a measured LOSS on the CPU interpret path every benchmark and
-# test here runs on: per-grid-step interpreter overhead dominates below
-# ~512 rows/block, which put the single-query kernel at 0.76x the jnp
-# reference at N=4096 (BENCH_retrieval.json kernel_bench.stage1); at 1024
-# the same shape measures ~1.7x. See README "kernel block shapes".
+# core's ~16 MiB budget, MXU-aligned (the contraction stays D/2-deep).
+# This is the deterministic FALLBACK shape: the measured autotuner
+# (repro.kernels.autotune) owns the per-device, per-batch-bucket choice
+# and the ops.py wrappers consult its installed table first. 1024 remains
+# a sane default because per-grid-step interpreter overhead on the CPU
+# path dominates below ~512 rows/block (the 256-row block once measured
+# 0.76x the jnp reference). See README "kernel block autotuner".
 DEFAULT_BLOCK_N = 1024
 INT32_MIN = jnp.iinfo(jnp.int32).min
 

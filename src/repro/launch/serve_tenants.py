@@ -64,6 +64,28 @@ def main(argv=None):
                          "from the compact slab table)")
     ap.add_argument("--max-wait-ms", type=float, default=5.0,
                     help="deadline slack before a partial batch launches")
+    ap.add_argument("--arrival", choices=("closed", "poisson", "bursty"),
+                    default="closed",
+                    help="closed (default): the mixed trace's query events "
+                         "flush inline. poisson/bursty: after the trace, "
+                         "run an OPEN-LOOP query phase — request bursts "
+                         "arrive on a seeded wall-clock schedule at "
+                         "--rate, and per-burst latency (arrival -> all "
+                         "resolved) is reported with the queue-wait vs "
+                         "compute-wait split")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="open-loop arrival rate in requests/sec "
+                         "(bursts of --batch arrive at rate/batch per sec)")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="in-flight launch depth (0 = legacy synchronous "
+                         "dispatch)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the measured kernel block autotuner before "
+                         "serving and install the winning table")
+    ap.add_argument("--autotune-cache", type=str, default=None,
+                    help="autotuner artifact path: load it if valid for "
+                         "this device, else (with --autotune) save the "
+                         "fresh search there")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the end-of-run metrics registry here in "
@@ -80,6 +102,7 @@ def main(argv=None):
                  "the cache would silently never be consulted)")
 
     rng = np.random.default_rng(args.seed)
+    _maybe_autotune(args)
     gcfg = get_config("qwen2-0.5b", smoke=True)
     gen_api = get_model(gcfg) if args.generate else None
     gen_params = gen_api.init(jax.random.PRNGKey(0)) if args.generate else None
@@ -106,7 +129,8 @@ def main(argv=None):
         max_batch=args.batch, max_wait=args.max_wait_ms / 1e3,
         cache_bytes=args.cache_kb * 1024,
         preload=args.cache_kb > 0 and not args.no_preload,
-        auto_flush=False), registry=registry, tracer=tracer)
+        auto_flush=False, async_depth=args.async_depth),
+        registry=registry, tracer=tracer)
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
         t: [] for t in range(args.tenants)}     # (slot, tokens) live docs
@@ -193,6 +217,8 @@ def main(argv=None):
                                           ecfg.pooled_dim)
         print(f"[energy] {ledger.total_uj:.2f} uJ/query (analytic "
               f"full-corpus estimate; no query was served)")
+    if args.arrival != "closed":
+        _openloop_phase(args, pipe, runtime, docs_of, rng)
     _obs_report(args, registry, tracer)
 
     if args.generate and queries:
@@ -205,12 +231,120 @@ def main(argv=None):
     return 1 if leaks else 0
 
 
+def _maybe_autotune(args) -> None:
+    """--autotune / --autotune-cache: install a measured block-shape
+    table before any engine compiles, so serving traces with the tuned
+    shapes. A cached artifact is loaded when valid for THIS device;
+    otherwise --autotune runs the search (and saves it if a cache path
+    was given)."""
+    from repro.kernels import autotune
+    if args.autotune_cache:
+        table = autotune.load(args.autotune_cache)
+        if table is not None:
+            autotune.install(table)
+            print(f"[tune  ] loaded {args.autotune_cache} "
+                  f"({len(table.entries)} tuned points)")
+            return
+        if not args.autotune:
+            print(f"[tune  ] {args.autotune_cache} missing/stale for this "
+                  "device; serving with DEFAULT_BLOCK_N (pass --autotune "
+                  "to re-measure)")
+            return
+    if not args.autotune:
+        return
+    table = autotune.autotune(reps=3)
+    autotune.install(table)
+    worst = min((e["speedup_vs_default"] for e in table.entries.values()),
+                default=1.0)
+    print(f"[tune  ] measured {len(table.entries)} points "
+          f"(worst speedup vs default {worst:.2f}x)")
+    if args.autotune_cache:
+        table.save(args.autotune_cache)
+        print(f"[tune  ] saved -> {args.autotune_cache}")
+
+
+def _openloop_phase(args, pipe, runtime, docs_of, rng) -> None:
+    """Open-loop query phase: bursts of --batch requests arrive on a
+    seeded wall-clock schedule (--arrival poisson|bursty at --rate
+    requests/sec) against the still-warm runtime. Per-burst latency is
+    arrival -> all handles resolved, so a backlogged server pays its
+    queue in the tail; between arrivals the driver reaps finished
+    launches (the async pipeline's lazy-retire path)."""
+    from repro.core import quantize_int8 as _q8
+    live = [t for t in docs_of if docs_of[t]]
+    if not live:
+        print("[openlp] no live docs; skipping open-loop phase")
+        return
+    bursts = max(4, args.steps // 2)
+    batches = []                            # precomputed off the clock
+    for _ in range(bursts):
+        batch = []
+        for _ in range(args.batch):
+            t = int(rng.choice(live))
+            _, toks = docs_of[t][int(rng.integers(len(docs_of[t])))]
+            q_emb = pipe._embed(jnp.asarray(toks[None]))
+            codes, _ = _q8(q_emb, per_vector=True)
+            batch.append((t, np.asarray(codes[0])))
+        batches.append(batch)
+    gap = args.batch / max(args.rate, 1e-9)
+    if args.arrival == "poisson":
+        arrivals = np.cumsum(rng.exponential(gap, size=bursts))
+    else:                                   # bursty: two-state MMPP
+        arrivals, t, state = [], 0.0, 0
+        for _ in range(bursts):
+            t += float(rng.exponential(gap * (0.4 if state == 0 else 1.6)))
+            arrivals.append(t)
+            if rng.random() < 0.3:
+                state = 1 - state
+        arrivals = np.asarray(arrivals)
+    for batch in batches[:2]:               # untimed warm pass
+        for t, q in batch:
+            runtime.submit(t, q)
+        runtime.flush()
+
+    pending, lat = [], []
+    t0 = time.perf_counter()
+
+    def now():
+        return time.perf_counter() - t0
+
+    def harvest():
+        while pending and all(h.done() for h in pending[0][1]):
+            arr, _ = pending.pop(0)
+            lat.append(now() - arr)
+
+    for batch, arr in zip(batches, arrivals):
+        while True:
+            remaining = arr - now()
+            if remaining <= 0:
+                break
+            runtime.reap()
+            harvest()
+            # yield between probes — a hot-spinning driver starves the
+            # XLA executor of the cycles the in-flight launches need
+            time.sleep(min(2e-4, max(remaining, 0.0)))
+        hs = [runtime.submit(t, q, now=now()) for t, q in batch]
+        runtime.flush()                     # partial bursts must not strand
+        pending.append((arr, hs))
+        harvest()
+    runtime.flush()
+    harvest()
+    p50, p95, p99 = (float(np.percentile(lat, p)) * 1e3
+                     for p in (50, 95, 99))
+    print(f"[openlp] {args.arrival} arrivals, {bursts} bursts x "
+          f"{args.batch} req @ {args.rate:.0f} req/s "
+          f"(async_depth={args.async_depth})")
+    print(f"[openlp] burst latency p50/p95/p99 {p50:.2f}/{p95:.2f}/"
+          f"{p99:.2f} ms")
+
+
 def _obs_report(args, registry, tracer) -> None:
     """End-of-run observability summary + optional artifact exports."""
     rows = []
     for hname, label, unit, scale in (
             ("serve_queue_wait_seconds", "queue wait", "ms", 1e3),
             ("serve_launch_wall_seconds", "launch wall", "ms", 1e3),
+            ("serve_resolve_lag_seconds", "resolve lag", "ms", 1e3),
             ("serve_batch_occupancy", "batch occupancy", "req", 1.0),
             ("energy_uj_per_query", "energy/query", "uJ", 1.0)):
         h = registry.get("histogram", hname)
@@ -225,6 +359,21 @@ def _obs_report(args, registry, tracer) -> None:
         for label, count, p50, p95, p99, unit in rows:
             print(f"[obs   ] {label:<16} {count:>7} {p50:>9.3f} "
                   f"{p95:>9.3f} {p99:>9.3f}  {unit}")
+    # where did request time go: waiting in the batch window (scheduling)
+    # vs launch + retire (compute)? The split tells an operator whether
+    # to tune --window/--batch (queue-bound) or block shapes (compute-bound)
+    qw = registry.get("histogram", "serve_queue_wait_seconds")
+    lw = registry.get("histogram", "serve_launch_wall_seconds")
+    rl = registry.get("histogram", "serve_resolve_lag_seconds")
+    queue_s = qw.total if qw is not None and qw.count else 0.0
+    compute_s = sum(h.total for h in (lw, rl)
+                    if h is not None and h.count)
+    split = queue_s + compute_s
+    if split > 0:
+        print(f"[obs   ] time split: queue wait {queue_s * 1e3:.1f} ms "
+              f"({100 * queue_s / split:.0f}%) vs compute "
+              f"(launch+resolve) {compute_s * 1e3:.1f} ms "
+              f"({100 * compute_s / split:.0f}%)")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             f.write(prometheus_text(registry))

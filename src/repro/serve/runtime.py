@@ -14,7 +14,20 @@ cluster-pruned cascade:
     whichever comes first), partial batches pad to power-of-two buckets
     (one compiled executable per bucket), and batch formation is
     per-tenant fair (round-robin across tenants ordered by deadline, so
-    one chatty user cannot starve the rest of a flush).
+    one chatty user cannot starve the rest of a flush). Launches are
+    ASYNC: a dispatch leaves the batch's device arrays in flight as
+    unresolved futures on a completion queue (up to `async_depth` deep,
+    double-buffered by default) and the host immediately returns to
+    admission — the next batch's formation, slab warming, fills and
+    indirection-table build all overlap the current batch's device
+    scoring. Handles resolve lazily: `done()` is a non-blocking readiness
+    probe, `result(wait=False)` is a None not-ready signal, `result()`
+    blocks only on the caller's own launch, and `flush()`/`barrier()`
+    are full drains. The per-launch host bookkeeping of the cached path
+    (the (B, nprobe) selection readback feeding the hit/miss ledger, LRU,
+    miss admissions and session prior) rides the same queue one launch
+    behind, so the host never sits between launches waiting on a
+    readback.
 
   * `HotClusterCache` — an EdgeRAG-style byte-budgeted LRU of hot
     cluster views held in a DEVICE-RESIDENT SLAB: a cache-owned extension
@@ -101,6 +114,12 @@ class RuntimeConfig:
         launches gather and score fewer rows per probe.
     auto_flush: launch full batches directly from submit() instead of
         waiting for poll()/flush().
+    async_depth: how many dispatched launches may stay IN FLIGHT as
+        unresolved device futures before the host blocks on the oldest
+        one. 2 (the default) double-buffers: the host forms, warms and
+        dispatches batch k+1 while the device scores batch k. 0 restores
+        the legacy synchronous contract — every launch is resolved
+        before `_launch` returns (the open-loop bench's baseline).
     """
 
     max_batch: int = 16
@@ -110,12 +129,15 @@ class RuntimeConfig:
     prior_clusters: int = 8
     preload: bool = False
     auto_flush: bool = True
+    async_depth: int = 2
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait < 0:
             raise ValueError("max_wait must be >= 0")
+        if self.async_depth < 0:
+            raise ValueError("async_depth must be >= 0 (0 = synchronous)")
         if self.fairness not in ("deadline_rr", "fifo"):
             raise ValueError(f"unknown fairness policy {self.fairness!r}")
         if self.cache_bytes < 0 or self.prior_clusters < 0:
@@ -129,39 +151,81 @@ class RuntimeConfig:
 class RequestHandle:
     """Future-style handle for one submitted query.
 
-    Resolved by the runtime when the request's batch launches; `result()`
-    drains the runtime if the request is still queued (or raises with
-    ``wait=False``)."""
+    State machine (`state` property):
+
+        pending ──admission──> admitted ──dispatch──> in_flight
+                                                          │ retire
+                                                          ▼
+                                                      resolved
+
+    * ``pending``: queued, not yet picked into a batch.
+    * ``admitted``: picked into a batch that is being formed/dispatched
+      (a transient state — observable only from inside the runtime or if
+      a dispatch raises).
+    * ``in_flight``: the batch's device computation was dispatched; the
+      result is an unresolved device future on the completion queue.
+    * ``resolved``: the launch was retired — `result()` returns numpy
+      row views immediately.
+
+    `done()` never blocks: it reports resolved, or probes the in-flight
+    launch's device buffers (`jax.Array.is_ready`) and retires the
+    completion queue through it when they landed. `result(wait=False)`
+    returns ``None`` as the well-defined not-ready signal (it used to
+    raise). `result()` (``wait=True``) blocks only as far as needed:
+    in-flight requests retire their own launch, queued requests drain
+    the runtime via `flush()`."""
 
     __slots__ = ("request_id", "tenant_id", "deadline", "launch_index",
-                 "_runtime", "_result")
+                 "_runtime", "_result", "_inflight")
 
     def __init__(self, runtime: "ServingRuntime", request_id: int,
                  tenant_id: int, deadline: float):
         self.request_id = request_id
         self.tenant_id = tenant_id
         self.deadline = deadline
-        self.launch_index: int | None = None   # which launch resolved it
+        self.launch_index: int | None = None   # which launch admitted it
         self._runtime = runtime
         self._result: RetrievalResult | None = None
+        self._inflight: "_InFlight | None" = None
+
+    @property
+    def state(self) -> str:
+        if self._result is not None:
+            return "resolved"
+        if self._inflight is not None:
+            return "in_flight"
+        if self.launch_index is not None:
+            return "admitted"
+        return "pending"
 
     def done(self) -> bool:
-        return self._result is not None
+        """Non-blocking: True iff `result()` would return immediately.
 
-    def result(self, *, wait: bool = True) -> RetrievalResult:
+        An in-flight request whose device buffers landed is retired here
+        (along with every earlier launch on the completion queue — the
+        device executes in dispatch order, so they landed too)."""
+        if self._result is not None:
+            return True
+        infl = self._inflight
+        if infl is None or not infl.is_ready():
+            return False
+        self._runtime._retire_through(infl)
+        return True
+
+    def result(self, *, wait: bool = True) -> RetrievalResult | None:
         if self._result is None:
             if not wait:
-                raise RuntimeError(
-                    f"request {self.request_id} still queued; poll() or "
-                    "flush() the runtime (or call result(wait=True))")
-            self._runtime.flush()
+                return self._result if self.done() else None
+            if self._inflight is not None:
+                self._runtime._retire_through(self._inflight)
+            else:
+                self._runtime.flush()
         assert self._result is not None
         return self._result
 
     def __repr__(self):  # pragma: no cover - debugging aid
-        state = "done" if self.done() else "pending"
         return (f"RequestHandle(id={self.request_id}, "
-                f"tenant={self.tenant_id}, {state})")
+                f"tenant={self.tenant_id}, {self.state})")
 
 
 @dataclasses.dataclass
@@ -170,6 +234,34 @@ class _Pending:
     query: np.ndarray             # (D,) int8
     seq: int                      # arrival order
     submit_ts: float = 0.0        # submit clock (queue-wait histogram)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unresolved launch on the completion queue.
+
+    `res` holds the launch's device arrays as futures; `book` is the
+    deferred host bookkeeping of the cached path (the selection readback
+    + ledger/LRU/admission/prior updates), run at retire time so the
+    host never blocks on a readback between dispatches. `admit_now` is
+    the launch's admission clock (queue-wait histogram + trace ends stay
+    on the injectable clock — deterministic under simulated schedules);
+    `dispatch_t` is the real monotonic dispatch instant the resolve-lag
+    histogram measures against."""
+
+    group: list[_Pending]
+    res: RetrievalResult          # device arrays (futures until retired)
+    launch_index: int
+    admit_now: float
+    dispatch_t: float
+    book: "collections.abc.Callable[[], None] | None" = None
+
+    def is_ready(self) -> bool:
+        """Non-blocking device-completion probe. All three outputs come
+        from one jitted program, so probing one suffices; arrays without
+        `is_ready` (e.g. already-materialized numpy) count as ready."""
+        probe = getattr(self.res.indices, "is_ready", None)
+        return True if probe is None else bool(probe())
 
 
 @dataclasses.dataclass
@@ -396,6 +488,11 @@ class HotClusterCache:
         self._slab_plane = self._inv_norms = self._packed = None
         self._gid0 = self._cnt = None
         self._reset_slots()
+
+    @property
+    def generation(self) -> int:
+        """The arena generation the slab currently mirrors."""
+        return self._generation
 
     def sync_generation(self, generation: int) -> None:
         """Invalidate everything copied under an older arena state."""
@@ -780,6 +877,8 @@ class ServingRuntime:
         self._m_queue_wait = reg.histogram("serve_queue_wait_seconds")
         self._m_occupancy = reg.histogram("serve_batch_occupancy")
         self._m_launch_wall = reg.histogram("serve_launch_wall_seconds")
+        self._m_inflight = reg.gauge("serve_inflight_depth")
+        self._m_resolve_lag = reg.histogram("serve_resolve_lag_seconds")
         # Clock discipline: `now` is injectable everywhere (simulated
         # clocks in tests); once any caller supplies one, implicit
         # clocks (flush() via result()) reuse the last seen value so
@@ -792,6 +891,9 @@ class ServingRuntime:
                       if self.cfg.cache_bytes > 0 else None)
         self._queues: "collections.OrderedDict[int, collections.deque[_Pending]]" = (
             collections.OrderedDict())
+        # Completion queue: dispatched launches whose device futures are
+        # still unresolved, oldest first. Bounded by cfg.async_depth.
+        self._inflight: "collections.deque[_InFlight]" = collections.deque()
         self._num_pending = 0
         self._next_id = 0
         self._seq = 0
@@ -894,21 +996,95 @@ class ServingRuntime:
     def poll(self, now: float | None = None) -> list[RequestHandle]:
         """Launch every batch that is full or past its oldest deadline.
 
-        Returns the handles resolved by this call (possibly empty — a
-        young partial batch keeps waiting for more traffic)."""
+        Returns the handles dispatched by this call (possibly empty — a
+        young partial batch keeps waiting for more traffic). Dispatched
+        handles are in flight, not necessarily resolved: poll() also
+        opportunistically retires launches whose device buffers already
+        landed (`reap`), but never blocks on one — that is what
+        `flush()`/`barrier()`/`result()` are for."""
         now = self._clock(now)
-        resolved: list[RequestHandle] = []
+        launched: list[RequestHandle] = []
         while self._num_pending and self.ready(now):
-            resolved.extend(self._launch(self._form_batch(), now))
-        return resolved
+            launched.extend(self._launch(self._form_batch(), now))
+        self.reap()
+        return launched
 
     def flush(self, now: float | None = None) -> list[RequestHandle]:
-        """Drain the queue unconditionally (deadlines ignored)."""
+        """Drain the queue unconditionally (deadlines ignored) and
+        barrier: on return every handle this runtime ever dispatched is
+        resolved and every deferred ledger/cache bookkeeping has run.
+        Returns the handles drained from the queue by THIS call."""
         now = self._clock(now)
-        resolved: list[RequestHandle] = []
+        launched: list[RequestHandle] = []
         while self._num_pending:
-            resolved.extend(self._launch(self._form_batch(), now))
-        return resolved
+            launched.extend(self._launch(self._form_batch(), now))
+        self.barrier()
+        return launched
+
+    def barrier(self) -> int:
+        """Retire every in-flight launch (blocking), oldest first.
+
+        Returns how many launches were retired. After a barrier all
+        ledgers (`last_plan`, byte counters, cache stats, session
+        priors) are final for everything dispatched so far."""
+        n = 0
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+            n += 1
+        return n
+
+    def reap(self) -> int:
+        """Non-blocking retire: resolve launches whose device buffers
+        already landed, oldest first, stopping at the first one still
+        executing. Returns how many launches were retired."""
+        n = 0
+        while self._inflight and self._inflight[0].is_ready():
+            self._retire(self._inflight.popleft())
+            n += 1
+        return n
+
+    def in_flight(self) -> int:
+        """How many dispatched launches are currently unresolved."""
+        return len(self._inflight)
+
+    def _retire_through(self, target: _InFlight) -> None:
+        """Retire queue head through `target` inclusive (the device runs
+        launches in dispatch order, so everything older landed first)."""
+        while self._inflight:
+            infl = self._inflight.popleft()
+            self._retire(infl)
+            if infl is target:
+                return
+
+    def _retire(self, infl: _InFlight) -> None:
+        """Resolve one launch: materialize the batch's device arrays
+        (blocking if still executing), hand out numpy row views, close
+        request spans, then run the launch's deferred bookkeeping —
+        always in dispatch order, so the cache/ledger mutation sequence
+        is the synchronous path's sequence."""
+        res = infl.res
+        # Materialize the batch ONCE and hand out numpy row views:
+        # slicing jnp arrays per lane would dispatch 3 eager device ops
+        # per request (a measurable per-flush tax at serving batch sizes).
+        indices = np.asarray(res.indices)
+        scores = np.asarray(res.scores)
+        cands = np.asarray(res.candidate_indices)
+        self._m_resolve_lag.observe(
+            max(0.0, time.monotonic() - infl.dispatch_t))
+        for i, req in enumerate(infl.group):
+            req.handle._result = RetrievalResult(
+                indices=indices[i], scores=scores[i],
+                candidate_indices=cands[i])
+            req.handle._inflight = None
+            self._m_queue_wait.observe(
+                max(0.0, infl.admit_now - req.submit_ts))
+            self.tracer.end(req.handle.request_id, now=infl.admit_now,
+                            request=req.handle.request_id,
+                            launch=infl.launch_index)
+        self._m_resolved.inc(len(infl.group))
+        if infl.book is not None:
+            infl.book()
+        self._m_inflight.set(float(len(self._inflight)))
 
     def _form_batch(self) -> list[_Pending]:
         """Pick up to max_batch pending requests.
@@ -969,6 +1145,14 @@ class ServingRuntime:
 
     def _launch(self, group: list[_Pending],
                 now: float | None = None) -> list[RequestHandle]:
+        """Dispatch one batch and enqueue it on the completion queue.
+
+        Host cost here is admission + dispatch only: the device arrays
+        stay in flight as futures and every readback-dependent step
+        (handing out results, the cached path's ledger/LRU/admission
+        bookkeeping) is deferred to `_retire`. With async_depth=0 the
+        backpressure loop below retires the launch before returning —
+        the legacy synchronous contract."""
         b = len(group)
         if b == 0:
             return []
@@ -979,69 +1163,82 @@ class ServingRuntime:
         for i, req in enumerate(group):
             queries[i] = req.query
             tids[i] = req.handle.tenant_id
+            req.handle.launch_index = self.launches
             self.tracer.instant("admit", now=now, tid=req.handle.tenant_id,
                                 request=req.handle.request_id,
                                 launch=self.launches)
         t0 = time.monotonic()
         with self.tracer.span("launch", now=now, batch=b, padded=pb,
                               index=self.launches):
-            res, plan = self._execute(queries, tids)
+            res, plan, book = self._execute(queries, tids)
+        # Dispatch wall only — execution overlaps the host from here on;
+        # serve_resolve_lag_seconds (observed at retire) is the other half.
         self._m_launch_wall.observe(time.monotonic() - t0)
         self._m_launches.inc()
         self._m_occupancy.observe(float(b))
         self.launches += 1
         self.queries_served += b
         if plan is not None:
-            self.last_plan = plan
-            # stage1_bytes is what the launch actually streamed from HBM
-            # (padding lanes included); the vmapped comparison counts only
-            # the b REAL requests — a sequential server would never have
-            # dispatched the padding lanes.
-            self.stage1_bytes_streamed += plan.stage1_bytes
-            self.stage1_bytes_sram += plan.stage1_bytes_sram
-            self.stage1_bytes_vmapped += (
-                plan.stage1_bytes_vmapped // plan.batch) * b
-            for s in plan.stages:
-                self.stage_bytes[s.name] = (
-                    self.stage_bytes.get(s.name, 0) + s.bytes_hbm)
-                if s.bytes_sram:
-                    self.stage_bytes_sram[s.name] = (
-                        self.stage_bytes_sram.get(s.name, 0) + s.bytes_sram)
-            if self.registry.enabled:
-                # Derived publications (per-stage fan-out + energy
-                # pricing) only when someone is listening: keeps the
-                # metrics-off launch path byte-identical to pre-obs.
-                plan.publish(self.registry)
-                energy.observe_cost(
-                    self.registry,
-                    energy.cost_cascade(plan.stages, self.index.arena.dim,
-                                        batch=plan.batch), queries=b)
-        # Materialize the batch ONCE and hand out numpy row views: slicing
-        # jnp arrays per lane would dispatch 3 eager device ops per
-        # request (a measurable per-flush tax at serving batch sizes).
-        indices = np.asarray(res.indices)
-        scores = np.asarray(res.scores)
-        cands = np.asarray(res.candidate_indices)
-        for i, req in enumerate(group):
-            req.handle.launch_index = self.launches - 1
-            req.handle._result = RetrievalResult(
-                indices=indices[i], scores=scores[i],
-                candidate_indices=cands[i])
-            self._m_queue_wait.observe(max(0.0, now - req.submit_ts))
-            self.tracer.end(req.handle.request_id, now=now,
-                            request=req.handle.request_id,
-                            launch=self.launches - 1)
-        self._m_resolved.inc(b)
+            self._account_plan(plan, b)
+        infl = _InFlight(group=group, res=res, launch_index=self.launches - 1,
+                         admit_now=now, dispatch_t=time.monotonic(),
+                         book=book)
+        for req in group:
+            req.handle._inflight = infl
+        self._inflight.append(infl)
+        self._m_inflight.set(float(len(self._inflight)))
+        # Backpressure: never more than async_depth unresolved launches —
+        # beyond it, block on the oldest (it is the furthest along).
+        while len(self._inflight) > self.cfg.async_depth:
+            self._retire(self._inflight.popleft())
         return [req.handle for req in group]
 
+    def _account_plan(self, plan: engine.SchedulePlan, b: int) -> None:
+        """Fold one launch's SchedulePlan into the runtime ledgers.
+
+        Runs at dispatch for the uncached path (the plan is analytic)
+        and inside the deferred bookkeeping for the cached path (the
+        hit/miss split needs the selection readback) — either way in
+        launch order, so ledgers after a barrier match the synchronous
+        path exactly."""
+        self.last_plan = plan
+        # stage1_bytes is what the launch actually streamed from HBM
+        # (padding lanes included); the vmapped comparison counts only
+        # the b REAL requests — a sequential server would never have
+        # dispatched the padding lanes.
+        self.stage1_bytes_streamed += plan.stage1_bytes
+        self.stage1_bytes_sram += plan.stage1_bytes_sram
+        self.stage1_bytes_vmapped += (
+            plan.stage1_bytes_vmapped // plan.batch) * b
+        for s in plan.stages:
+            self.stage_bytes[s.name] = (
+                self.stage_bytes.get(s.name, 0) + s.bytes_hbm)
+            if s.bytes_sram:
+                self.stage_bytes_sram[s.name] = (
+                    self.stage_bytes_sram.get(s.name, 0) + s.bytes_sram)
+        if self.registry.enabled:
+            # Derived publications (per-stage fan-out + energy
+            # pricing) only when someone is listening: keeps the
+            # metrics-off launch path byte-identical to pre-obs.
+            plan.publish(self.registry)
+            energy.observe_cost(
+                self.registry,
+                energy.cost_cascade(plan.stages, self.index.arena.dim,
+                                    batch=plan.batch), queries=b)
+
     def _execute(self, queries: np.ndarray, tids: np.ndarray
-                 ) -> tuple[RetrievalResult, engine.SchedulePlan | None]:
+                 ) -> tuple[RetrievalResult, engine.SchedulePlan | None,
+                            "collections.abc.Callable[[], None] | None"]:
+        """Dispatch one batch; returns (device result, plan-if-known,
+        deferred bookkeeping). The uncached path's plan is analytic —
+        known at dispatch, no bookkeeping; the cached path defers its
+        readback-dependent plan + cache bookkeeping to retire time."""
         if self.cache is not None:
             layout = self.index.cluster_layout(tids)
             if layout is not None:
                 return self._execute_cached(queries, tids, *layout)
         res = self.index.retrieve(jnp.asarray(queries), tids)
-        return res, self.index.last_plan
+        return res, self.index.last_plan, None
 
     # -- the hot-cluster-cache path -----------------------------------------
 
@@ -1142,21 +1339,29 @@ class ServingRuntime:
     def _execute_cached(self, queries: np.ndarray, tids: np.ndarray,
                         policy: engine.ClusterPolicy,
                         host_table: np.ndarray
-                        ) -> tuple[RetrievalResult, engine.SchedulePlan]:
+                        ) -> tuple[RetrievalResult, None,
+                                   "collections.abc.Callable[[], None]"]:
         """One launch through the device-resident slab path.
 
-        Host work per launch is a handful of dict/array lookups: pin the
+        Host work at dispatch is a handful of dict/array lookups: pin the
         slab to the arena generation, warm the session (priors, or the
         full preload when enabled), resolve the slot map into the launch
         indirection table — the COMPACT slab table when every batch
         tenant is fully resident, the full-width plane table otherwise;
         both cached per slot-map version, zero rebuild when fully warm —
         and launch ONE jitted cascade (`SlabPolicy`). Selection runs
-        in-graph; the tiny (B, nprobe) selection readback afterwards
-        feeds the hit/miss ledger, the LRU, miss admissions (device row
-        copies), and the session prior. No per-lane view is ever
-        materialized on the host or uploaded, and hit rows are never
-        re-streamed."""
+        in-graph; the tiny (B, nprobe) selection readback that feeds the
+        hit/miss ledger, the LRU, miss admissions (device row copies)
+        and the session prior is DEFERRED into the returned bookkeeping
+        closure, run at retire time in launch order — so the host forms
+        and dispatches the next batch instead of stalling on this one's
+        selection. Pipelined launches therefore warm from priors that
+        may lag by the pipeline depth; that shifts only WHERE bytes come
+        from (and when admissions land), never what is scored — results
+        stay bit-identical to the synchronous path, and a barrier
+        (flush) drains bookkeeping in launch order so per-flush ledgers
+        match it exactly. No per-lane view is ever materialized on the
+        host or uploaded, and hit rows are never re-streamed."""
         index = self.index
         db = index.arena.db()
         cache = self.cache
@@ -1164,6 +1369,15 @@ class ServingRuntime:
         d2 = db.msb_plane.shape[1]
         k_clusters = policy.centroid_msb.shape[0]
         cache.configure(br, d2)
+        if (self._inflight
+                and cache.generation != index.arena.generation):
+            # An arena mutation is about to invalidate the slab: retire
+            # everything dispatched against the OLD generation first, so
+            # their deferred bookkeeping reads the slot map its launches
+            # actually encoded (exact synchronous semantics across
+            # generations; mutations are rare, the sync is off the
+            # steady-state path).
+            self.barrier()
         cache.sync_generation(index.arena.generation)
         cache.ensure_slab(db.msb_plane, db.norms_sq, policy.owner,
                           policy.labels, k_clusters)
@@ -1193,73 +1407,91 @@ class ServingRuntime:
             inv_norms=cache.inv_norms, nprobe=policy.nprobe, block_rows=br)
         res, top_clusters = index.engine.retrieve_with_clusters(
             jnp.asarray(queries), db, spolicy)
-        # Post-launch bookkeeping on the (B, nprobe) selection readback.
-        # Admissions are DEFERRED below the whole loop, so the ledger
-        # reflects the exact snapshot the launch's table encoded and
-        # always matches what the graph actually streamed.
-        tc = np.asarray(top_clusters)
-        bsz = tc.shape[0]
-        block_bytes = br * d2
-        hit_bytes = miss_bytes = 0
-        to_admit: dict[tuple[int, int], int] = {}
-        for i in range(bsz):
-            t = int(tids[i])
-            if t < 0:
-                continue                      # padding lane: all holes
-            row_table = host_table[i]
-            lane_hit, missing = cache.lookup_lane(t, tc[i].tolist())
-            hit_bytes += lane_hit
-            for c in missing:
-                key = (t, c)
-                if key not in to_admit:
-                    to_admit[key] = int((row_table[c] >= 0).sum())
-                # a miss streamed the cluster's PLANE blocks from HBM
-                miss_bytes += to_admit[key] * block_bytes
-        if to_admit:
-            self._m_deferred_fills.inc(len(to_admit))
-            for (t, c) in to_admit:
-                cache.put(t, c, index.cluster_rows(t).get(c, ()))
-                # fills applied by the NEXT launch's flush
-        # Ledger: the analytic cluster plan with the approx stage split
-        # into measured HBM misses (+ warming prefetches) vs cache hits.
-        # The base plan is pure arithmetic over static shapes — cached
-        # per launch signature so the steady state doesn't rebuild an
-        # identical plan every turn.
-        pkey = (db.num_docs, db.dim, bsz, k_clusters,
-                engine.probe_rows(spolicy))
-        base = self._plan_cache.get(pkey)
-        if base is None:
-            if len(self._plan_cache) > 256:   # num_docs moves per mutation
-                self._plan_cache.clear()
-            base = engine.plan(index.cfg, num_docs=db.num_docs, dim=db.dim,
-                               batch=bsz, kind="cluster",
-                               num_clusters=k_clusters,
-                               view_rows=engine.probe_rows(spolicy))
-            self._plan_cache[pkey] = base
-        plan = engine.cache_split_plan(base,
-                                       hbm_bytes=miss_bytes + prefetched,
-                                       sram_bytes=hit_bytes)
-        self.prefetch_bytes += prefetched
-        self._m_prefetch_bytes.inc(prefetched)
-        index.last_plan = plan
-        # Refresh each tenant's session prior with the clusters this turn
-        # actually probed (most recent first, bounded). Compact launches
-        # skip it: the preload pins the whole session, so the prior
-        # would never be consulted (it rebuilds within prior_clusters
-        # turns if a budget/demand shift ever forces the fallback path).
-        if self.cfg.prior_clusters and not compact:
+        # Dispatch done. Everything below needs the (B, nprobe) selection
+        # readback — a device sync — so it is packaged into a closure the
+        # completion queue runs at retire time (launch order), letting
+        # the host overlap the NEXT batch's admission with this scoring.
+        arena_gen = index.arena.generation
+        b_real = int((tids >= 0).sum())
+        probe_rows = engine.probe_rows(spolicy)
+
+        def book() -> None:
+            # Admissions still run AFTER the whole hit/miss loop, so the
+            # ledger reflects the slot-map snapshot at retire time; a
+            # barrier per turn (flush) makes that the exact snapshot the
+            # launch's table encoded, the synchronous path's ledger.
+            tc = np.asarray(top_clusters)
+            bsz = tc.shape[0]
+            block_bytes = br * d2
+            hit_bytes = miss_bytes = 0
+            # A mutation between dispatch and retire means cluster_rows
+            # now describes a DIFFERENT arena: admitting those rows into
+            # this launch's (old-generation) slot map would be wrong,
+            # and the next cached dispatch invalidates the slab anyway.
+            stale = index.arena.generation != arena_gen
+            to_admit: dict[tuple[int, int], int] = {}
             for i in range(bsz):
                 t = int(tids[i])
                 if t < 0:
-                    continue
-                fresh = list(dict.fromkeys(int(c) for c in tc[i]))
-                old = [c for c in self._recent.get(t, []) if c not in fresh]
-                self._recent[t] = (fresh + old)[:self.cfg.prior_clusters]
-        return res, plan
+                    continue                  # padding lane: all holes
+                row_table = host_table[i]
+                lane_hit, missing = cache.lookup_lane(t, tc[i].tolist())
+                hit_bytes += lane_hit
+                for c in missing:
+                    key = (t, c)
+                    if key not in to_admit:
+                        to_admit[key] = int((row_table[c] >= 0).sum())
+                    # a miss streamed the cluster's PLANE blocks from HBM
+                    miss_bytes += to_admit[key] * block_bytes
+            if to_admit and not stale:
+                self._m_deferred_fills.inc(len(to_admit))
+                for (t, c) in to_admit:
+                    cache.put(t, c, index.cluster_rows(t).get(c, ()))
+                    # fills applied by the NEXT launch's flush
+            # Ledger: the analytic cluster plan with the approx stage
+            # split into measured HBM misses (+ warming prefetches) vs
+            # cache hits. The base plan is pure arithmetic over static
+            # shapes — cached per launch signature so the steady state
+            # doesn't rebuild an identical plan every turn.
+            pkey = (db.num_docs, db.dim, bsz, k_clusters, probe_rows)
+            base = self._plan_cache.get(pkey)
+            if base is None:
+                if len(self._plan_cache) > 256:  # num_docs moves per mutation
+                    self._plan_cache.clear()
+                base = engine.plan(index.cfg, num_docs=db.num_docs,
+                                   dim=db.dim, batch=bsz, kind="cluster",
+                                   num_clusters=k_clusters,
+                                   view_rows=probe_rows)
+                self._plan_cache[pkey] = base
+            plan = engine.cache_split_plan(base,
+                                           hbm_bytes=miss_bytes + prefetched,
+                                           sram_bytes=hit_bytes)
+            self.prefetch_bytes += prefetched
+            self._m_prefetch_bytes.inc(prefetched)
+            index.last_plan = plan
+            self._account_plan(plan, b_real)
+            # Refresh each tenant's session prior with the clusters this
+            # turn actually probed (most recent first, bounded). Compact
+            # launches skip it: the preload pins the whole session, so
+            # the prior would never be consulted (it rebuilds within
+            # prior_clusters turns if a budget/demand shift ever forces
+            # the fallback path).
+            if self.cfg.prior_clusters and not compact:
+                for i in range(bsz):
+                    t = int(tids[i])
+                    if t < 0:
+                        continue
+                    fresh = list(dict.fromkeys(int(c) for c in tc[i]))
+                    old = [c for c in self._recent.get(t, [])
+                           if c not in fresh]
+                    self._recent[t] = (fresh + old)[:self.cfg.prior_clusters]
+
+        return res, None, book
 
     # -- reporting ----------------------------------------------------------
 
     def cache_stats(self) -> dict:
+        self.barrier()    # stats are defined as of the last RETIRED launch
         if self.cache is None:
             return {"enabled": False}
         return {"enabled": True, "entries": len(self.cache),
@@ -1272,6 +1504,7 @@ class ServingRuntime:
 
     def energy_ledger(self, dim: int | None = None):
         """cost_cascade of the most recent launch's measured plan."""
+        self.barrier()    # the cached path's plan lands at retire time
         if self.last_plan is None:
             raise RuntimeError("no launch has run yet")
         return energy.cost_cascade(self.last_plan.stages,

@@ -1,0 +1,160 @@
+"""Kernel block autotuner: table semantics, artifact lifecycle, ops wiring.
+
+The contract pinned here: (a) with no table installed every op resolves
+to the hand-written `DEFAULT_BLOCK_N` — behavior without an artifact is
+exactly the pre-autotuner behavior; (b) a tuned table only ever REROUTES
+block shapes, never results (block_n is a schedule knob, bit-exact by
+the kernel contract); (c) artifacts are keyed to the device that
+measured them — a stale artifact degrades to the default, it never
+steers shapes tuned on other hardware; (d) the chosen block times at
+>= 1.0x the default at every benched point by construction.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune, ops
+from repro.kernels import fused_topk as _fk
+from repro.kernels import stage1_int4 as _s1
+
+
+@pytest.fixture(autouse=True)
+def _clean_table():
+    """Installation is process-global; never leak it across tests."""
+    autotune.clear_installed()
+    yield
+    autotune.clear_installed()
+
+
+def tiny_table(entries=None):
+    return autotune.TuneTable(
+        autotune.device_signature(),
+        entries or {"stage1_batched/b8": {
+            "kernel": "stage1_batched", "batch_bucket": 8, "block_n": 512,
+            "timings_ms": {"512": 1.0, "1024": 2.0}, "default_block_n": 1024,
+            "default_ms": 2.0, "speedup_vs_default": 2.0}})
+
+
+# ---------------------------------------------------------------------------
+# Lookup and fallback semantics
+# ---------------------------------------------------------------------------
+
+def test_lookup_without_table_is_deterministic_default():
+    assert autotune.installed() is None
+    assert autotune.lookup("stage1_batched", 8, _s1.DEFAULT_BLOCK_N) == \
+        _s1.DEFAULT_BLOCK_N
+    assert autotune.lookup("no_such_kernel", 1, 77) == 77
+
+
+def test_installed_table_resolves_bucket_and_falls_back():
+    autotune.install(tiny_table())
+    # exact pow2 bucket hit (batch 5 pads to bucket 8)
+    assert autotune.lookup("stage1_batched", 8, 1024) == 512
+    assert autotune.lookup("stage1_batched", 5, 1024) == 512
+    # nearest measured bucket when the exact one was never benched
+    assert autotune.lookup("stage1_batched", 64, 1024) == 512
+    # un-benched kernel: deterministic default
+    assert autotune.lookup("fused_topk", 8, _fk.DEFAULT_BLOCK_N) == \
+        _fk.DEFAULT_BLOCK_N
+    autotune.clear_installed()
+    assert autotune.lookup("stage1_batched", 8, 1024) == 1024
+
+
+# ---------------------------------------------------------------------------
+# Artifact lifecycle: round-trip, corruption, stale-device invalidation
+# ---------------------------------------------------------------------------
+
+def test_table_json_round_trip(tmp_path):
+    t = tiny_table()
+    path = str(tmp_path / "tune.json")
+    t.save(path)
+    back = autotune.load(path)
+    assert back is not None
+    assert back.signature == t.signature
+    assert back.entries == t.entries
+    assert back.best("stage1_batched", 8) == 512
+
+
+def test_stale_device_artifact_is_refused(tmp_path):
+    t = tiny_table()
+    obj = t.to_json()
+    obj["signature"]["device_kind"] = "TPU v9000"
+    path = tmp_path / "stale.json"
+    path.write_text(json.dumps(obj))
+    assert autotune.load(str(path)) is None          # wrong hardware
+    # ...but the payload itself is intact: opting out of the device check
+    # (offline inspection) still parses it
+    assert autotune.TuneTable.from_json(
+        obj, require_current_device=False) is not None
+
+
+def test_malformed_artifacts_degrade_to_none(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert autotune.load(str(bad)) is None
+    assert autotune.load(str(tmp_path / "missing.json")) is None
+    assert autotune.TuneTable.from_json({"schema": 999}) is None
+    assert autotune.TuneTable.from_json(
+        {"schema": autotune.SCHEMA_VERSION, "signature": {},
+         "entries": {"x": {"kernel": "k"}}},     # entry missing block_n
+        require_current_device=False) is None
+
+
+def test_env_cache_installs_at_engine_construction(tmp_path, monkeypatch):
+    from repro.core import RetrievalConfig
+    from repro.tenancy import MultiTenantIndex
+    path = str(tmp_path / "env_tune.json")
+    tiny_table().save(path)
+    monkeypatch.setenv(autotune.ENV_CACHE, path)
+    autotune._load_env_cache.cache_clear()
+    assert autotune.installed() is None
+    MultiTenantIndex(64, 32, RetrievalConfig(k=2))   # builds an engine
+    got = autotune.installed()
+    assert got is not None and got.best("stage1_batched", 8) == 512
+
+
+# ---------------------------------------------------------------------------
+# Measured search: the >= 1.0x invariant and ops bit parity
+# ---------------------------------------------------------------------------
+
+def test_autotune_speedup_vs_default_at_least_one():
+    """DEFAULT_BLOCK_N is always a candidate and argmin picks the chosen
+    block, so every entry's speedup is >= 1.0 by construction — the
+    bench gate relies on exactly this."""
+    table = autotune.autotune(n=256, d=32, batches=(1, 4),
+                              candidates=(64, 256), reps=1,
+                              kernels=("stage1_batched", "fused_topk"))
+    assert table.entries, "search produced no entries"
+    for e in table.entries.values():
+        assert e["speedup_vs_default"] >= 1.0
+        assert str(e["default_block_n"]) in e["timings_ms"]
+        assert str(e["block_n"]) in e["timings_ms"]
+
+
+def test_tuned_ops_bit_identical_to_default(tmp_path):
+    """A tuned table reroutes block shapes only: stage-1 scores and fused
+    candidates under an installed table are bitwise what the default
+    shapes produce."""
+    rng = np.random.default_rng(0)
+    n, d, b = 512, 32, 4
+    plane = jnp.asarray(rng.integers(0, 256, (n, d // 2)).astype(np.uint8))
+    q = jnp.asarray(rng.integers(-8, 8, (b, d)).astype(np.int8))
+    base_scores = np.asarray(ops.stage1_scores_batched(q, plane))
+    base_cand = ops.fused_candidates_batched(q, plane, c=8, k_per_block=8)
+    autotune.install(autotune.TuneTable(autotune.device_signature(), {
+        "stage1_batched/b4": {"kernel": "stage1_batched", "batch_bucket": 4,
+                              "block_n": 128},
+        "fused_topk/b4": {"kernel": "fused_topk", "batch_bucket": 4,
+                          "block_n": 64}}))
+    tuned_scores = np.asarray(ops.stage1_scores_batched(q, plane))
+    tuned_cand = ops.fused_candidates_batched(q, plane, c=8, k_per_block=8)
+    np.testing.assert_array_equal(base_scores, tuned_scores)
+    np.testing.assert_array_equal(np.asarray(base_cand[0]),
+                                  np.asarray(tuned_cand[0]))
+    np.testing.assert_array_equal(np.asarray(base_cand[1]),
+                                  np.asarray(tuned_cand[1]))
+    # explicit block_n bypasses the table entirely
+    explicit = np.asarray(ops.stage1_scores_batched(q, plane, block_n=256))
+    np.testing.assert_array_equal(base_scores, explicit)

@@ -72,8 +72,9 @@ def test_deadline_admission_virtual_clock():
     assert not rt.ready(now=0.0) and rt.poll(now=4.9) == []
     assert not h.done() and rt.pending() == 1
     assert rt.next_deadline() == 5.0
-    resolved = rt.poll(now=5.0)                 # deadline forces the launch
-    assert resolved == [h] and h.done() and rt.pending() == 0
+    launched = rt.poll(now=5.0)                 # deadline forces the launch
+    assert launched == [h] and rt.pending() == 0
+    assert h.result() is not None and h.done()  # result() retires the launch
 
 
 def test_full_batch_launches_immediately_from_submit():
@@ -81,7 +82,14 @@ def test_full_batch_launches_immediately_from_submit():
     rt = ServingRuntime(idx, RuntimeConfig(max_batch=2, max_wait=100.0))
     h1 = rt.submit(0, q[0][0], now=0.0)
     assert not h1.done()                        # partial batch waits
+    assert h1.state == "pending"
     h2 = rt.submit(1, q[1][0], now=0.0)
+    # the full batch dispatched straight from submit(); with async
+    # dispatch the handles are at least in flight (resolved once the
+    # device lands — result() forces that without draining the queue)
+    assert rt.launches == 1
+    assert h1.state in ("in_flight", "resolved")
+    assert h1.result() is not None and h2.result() is not None
     assert h1.done() and h2.done() and rt.launches == 1
 
 
@@ -93,14 +101,62 @@ def test_explicit_deadline_overrides_max_wait():
     assert rt.poll(now=0.5) == [] and rt.poll(now=1.0) == [h]
 
 
-def test_result_drains_and_wait_false_raises():
+def test_result_wait_false_is_none_until_ready_and_drains():
+    """The handle state machine: result(wait=False) is a well-defined
+    None not-ready signal at every pre-resolved state (it used to raise
+    on queued requests), and result() drains exactly as far as needed."""
     idx, q = make_plain_index()
     rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, auto_flush=False))
     h = rt.submit(0, q[0][0], now=0.0)
-    with pytest.raises(RuntimeError, match="still queued"):
-        h.result(wait=False)
+    assert h.state == "pending"
+    assert h.result(wait=False) is None         # queued: not ready, no raise
+    assert h.state == "pending"                 # ...and no side effects
     res = h.result()                            # future-style: drains
-    assert h.done() and np.asarray(res.indices).shape == (3,)
+    assert h.done() and h.state == "resolved"
+    assert np.asarray(res.indices).shape == (3,)
+    assert h.result(wait=False) is res          # resolved: wait irrelevant
+
+
+def test_handle_states_through_async_pipeline():
+    """pending -> in_flight -> resolved observable under async dispatch;
+    done() is non-blocking and barrier() retires everything."""
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=2, max_wait=100.0,
+                                           auto_flush=False, async_depth=2))
+    h1 = rt.submit(0, q[0][0], now=0.0)
+    h2 = rt.submit(1, q[1][0], now=0.0)
+    assert rt.poll(now=0.0) == [h1, h2]         # full batch: dispatched
+    assert rt.launches == 1
+    assert {h1.state, h2.state} <= {"in_flight", "resolved"}
+    assert rt.in_flight() <= 1                  # poll may have reaped it
+    rt.barrier()
+    assert rt.in_flight() == 0
+    assert h1.state == h2.state == "resolved"
+    assert h1.done() and h2.done()
+
+
+def test_async_depth_zero_is_synchronous():
+    """async_depth=0 restores the legacy contract: a launch is resolved
+    before the dispatching call returns."""
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=2, max_wait=100.0,
+                                           async_depth=0))
+    h1 = rt.submit(0, q[0][0], now=0.0)
+    h2 = rt.submit(1, q[1][0], now=0.0)         # auto_flush dispatches
+    assert h1.state == h2.state == "resolved"   # ...and retires inline
+    assert rt.in_flight() == 0 and h1.done() and h2.done()
+
+
+def test_async_backpressure_bounds_inflight_depth():
+    idx, q = make_plain_index()
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=1, max_wait=100.0,
+                                           auto_flush=False, async_depth=2))
+    handles = [rt.submit(t % 3, q[t % 3][t % 4], now=0.0) for t in range(6)]
+    rt.poll(now=1000.0)                         # 6 single-lane launches
+    assert rt.launches == 6
+    assert rt.in_flight() <= 2                  # never beyond async_depth
+    rt.barrier()
+    assert all(h.state == "resolved" for h in handles)
 
 
 def test_round_robin_fairness_no_tenant_starvation():
@@ -638,6 +694,92 @@ def test_observability_zero_compiles_and_bit_parity():
     assert reg.get("counter", "stage_bytes_hbm", stage="approx").value > 0
     # cache counters live on the SAME registry when one is supplied
     assert reg.get("counter", "cache_misses").value > 0
+
+
+# ---------------------------------------------------------------------------
+# Async pipeline parity: the deferred-bookkeeping contract
+# ---------------------------------------------------------------------------
+
+def test_async_pipeline_matches_sync_seeded_schedules():
+    """Deterministic counterpart of the hypothesis property in
+    test_runtime_properties.py (which needs hypothesis installed): under
+    seeded random submit/poll/flush schedules with mid-schedule
+    result(wait=False) probes, the async pipeline's results are
+    bit-identical to the synchronous path and it forms the same
+    launches."""
+    idx, q = make_plain_index()
+
+    def drive(depth, seed):
+        rng = np.random.default_rng(seed)
+        rt = ServingRuntime(idx, RuntimeConfig(
+            max_batch=int(rng.choice([1, 2, 4])), max_wait=1.0,
+            auto_flush=False, async_depth=depth))
+        now, handles = 0.0, []
+        for _ in range(24):
+            op = rng.integers(3)
+            if op == 0:
+                t = int(rng.integers(3))
+                handles.append(rt.submit(t, q[t][int(rng.integers(6))],
+                                         now=now, deadline=now + 5.0))
+            elif op == 1:
+                now += float(rng.uniform(0.0, 2.0))
+                rt.poll(now=now)
+                if handles:
+                    handles[-1].result(wait=False)   # non-blocking probe
+            else:
+                rt.flush()
+        rt.flush()
+        assert rt.in_flight() == 0
+        return rt.launches, [h.result() for h in handles]
+
+    for seed in range(4):
+        launches_s, res_s = drive(0, seed)
+        launches_a, res_a = drive(2, seed)
+        assert launches_a == launches_s
+        for rs, ra in zip(res_s, res_a):
+            assert jnp.array_equal(rs.indices, ra.indices)
+            assert jnp.array_equal(rs.scores, ra.scores)
+            assert jnp.array_equal(rs.candidate_indices, ra.candidate_indices)
+
+
+def test_async_cached_path_parity_and_ledgers():
+    """The slab path's DEFERRED bookkeeping (selection readback, hit/miss
+    ledger, admissions, session prior all run at retire time): results
+    are bit-identical to the synchronous cached run, and with a barrier
+    per turn the byte ledgers match it exactly too. A multi-launch flush
+    (true pipelining: launch k+1 dispatches before launch k's bookkeeping
+    ran) must still be bit-identical — only the ledgers may shift, since
+    admissions land one launch late."""
+    idx, q = make_clustered_index(seed=7)
+
+    def run(depth, max_batch):
+        rt = ServingRuntime(idx, RuntimeConfig(
+            max_batch=max_batch, cache_bytes=1 << 20, prior_clusters=8,
+            auto_flush=False, async_depth=depth))
+        outs = []
+        for turn in range(6):
+            hs = [rt.submit(t, q[t][(turn + j) % 8], now=float(turn))
+                  for t in range(4) for j in range(2)]
+            rt.flush()
+            outs.append(np.stack([np.asarray(h.result().indices)
+                                  for h in hs]))
+        stats = rt.cache_stats()
+        return (outs, rt.stage1_bytes_streamed, rt.stage1_bytes_sram,
+                stats["hits"], stats["misses"])
+
+    # one launch per flush: barrier after every launch => ledger parity
+    outs_s, hbm_s, sram_s, hits_s, miss_s = run(0, max_batch=8)
+    outs_a, hbm_a, sram_a, hits_a, miss_a = run(2, max_batch=8)
+    for a, s in zip(outs_a, outs_s):
+        assert np.array_equal(a, s)
+    assert (hbm_a, sram_a, hits_a, miss_a) == (hbm_s, sram_s, hits_s, miss_s)
+
+    # two launches per flush: the second dispatch overlaps the first
+    # launch's deferred bookkeeping — results must not move a bit
+    outs_s4, *_ = run(0, max_batch=4)
+    outs_a4, *_ = run(2, max_batch=4)
+    for a, s in zip(outs_a4, outs_s4):
+        assert np.array_equal(a, s)
 
 
 def test_handles_are_single_assignment():
