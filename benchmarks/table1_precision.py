@@ -5,13 +5,20 @@ container, so the paper's PROTOCOL is reproduced on three synthetic
 "domains" of increasing difficulty (clustered near-duplicate corpora with
 planted relevance; ground truth = the planted gold document). The paper's
 CLAIM under test is the ordering: hierarchical ~ INT8 > INT4.
+
+A fourth row extends the table one precision step further down: the
+ADAPTIVE-PRECISION FRONTIER, where the cluster-pruned cascade adds the
+1-bit sign-plane prescreen and the survivor budget C0 shrinks from the
+whole probe view to view/8 — P@1 must hold while stage-0+stage-1 bytes
+drop (2x at C0 = view/4; the byte model is gated by retrieval_bench).
 """
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (BitPlanarDB, RetrievalConfig, build_database,
-                        exact_retrieve, int4_retrieve, quantize_int8,
-                        two_stage_retrieve)
+                        clustering, exact_retrieve, int4_retrieve,
+                        quantize_int8, two_stage_retrieve)
+from repro.core.retrieval import cluster_pruned_retrieve
 from repro.data import retrieval_corpus
 
 DOMAINS = {
@@ -33,6 +40,43 @@ def p_at_k(fn, queries, gold, k=1):
     return hits / queries.shape[0]
 
 
+def _frontier_row():
+    """P@1 of the cluster-pruned cascade as the sign-prescreen budget
+    C0 shrinks: one clustered corpus, one codebook (planted centers),
+    measured at C0 = view (identity), view/4 (the 2x byte point) and
+    view/8."""
+    n, d, cs, br, nprobe, k = 2048, 256, 64, 32, 8, 5
+    docs, queries, gold = retrieval_corpus(
+        n, d, num_queries=NUM_QUERIES, noise=0.12, cluster_size=cs,
+        cluster_spread=0.2, seed=99)
+    db = BitPlanarDB.from_quantized(build_database(jnp.asarray(docs)))
+    labels = (np.arange(n) // cs).astype(np.int32)
+    nc = n // cs
+    centers = np.stack([docs[labels == c].mean(axis=0) for c in range(nc)])
+    cents, _ = quantize_int8(jnp.asarray(centers.astype(np.float32)))
+    codebook = clustering.ClusterCodebook.from_codes(cents)
+    table = clustering.block_table(labels, nc, br)
+    q, _ = quantize_int8(jnp.asarray(queries), per_vector=True)
+    view = nprobe * table.shape[1] * br
+
+    def p1(res):
+        idx = np.asarray(res.indices)
+        return float(np.mean([gold[i] in idx[i][:1]
+                              for i in range(NUM_QUERIES)]))
+
+    def cascade(c0=None):
+        return cluster_pruned_retrieve(
+            q, db, codebook, table, labels,
+            RetrievalConfig(k=k, metric="cosine", prescreen_c0=c0),
+            nprobe=nprobe, block_rows=br)
+
+    row = {"domain": "adaptive-precision frontier", "docs": n,
+           "view_rows": view, "Cascade": p1(cascade())}
+    for c0 in (view, view // 4, view // 8):
+        row[f"C0={c0}"] = p1(cascade(c0))
+    return row, view
+
+
 def run(verbose=True):
     cfg = RetrievalConfig(k=5, metric="cosine")
     rows = []
@@ -52,20 +96,31 @@ def run(verbose=True):
                                    queries, gold),
         }
         rows.append(row)
+    frontier, view = _frontier_row()
+    rows.append(frontier)
     if verbose:
         print("== Table I protocol (synthetic domains): P@1 ==")
         print(f"{'domain':>30} {'INT8':>6} {'INT4':>6} {'Hier':>6}")
-        for r in rows:
+        for r in rows[:-1]:
             print(f"{r['domain']:>30} {r['INT8']:>6.3f} {r['INT4']:>6.3f} "
                   f"{r['Hierarchical']:>6.3f}")
         print("paper (BEIR): SciFact .507/.483/.497, NFCorpus "
               ".421/.368/.412, ArguAna .253/.248/.253")
+        cols = "  ".join(f"{key} {frontier[key]:.3f}" for key in frontier
+                         if key.startswith("C0=") or key == "Cascade")
+        print(f"{frontier['domain']:>30} (view={view}): {cols}")
     checks = {}
-    for r in rows:
+    for r in rows[:-1]:
         checks[f"{r['domain']}: hier>=int4"] = (
             r["Hierarchical"] >= r["INT4"] - 1e-9)
         checks[f"{r['domain']}: hier within 0.05 of int8"] = (
             r["Hierarchical"] >= r["INT8"] - 0.05)
+    checks["frontier: C0=view P@1 identical to no-prescreen cascade"] = (
+        frontier[f"C0={view}"] == frontier["Cascade"])
+    checks["frontier: C0=view/4 P@1 >= cascade (2x byte point)"] = (
+        frontier[f"C0={view // 4}"] >= frontier["Cascade"] - 1e-9)
+    checks["frontier: C0=view/8 P@1 within 0.05 of cascade"] = (
+        frontier[f"C0={view // 8}"] >= frontier["Cascade"] - 0.05)
     return {"rows": rows, "checks": checks}
 
 

@@ -116,6 +116,69 @@ def gather_blocks(plane: jax.Array, block_ids: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Sign plane (the stage-0 prescreen's 1-bit layout)
+# ---------------------------------------------------------------------------
+
+def pack_sign_plane(codes_int8: jax.Array) -> jax.Array:
+    """(N, D) int8 -> (N, D//8) uint8 sign plane.
+
+    Bit k%8 of byte k//8 is the INT8 sign bit of dim k (1 iff the value is
+    negative) — the same dim -> (byte, bit) convention as plane 7 of
+    `pack_bitplanes`, so the sign plane IS the MSB bit-plane of the full
+    8-plane layout, stored standalone at 1 bit/dim (4x fewer bytes than
+    the MSB nibble plane). The stage-0 prescreen scores sign agreement
+    over this plane before any nibble bytes are touched.
+    """
+    n, d = codes_int8.shape
+    assert d % 8 == 0, "dimension must be a multiple of 8 for sign packing"
+    bits = (codes_int8 < 0).astype(jnp.uint8).reshape(n, d // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def sign_plane_from_msb(msb_plane: jax.Array) -> jax.Array:
+    """Derive the sign plane from a packed MSB nibble plane.
+
+    Byte j of the nibble plane packs dims (2j, 2j+1) with the 4-bit two's-
+    complement sign in bit 3 (low nibble / even dim) and bit 7 (high
+    nibble / odd dim) — and the INT4 MSB nibble's sign bit IS the INT8
+    sign bit, so the sign plane is a pure bit-extraction of the nibble
+    plane. Exactly `pack_sign_plane(reconstruct_int8(msb, lsb))` for any
+    lsb, which is what lets serving paths rebuild a combined sign plane
+    from an already-combined nibble plane instead of running a second
+    fill pipeline.
+    """
+    n, d2 = msb_plane.shape
+    assert (d2 * 2) % 8 == 0
+    lo = (msb_plane >> 3) & jnp.uint8(1)         # sign of even dims (2j)
+    hi = (msb_plane >> 7) & jnp.uint8(1)         # sign of odd dims (2j+1)
+    bits = jnp.stack([lo, hi], axis=-1).reshape(n, d2 * 2 // 8, 8)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_sign_pm1(sign_plane: jax.Array) -> jax.Array:
+    """(..., D//8) uint8 sign plane -> (..., D) int8 in {+1, -1}.
+
+    Dim k maps to ``1 - 2 * bit`` (bit set = negative value = -1), so the
+    sign-agreement score is a plain +/-1 dot product: ``sum_k sign(q_k) *
+    sign(d_k) = 2 * agreements - D`` — a monotone transform of the
+    XNOR-popcount count, computable on the MXU as an int8 matmul. A zero
+    value (and a zeroed tombstone row) unpacks to +1 on every dim.
+    """
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (sign_plane[..., :, None] >> shifts) & jnp.uint8(1)
+    bits = bits.reshape(*sign_plane.shape[:-1], sign_plane.shape[-1] * 8)
+    return (jnp.int8(1) - jnp.int8(2) * bits.astype(jnp.int8))
+
+
+def sign_pm1(codes: jax.Array) -> jax.Array:
+    """int8 codes/queries -> {+1, -1} int8 signs (0 maps to +1, matching
+    `unpack_sign_pm1` of the packed plane bit-for-bit)."""
+    return jnp.where(codes < 0, jnp.int8(-1), jnp.int8(1))
+
+
+# ---------------------------------------------------------------------------
 # Full 8-plane bit-planar layout (ASIC-faithful; used by the energy model)
 # ---------------------------------------------------------------------------
 
@@ -164,12 +227,19 @@ class BitPlanarDB:
     msb_plane, lsb_plane: (N, D//2) uint8.
     norms_sq: (N,) int64 integer squared norms of the full INT8 codes.
     scale: dequant scale (see quantization.QuantizedDB).
+    sign_plane: optional (N, D//8) uint8 1-bit sign plane for the stage-0
+    prescreen (see `pack_sign_plane`). None when the corpus was built
+    without one — the engine derives it from the MSB plane on demand, so
+    prescreen-enabled retrieval works against any DB, but maintained
+    storage (the arena) carries it explicitly so the derivation never
+    lands on the hot path.
     """
 
     msb_plane: jax.Array
     lsb_plane: jax.Array
     norms_sq: jax.Array
     scale: jax.Array
+    sign_plane: jax.Array | None = None
 
     @property
     def num_docs(self) -> int:
@@ -182,11 +252,15 @@ class BitPlanarDB:
     @classmethod
     def from_quantized(cls, db) -> "BitPlanarDB":
         msb, lsb = pack_nibble_planes(db.values)
-        return cls(msb_plane=msb, lsb_plane=lsb, norms_sq=db.norms_sq, scale=db.scale)
+        sign = (pack_sign_plane(db.values)
+                if db.values.shape[1] % 8 == 0 else None)
+        return cls(msb_plane=msb, lsb_plane=lsb, norms_sq=db.norms_sq,
+                   scale=db.scale, sign_plane=sign)
 
 
 jax.tree_util.register_pytree_node(
     BitPlanarDB,
-    lambda db: ((db.msb_plane, db.lsb_plane, db.norms_sq, db.scale), None),
+    lambda db: ((db.msb_plane, db.lsb_plane, db.norms_sq, db.scale,
+                 db.sign_plane), None),
     lambda _, leaves: BitPlanarDB(*leaves),
 )

@@ -30,6 +30,7 @@ the benefit of hierarchical retrieval can be stated for the TPU target
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 ACC_BITS = 32
@@ -181,16 +182,77 @@ def cost_cascade(stages, dim: int = 512, *, batch: int = 1,
                  cached_bits=cached_bits)
 
 
-def observe_cost(registry, cost: CostBreakdown, *, queries: int = 1) -> None:
+def cost_per_stage(stages, dim: int = 512, *, batch: int = 1,
+                   consts=PAPER_28NM,
+                   include_norms: bool = False) -> dict[str, CostBreakdown]:
+    """Price each cascade stage of a launch SEPARATELY, keyed by its
+    `plan.stages` name — no special-casing per stage kind, so a new
+    stage (e.g. the 1-bit sign prescreen) is charged and exported the
+    moment it appears in the ledger. Each stage is costed as a
+    single-stage cascade; the per-query SRAM query-load term (dim * 8
+    bits) is charged once per stage, so the stage sum exceeds the fused
+    `cost_cascade` total by (len(stages) - 1) * dim * 8 * sram pJ —
+    sub-permille, and the headline histogram keeps using the fused
+    total."""
+    return {s.name: cost_cascade((s,), dim, batch=batch, consts=consts,
+                                 include_norms=include_norms)
+            for s in stages}
+
+
+@functools.lru_cache(maxsize=64)
+def _stage_uj_coeffs(bits: int, dim: int, batch: int, consts,
+                     include_norms: bool) -> tuple:
+    """Per-stage price as LINEAR coefficients over the ledger fields.
+
+    A single-stage `cost_cascade` total is linear in (bytes_hbm,
+    bytes_sram, rows, compares); only these coefficients depend on
+    (bits, dim, batch, consts) — all stable across a serving runtime's
+    launches even when the cached path's hit/miss byte split varies
+    every turn. The hot metrics path therefore pays a cache hit plus
+    four multiply-adds per stage instead of pricing a fresh
+    CostBreakdown, which is what keeps the per-stage energy export
+    inside the observability overhead budget."""
+    b = max(1, batch)
+    per_hbm_byte = 8.0 / b * (consts.dram + 2.0 * consts.sram)
+    per_sram_byte = 8.0 / b * consts.sram
+    per_row = dim * ((2 * bits + ACC_BITS) * consts.pe
+                     + ACC_BITS * consts.simcalc)
+    if include_norms and bits == 4:
+        per_row += NORM_BITS * (consts.dram + 2.0 * consts.sram)
+    per_compare = 2.0 * ACC_BITS * consts.rerank
+    query_load = dim * 8.0 * consts.sram
+    return per_hbm_byte, per_sram_byte, per_row, per_compare, query_load
+
+
+def stage_cost_uj(stage, dim: int = 512, *, batch: int = 1,
+                  consts=PAPER_28NM, include_norms: bool = False) -> float:
+    """Fast path for `cost_per_stage(...)[name].total_uj`: same price
+    (to float round-off), no CostBreakdown construction — pinned against
+    the exact single-stage cascade by test_energy."""
+    a_hbm, a_sram, a_row, a_cmp, c0 = _stage_uj_coeffs(
+        stage.bits, dim, max(1, batch), consts, include_norms)
+    return (stage.bytes_hbm * a_hbm
+            + getattr(stage, "bytes_sram", 0) * a_sram
+            + stage.rows * a_row + stage.compares * a_cmp + c0) * 1e-6
+
+
+def observe_cost(registry, cost: CostBreakdown, *, queries: int = 1,
+                 stages=None, dim: int = 512, batch: int = 1,
+                 consts=PAPER_28NM) -> None:
     """Record a launch's priced PER-QUERY cost into a metrics registry.
 
     Feeds the serving stack's energy distributions: `energy_uj_per_query`
     is the headline µJ/query histogram (p50/p99 over the ACTUAL served
     trace, not the last launch), plus a per-module breakdown so exporter
-    output mirrors the paper's Table II columns. `queries` weights the
-    sample by the launch's real batch occupancy so trace-level medians
-    are per QUERY, not per launch. Duck-typed against
-    repro.obs.MetricsRegistry and a no-op when disabled."""
+    output mirrors the paper's Table II columns. When the launch's
+    `plan.stages` ledger is passed via `stages`, a per-STAGE breakdown
+    (`energy_uj_per_query_stage`, labelled by stage name) is exported
+    too — driven entirely by the ledger, so every stage the schedule
+    runs (prune / prescreen / approx / exact) is split out without
+    enumeration here. `queries` weights the sample by the launch's real
+    batch occupancy so trace-level medians are per QUERY, not per
+    launch. Duck-typed against repro.obs.MetricsRegistry and a no-op
+    when disabled."""
     if not getattr(registry, "enabled", False):
         return
     registry.histogram("energy_uj_per_query").observe(cost.total_uj,
@@ -200,6 +262,11 @@ def observe_cost(registry, cost: CostBreakdown, *, queries: int = 1) -> None:
                        ("rerank", cost.rerank_pj)):
         registry.histogram("energy_uj_per_query_module",
                            module=module).observe(pj * 1e-6, queries)
+    if stages:
+        for s in stages:
+            registry.histogram("energy_uj_per_query_stage",
+                               stage=s.name).observe(
+                stage_cost_uj(s, dim, batch=batch, consts=consts), queries)
 
 # ---------------------------------------------------------------------------
 # Paper-figure helpers

@@ -225,6 +225,21 @@ class SlabPolicy:
     inv_norms: jax.Array        # (N + S*br,) f32 rsqrt-norm sidecar
     nprobe: int
     block_rows: int
+    # Adaptive-precision sidecars (None when the runtime serves without a
+    # stage-0 prescreen / precision tiers — the PR 5 schedule unchanged):
+    # `sign_plane` is the combined 1-bit sign plane mirroring
+    # `slab_plane`'s geometry row for row (the cache derives it from the
+    # combined nibble plane — sign bits are a pure bit-extraction, see
+    # bitplanar.sign_plane_from_msb — so full-tier slab rows carry live
+    # sign bytes without a second fill pipeline). `block_tier` is the
+    # per-slot PRECISION sidecar: tier of every combined-space block
+    # (0 = arena plane block, 1 = sign-tier resident — sign bytes
+    # on-chip, nibble bytes still streamed from the plane, 2 = full-tier
+    # slab block — both planes cache-resident). The in-graph cascade
+    # reads `sign_plane`; `block_tier` feeds the runtime's exact
+    # per-stage hit/miss byte ledger and the bench's tier assertions.
+    sign_plane: jax.Array | None = None
+    block_tier: jax.Array | None = None
 
 
 jax.tree_util.register_pytree_node(
@@ -248,9 +263,11 @@ jax.tree_util.register_pytree_node(
     SlabPolicy,
     lambda p: ((p.packed_labels, p.tenant_ids, p.centroid_msb,
                 p.centroid_norms, p.cluster_valid, p.slab_blocks,
-                p.block_gid0, p.block_count, p.slab_plane, p.inv_norms),
+                p.block_gid0, p.block_count, p.slab_plane, p.inv_norms,
+                p.sign_plane, p.block_tier),
                (p.nprobe, p.block_rows)),
-    lambda aux, l: SlabPolicy(*l, nprobe=aux[0], block_rows=aux[1]))
+    lambda aux, l: SlabPolicy(*l[:10], nprobe=aux[0], block_rows=aux[1],
+                              sign_plane=l[10], block_tier=l[11]))
 
 
 def packed_membership(owner: jax.Array, labels: jax.Array,
@@ -336,6 +353,45 @@ def stage1_gather_resident_jnp(q_msb: jax.Array, plane: jax.Array,
     return stage1_rows_batched_jnp(q_msb, jnp.take(plane, rows, axis=0))
 
 
+def stage0_sign_plane_batched_jnp(q_sign: jax.Array,
+                                  sign_plane: jax.Array) -> jax.Array:
+    """Batched stage-0 sign-agreement scores over a shared sign plane.
+
+    q_sign (B, D) int8 in {+1, -1}; sign_plane (N, D//8) packed uint8
+    (bit k%8 of byte k//8 set == dim k negative). Returns (B, N) int32
+    ``sum_k sign(q_k) * sign(d_k)`` — affinely equivalent to the XNOR-
+    popcount agreement count (score = 2*agreement - D), so ranking by it
+    IS ranking by popcount, in exact integer arithmetic on both backends.
+    """
+    docs = bitplanar.unpack_sign_pm1(sign_plane)               # (N, D) int8
+    return similarity.int_matmul(docs, q_sign)
+
+
+def stage0_sign_gather_batched_jnp(q_sign: jax.Array, sign_plane: jax.Array,
+                                   block_ids: jax.Array, *,
+                                   block_rows: int) -> jax.Array:
+    """Block-gathered stage-0 sign scan (the prescreen's view), reference.
+
+    Same gather convention as stage1_gather_batched_jnp: rows past the
+    plane's end gather ZERO bytes, which unpack to all-(+1) rows scoring
+    ``sum_k sign(q_k)`` — identical on both backends and masked
+    downstream by membership (a sign score is never exposed unmasked).
+    """
+    gathered, _ = bitplanar.gather_blocks(sign_plane, block_ids, block_rows)
+    return similarity.int_bmm(bitplanar.unpack_sign_pm1(gathered), q_sign)
+
+
+def stage0_sign_gather_resident_jnp(q_sign: jax.Array, sign_plane: jax.Array,
+                                    block_ids: jax.Array, *,
+                                    block_rows: int) -> jax.Array:
+    """Stage-0 gather over a PRE-VALIDATED combined sign plane (slab path):
+    no clamp / zero-byte convention, mirroring stage1_gather_resident_jnp.
+    """
+    rows = bitplanar.expand_block_rows(block_ids, block_rows)
+    docs = bitplanar.unpack_sign_pm1(jnp.take(sign_plane, rows, axis=0))
+    return similarity.int_bmm(docs, q_sign)
+
+
 def stage2_rows_batched_jnp(q: jax.Array, msb_rows: jax.Array,
                             lsb_rows: jax.Array) -> jax.Array:
     """Exact INT8 rescoring of gathered per-lane candidate rows.
@@ -361,6 +417,10 @@ class StageFns:
     centroid: stage-0 codebook scoring (the codebook is a nibble plane,
               so this is the plane matmul applied to (K, D/2))
     exact:    stage-2 INT8 rescore of gathered candidates
+    sign_gather / sign_gather_resident: the 1-bit sign-plane prescreen's
+              block gathers, mirroring gather / gather_resident over the
+              packed (N, D/8) sign plane — XNOR-popcount agreement in its
+              monotone ±1-dot form
     """
 
     plane: object
@@ -369,17 +429,32 @@ class StageFns:
     gather_resident: object
     centroid: object
     exact: object
+    sign_gather: object
+    sign_gather_resident: object
 
 
 def stage_fns(backend: str) -> StageFns:
     if backend == "pallas":
         from repro.kernels import ops as kops
+
+        def _sign_gather_k(q_sign, sign_plane, block_ids, block_rows):
+            return kops.stage0_sign_scores_gather(q_sign, sign_plane,
+                                                  block_ids,
+                                                  block_rows=block_rows)
+
+        def _sign_gather_resident_k(q_sign, sign_plane, block_ids,
+                                    block_rows):
+            return kops.stage0_sign_scores_gather_resident(
+                q_sign, sign_plane, block_ids, block_rows=block_rows)
+
         return StageFns(plane=kops.stage1_scores_batched,
                         rows=kops.stage1_scores_rows,
                         gather=kops.stage1_scores_gather,
                         gather_resident=kops.stage1_scores_gather_resident,
                         centroid=kops.centroid_scores_batched,
-                        exact=kops.stage2_scores_batched)
+                        exact=kops.stage2_scores_batched,
+                        sign_gather=_sign_gather_k,
+                        sign_gather_resident=_sign_gather_resident_k)
 
     def _gather(q_msb, plane, block_ids, block_rows):
         return stage1_gather_batched_jnp(q_msb, plane, block_ids,
@@ -389,12 +464,23 @@ def stage_fns(backend: str) -> StageFns:
         return stage1_gather_resident_jnp(q_msb, plane, block_ids,
                                           block_rows=block_rows)
 
+    def _sign_gather(q_sign, sign_plane, block_ids, block_rows):
+        return stage0_sign_gather_batched_jnp(q_sign, sign_plane, block_ids,
+                                              block_rows=block_rows)
+
+    def _sign_gather_resident(q_sign, sign_plane, block_ids, block_rows):
+        return stage0_sign_gather_resident_jnp(q_sign, sign_plane,
+                                               block_ids,
+                                               block_rows=block_rows)
+
     return StageFns(plane=stage1_plane_batched_jnp,
                     rows=stage1_rows_batched_jnp,
                     gather=_gather,
                     gather_resident=_gather_resident,
                     centroid=stage1_plane_batched_jnp,
-                    exact=stage2_rows_batched_jnp)
+                    exact=stage2_rows_batched_jnp,
+                    sign_gather=_sign_gather,
+                    sign_gather_resident=_sign_gather_resident)
 
 
 # ---------------------------------------------------------------------------
@@ -441,6 +527,10 @@ class _CascadeState:
     block_ids: (B, J) clamped block ids backing `rows` when the view is a
             block gather (the scalar-prefetch kernel's operand; combined
             plane+slab space under a SlabPolicy).
+    comb_rows: (B, R) COMBINED plane+slab row ids aligned with `rows`,
+            set by the sign prescreen under a SlabPolicy (where `rows`
+            holds arena-global ids but stage 1 must keep gathering from
+            the combined array so hits stay physically on the slab).
     top_clusters: (B, nprobe) selected cluster ids when a centroid prune
             ran (the serving runtime reads this back for its cache
             ledger — selection itself stays in-graph).
@@ -450,13 +540,19 @@ class _CascadeState:
     rows: jax.Array | None = None
     member: jax.Array | None = None
     block_ids: jax.Array | None = None
+    comb_rows: jax.Array | None = None
     top_clusters: jax.Array | None = None
     result: RetrievalResult | None = None
 
 
 @dataclasses.dataclass
 class _CascadeCtx:
-    """Per-launch invariants every stage reads."""
+    """Per-launch invariants every stage reads.
+
+    q_sign is the (B, D) ±1 sign view of the query codes (0 maps to +1,
+    matching the packed sign plane's zero-byte convention) — computed
+    only when the config enables the stage-0 prescreen, else None.
+    """
 
     query_codes: jax.Array
     q_msb: jax.Array
@@ -464,6 +560,7 @@ class _CascadeCtx:
     policy: Policy
     cfg: RetrievalConfig
     fns: StageFns
+    q_sign: jax.Array | None = None
 
 
 def select_clusters(q_msb: jax.Array, policy: "ClusterPolicy | SlabPolicy",
@@ -604,6 +701,73 @@ class CentroidPrune:
 
 
 @dataclasses.dataclass(frozen=True)
+class SignPrescreen:
+    """Stage 0.5: 1-bit sign-agreement prescreen of the pruned row view.
+
+    Streams only the packed SIGN plane (D/8 bytes per row — 4x fewer
+    than the nibble plane) over the centroid prune's gathered view,
+    scores sign agreement (±1 dot == 2*popcount(XNOR) - D, monotone-
+    equivalent), and keeps each lane's top-`c0` members — so the INT4
+    ApproxScan that follows gathers C0 rows instead of the full probe
+    view. Two invariants make this safe and testable:
+
+      * survivors are re-sorted into VIEW ORDER (`jnp.sort` on the
+        selected view-local indices after top_k): the prescreen only
+        DELETES rows from the view, it never reorders it, so at
+        c0 >= view_rows the output view is the identity permutation of
+        the input and the whole cascade is bit-identical to the
+        no-prescreen schedule — the parity anchor the tests pin;
+      * non-members (holes, pads, foreign tenants, tombstones) score
+        INT32_MIN before the top_k, so with c0 >= k a lane with >= k
+        live members can never lose one to a masked row — masked rows
+        are only selected when there aren't c0 members at all, and then
+        they still carry member=False into both downstream top-ks.
+
+    Under a SlabPolicy the sign bytes stream from the COMBINED sign
+    plane (hot clusters' sign rows live on-chip next to their nibble
+    slab rows), and the surviving combined row ids are forwarded as
+    `comb_rows` so stage 1's per-row gather keeps reading hits from the
+    slab region rather than re-streaming the arena plane.
+    """
+
+    c0: int
+
+    def run(self, state: _CascadeState, ctx: _CascadeCtx) -> _CascadeState:
+        policy, cfg = ctx.policy, ctx.cfg
+        r = state.rows.shape[1]
+        c0 = cfg.prescreen_budget(r)
+        comb_rows = None
+        if isinstance(policy, SlabPolicy):
+            sign_plane = policy.sign_plane
+            if sign_plane is None:
+                # Runtime didn't pre-derive the combined sign plane:
+                # extract it from the combined nibble plane in-graph
+                # (pure bit math — identical bytes, see bitplanar).
+                sign_plane = bitplanar.sign_plane_from_msb(policy.slab_plane)
+            scores = ctx.fns.sign_gather_resident(
+                ctx.q_sign, sign_plane, state.block_ids,
+                block_rows=policy.block_rows)
+            comb_rows = bitplanar.expand_block_rows(state.block_ids,
+                                                    policy.block_rows)
+        else:
+            sign_plane = ctx.db.sign_plane
+            if sign_plane is None:
+                sign_plane = bitplanar.sign_plane_from_msb(ctx.db.msb_plane)
+            scores = ctx.fns.sign_gather(ctx.q_sign, sign_plane,
+                                         state.block_ids,
+                                         block_rows=policy.block_rows)
+        key0 = jnp.where(state.member, scores, INT32_MIN)
+        _, sel = jax.lax.top_k(key0, c0)                       # (B, C0)
+        sel = jnp.sort(sel, axis=1)      # survivors keep view order
+        rows = jnp.take_along_axis(state.rows, sel, axis=1)
+        member = jnp.take_along_axis(state.member, sel, axis=1)
+        if comb_rows is not None:
+            comb_rows = jnp.take_along_axis(comb_rows, sel, axis=1)
+        return dataclasses.replace(state, rows=rows, member=member,
+                                   block_ids=None, comb_rows=comb_rows)
+
+
+@dataclasses.dataclass(frozen=True)
 class ApproxScan:
     """Stage 1: batched INT4 MSB scan over the surviving row view, then
     per-lane candidate top-C (the approximate-retrieval stage)."""
@@ -629,12 +793,24 @@ class ApproxScan:
                 raise ValueError(f"slab view holds {r} rows < k="
                                  f"{cfg.k}: raise nprobe or block_rows")
             c = _candidate_budget(cfg, n, r)
-            scores = ctx.fns.gather_resident(ctx.q_msb, policy.slab_plane,
-                                             state.block_ids,
-                                             block_rows=policy.block_rows)
-            if cfg.metric == "cosine":
+            if state.block_ids is not None:
+                scores = ctx.fns.gather_resident(
+                    ctx.q_msb, policy.slab_plane, state.block_ids,
+                    block_rows=policy.block_rows)
                 comb_rows = bitplanar.expand_block_rows(state.block_ids,
                                                         policy.block_rows)
+            else:
+                # Prescreened view: survivors arrive as combined-space
+                # row ids — gather their nibble rows by ROW from the
+                # combined array (hot clusters' survivors still read the
+                # slab region, cold survivors the plane) and score with
+                # the per-lane rows primitive. Same plane bytes as the
+                # block gather at the surviving positions, so the
+                # c0 >= view_rows anchor stays bit-identical.
+                comb_rows = state.comb_rows
+                msb_rows = jnp.take(policy.slab_plane, comb_rows, axis=0)
+                scores = ctx.fns.rows(ctx.q_msb, msb_rows)
+            if cfg.metric == "cosine":
                 key1 = (scores.astype(jnp.float32)
                         * jnp.take(policy.inv_norms, comb_rows, axis=0)
                         + 0.0)
@@ -680,9 +856,19 @@ class ApproxScan:
                 raise ValueError(f"gathered view holds {r} rows < k="
                                  f"{cfg.k}: raise nprobe or block_rows")
             c = _candidate_budget(cfg, n, r)
-            scores = ctx.fns.gather(ctx.q_msb, db.msb_plane,
-                                    state.block_ids,
-                                    block_rows=policy.block_rows)
+            if state.block_ids is not None:
+                scores = ctx.fns.gather(ctx.q_msb, db.msb_plane,
+                                        state.block_ids,
+                                        block_rows=policy.block_rows)
+            else:
+                # Prescreened cluster view: survivors are global row ids
+                # (-1 holes clamp to row 0 and ride the member mask; the
+                # raw score at a masked position may differ from the
+                # block-gather path's zero-row convention — the masked
+                # KEY below is identical, which is what parity pins).
+                msb_rows = jnp.take(db.msb_plane,
+                                    jnp.maximum(state.rows, 0), axis=0)
+                scores = ctx.fns.rows(ctx.q_msb, msb_rows)
             norms = jnp.take(db.norms_sq, jnp.maximum(state.rows, 0),
                              axis=0)
             base = None
@@ -774,7 +960,12 @@ def cascade_stages(policy: Policy, cfg: RetrievalConfig) -> tuple:
     pre-prune between prune and scan) slot in here.
     """
     if isinstance(policy, (ClusterPolicy, SlabPolicy)):
-        return (CentroidPrune(policy.nprobe), ApproxScan(), ExactRescore())
+        head: tuple = (CentroidPrune(policy.nprobe),)
+        if cfg.prescreen_c0 is not None:
+            # The adaptive-precision cascade: a 1-bit sign-plane
+            # prescreen thins the pruned view before the INT4 scan.
+            head += (SignPrescreen(cfg.prescreen_c0),)
+        return head + (ApproxScan(), ExactRescore())
     # ViewPolicy enters at ApproxScan: its prune already ran host-side
     # and the view arrives as data.
     return (ApproxScan(), ExactRescore())
@@ -782,10 +973,12 @@ def cascade_stages(policy: Policy, cfg: RetrievalConfig) -> tuple:
 
 def _run_cascade(query_codes: jax.Array, db: bitplanar.BitPlanarDB,
                  policy: Policy, cfg: RetrievalConfig) -> _CascadeState:
+    q_sign = (bitplanar.sign_pm1(query_codes)
+              if cfg.prescreen_c0 is not None else None)
     ctx = _CascadeCtx(query_codes=query_codes,
                       q_msb=quantization.msb_nibble(query_codes),
                       db=db, policy=policy, cfg=cfg,
-                      fns=stage_fns(cfg.backend))
+                      fns=stage_fns(cfg.backend), q_sign=q_sign)
     state = _CascadeState()
     for stage in cascade_stages(policy, cfg):
         state = stage.run(state, ctx)
@@ -930,6 +1123,17 @@ def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
         stages = (StagePlan(name="prune", rows=num_clusters, bits=4,
                             bytes_hbm=num_clusters * d2,
                             compares=num_clusters),)
+        c0 = cfg.prescreen_budget(view_rows)
+        if c0 is not None:
+            # Stage-0 sign prescreen: streams the 1-bit sign plane over
+            # the whole probe view (D/8 bytes/row, per lane), then the
+            # INT4 approx stage gathers only the C0 survivors.
+            stages += (StagePlan(name="prescreen", rows=view_rows, bits=1,
+                                 bytes_hbm=batch * view_rows * (dim // 8),
+                                 compares=view_rows),)
+            rows = c0
+            s1 = batch * c0 * d2
+            c = _candidate_budget(cfg, num_docs, c0)
     elif kind == "view":
         # A materialized per-lane view (the runtime's cache path): same
         # stage-1 geometry as "cluster" but the prune ran host-side.
@@ -960,7 +1164,9 @@ def plan(cfg: RetrievalConfig, *, num_docs: int, dim: int, batch: int,
 
 
 def cache_split_plan(base: SchedulePlan, *, hbm_bytes: int,
-                     sram_bytes: int) -> SchedulePlan:
+                     sram_bytes: int,
+                     prescreen_hbm: int | None = None,
+                     prescreen_sram: int = 0) -> SchedulePlan:
     """Re-ledger a launch's approx stage for hot-cluster-cache service.
 
     The analytic plan charges the whole stage-1 view to HBM; when the
@@ -968,11 +1174,19 @@ def cache_split_plan(base: SchedulePlan, *, hbm_bytes: int,
     the MEASURED split is hbm_bytes (missed clusters, freshly streamed)
     vs sram_bytes (hits, served from on-chip cache). MAC/compare counts
     are untouched — the cache changes where bytes come from, not how many
-    rows are scored."""
-    stages = tuple(
-        dataclasses.replace(s, bytes_hbm=hbm_bytes, bytes_sram=sram_bytes)
-        if s.name == "approx" else s
-        for s in base.stages)
+    rows are scored. With the sign prescreen enabled the runtime also
+    measures the stage-0 split (`prescreen_hbm`/`prescreen_sram` — sign
+    bytes of resident clusters, any tier, serve on-chip); None leaves the
+    analytic prescreen ledger untouched."""
+    def _rewrite(s: StagePlan) -> StagePlan:
+        if s.name == "approx":
+            return dataclasses.replace(s, bytes_hbm=hbm_bytes,
+                                       bytes_sram=sram_bytes)
+        if s.name == "prescreen" and prescreen_hbm is not None:
+            return dataclasses.replace(s, bytes_hbm=prescreen_hbm,
+                                       bytes_sram=prescreen_sram)
+        return s
+    stages = tuple(_rewrite(s) for s in base.stages)
     return dataclasses.replace(base, stages=stages, stage1_bytes=hbm_bytes,
                                stage1_bytes_sram=sram_bytes)
 

@@ -39,10 +39,26 @@ class RetrievalConfig:
     max_candidates: int = 50
     candidate_frac: float = 0.2
     backend: Literal["jnp", "pallas"] = "jnp"
+    # Stage-0 sign-plane prescreen budget: the cluster-pruned cascade
+    # inserts a 1-bit sign-agreement scan between the centroid prune and
+    # the INT4 scan, keeping only the top-C0 view rows per lane (clamped
+    # to [k, view rows]) so stage 1 gathers C0 rows instead of the whole
+    # probed view. None (the default) disables the stage entirely —
+    # cascades, plans and golden pins are bit-for-bit the pre-prescreen
+    # behavior. Ignored by policies without a centroid prune.
+    prescreen_c0: int | None = None
 
     def num_candidates(self, num_docs: int) -> int:
         return max(self.k, min(self.max_candidates,
                                math.ceil(self.candidate_frac * num_docs)))
+
+    def prescreen_budget(self, view_rows: int) -> int | None:
+        """The effective stage-0 survivor count for a `view_rows`-row
+        probed view (None when the prescreen is disabled) — the single
+        clamp both the SignPrescreen stage and the analytic plan use."""
+        if self.prescreen_c0 is None:
+            return None
+        return max(self.k, min(self.prescreen_c0, view_rows))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -41,13 +41,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import fused_topk as _fk
+from repro.kernels import stage0_sign as _s0
 from repro.kernels import stage1_int4 as _s1
 
 SCHEMA_VERSION = 1
 
 #: Kernels with a free block knob. Keyed by the name used in table entries;
 #: values are the ops.py wrapper each one feeds.
-KERNELS = ("stage1_single", "stage1_batched", "stage1_rows", "fused_topk")
+KERNELS = ("stage1_single", "stage1_batched", "stage1_rows", "fused_topk",
+           "stage0_sign")
 
 DEFAULT_CANDIDATES = (128, 256, 512, 1024, 2048)
 DEFAULT_BATCHES = (1, 8, 32)
@@ -254,6 +256,15 @@ def _runner(kernel: str, rng: np.random.Generator, *, n: int, d: int,
                 q0, plane, c=c, k_per_block=c, block_n=bn)), n
         return (lambda bn: lambda: ops.fused_candidates_batched(
             q, plane, c=c, k_per_block=c, block_n=bn)), n
+    if kernel == "stage0_sign":
+        # 1-bit prescreen: packed sign plane + pre-unpacked {+1,-1} queries
+        if d % 8:
+            return None, 0
+        sign_plane = jnp.asarray(rng.integers(0, 256, size=(n, d // 8),
+                                              dtype=np.int64).astype(np.uint8))
+        q_sign = ops.pack_query_signs(q)
+        return (lambda bn: lambda: ops.stage0_sign_scores_batched(
+            q_sign, sign_plane, block_n=bn)), n
     raise ValueError(f"unknown kernel {kernel!r}")
 
 
@@ -276,8 +287,9 @@ def autotune(*, n: int = 2048, d: int = 256,
                             "default_block_n": _s1.DEFAULT_BLOCK_N,
                             "fused_default_block_n": _fk.DEFAULT_BLOCK_N})
     for kernel in kernels:
-        default = (_fk.DEFAULT_BLOCK_N if kernel == "fused_topk"
-                   else _s1.DEFAULT_BLOCK_N)
+        default = {"fused_topk": _fk.DEFAULT_BLOCK_N,
+                   "stage0_sign": _s0.DEFAULT_BLOCK_N}.get(
+                       kernel, _s1.DEFAULT_BLOCK_N)
         for batch in batches:
             make, max_block = _runner(kernel, rng, n=n, d=d, batch=batch)
             if make is None:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import autotune as _at
 from repro.kernels import fused_topk as _fk
+from repro.kernels import stage0_sign as _s0
 from repro.kernels import stage1_gather as _sg
 from repro.kernels import stage1_int4 as _s1
 from repro.kernels import stage2_int8 as _s2
@@ -45,6 +46,15 @@ def pack_query_panel(q: jax.Array) -> jax.Array:
     """(B, D) int8 -> (2, B, D//2) int8 batch panels ([even dims; odd dims])
     — the stationary operand of the batched stage-1 matmul kernel."""
     return jnp.stack([q[:, 0::2], q[:, 1::2]]).astype(jnp.int8)
+
+
+def pack_query_signs(q: jax.Array) -> jax.Array:
+    """(B, D) int8 -> (B, D) int8 in {+1, -1} — the stage-0 kernels'
+    stationary query operand (kept dense: it is tiny, and pre-unpacking
+    it sidesteps a second in-kernel bit unpack). Zero maps to +1,
+    matching `bitplanar.unpack_sign_pm1` of the packed doc plane."""
+    from repro.core.bitplanar import sign_pm1
+    return sign_pm1(q)
 
 
 def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
@@ -204,6 +214,68 @@ def stage1_scores_gather_resident(q_msb: jax.Array, plane: jax.Array,
                          f"{n} rows with block_rows={block_rows}")
     q_eo = pack_queries_even_odd(q_msb)
     return _sg.stage1_int4_gather_pallas(q_eo, plane, block_ids,
+                                         block_rows=block_rows,
+                                         interpret=_interpret())
+
+
+def stage0_sign_scores_batched(q_sign: jax.Array, sign_plane: jax.Array,
+                               block_n: int | None = None) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage0_sign_plane_batched_jnp.
+
+    q_sign: (B, D) int8 in {+1, -1} (pack_query_signs); sign_plane:
+    (N, D//8) packed uint8. Returns (B, N) int32 sign-agreement scores.
+    ONE launch; each sign block streams from HBM once per BATCH.
+    block_n None -> the installed autotune table's choice for this batch
+    bucket ("stage0_sign" family, default 1024)."""
+    if block_n is None:
+        block_n = _at.lookup("stage0_sign", q_sign.shape[0],
+                             _s0.DEFAULT_BLOCK_N)
+    return _stage0_sign_scores_batched_jit(q_sign, sign_plane, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def _stage0_sign_scores_batched_jit(q_sign: jax.Array, sign_plane: jax.Array,
+                                    block_n: int) -> jax.Array:
+    n = sign_plane.shape[0]
+    block_n = min(block_n, max(8, n))
+    plane = _pad_rows(sign_plane, block_n)
+    out = _s0.stage0_sign_batched_pallas(q_sign, plane, block_n=block_n,
+                                         interpret=_interpret())
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def stage0_sign_scores_gather(q_sign: jax.Array, sign_plane: jax.Array,
+                              block_ids: jax.Array, *,
+                              block_rows: int = _sg.DEFAULT_BLOCK_ROWS
+                              ) -> jax.Array:
+    """Kernel-backed drop-in for engine.stage0_sign_gather_batched_jnp.
+
+    q_sign: (B, D) int8 {+1, -1}; sign_plane: (N, D//8) packed uint8;
+    block_ids: (B, J) int32 clamped block ids — the SAME table the
+    stage-1 gather consumes. Returns (B, J * block_rows) int32. The
+    plane is zero-padded to a block multiple here (a no-op for arenas
+    sized to a block multiple); zero bytes unpack to all-+1 rows on both
+    backends and are masked downstream."""
+    plane = _pad_rows(sign_plane, block_rows)
+    return _s0.stage0_sign_gather_pallas(q_sign, plane, block_ids,
+                                         block_rows=block_rows,
+                                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def stage0_sign_scores_gather_resident(q_sign: jax.Array, plane: jax.Array,
+                                       block_ids: jax.Array, *,
+                                       block_rows: int = _sg.DEFAULT_BLOCK_ROWS
+                                       ) -> jax.Array:
+    """The stage-0 gather over a RESIDENT, pre-validated combined sign
+    plane (the slab path) — same contract as
+    stage1_scores_gather_resident, one plane-width narrower."""
+    n = plane.shape[0]
+    if n % block_rows:
+        raise ValueError(f"resident sign plane must be a block multiple, "
+                         f"got {n} rows with block_rows={block_rows}")
+    return _s0.stage0_sign_gather_pallas(q_sign, plane, block_ids,
                                          block_rows=block_rows,
                                          interpret=_interpret())
 

@@ -107,6 +107,49 @@ def stage1_gather_resident_ref(q_eo: jax.Array, plane: jax.Array,
                       for i in range(block_ids.shape[0])])
 
 
+def stage0_sign_batched_ref(q_sign: jax.Array,
+                            sign_plane: jax.Array) -> jax.Array:
+    """Oracle for the batched stage-0 sign-agreement kernel.
+
+    q_sign: (B, D) int8 in {+1, -1}; sign_plane: (N, D//8) packed uint8.
+    Returns (B, N) int32 scores ``sum_k sign(q_k) * sign(d_k)`` — the
+    monotone-equivalent form of the XNOR-popcount agreement count."""
+    from repro.core.bitplanar import unpack_sign_pm1
+    docs = unpack_sign_pm1(sign_plane).astype(jnp.int32)      # (N, D)
+    return q_sign.astype(jnp.int32) @ docs.T
+
+
+def stage0_sign_gather_ref(q_sign: jax.Array, sign_plane: jax.Array,
+                           block_ids: jax.Array,
+                           block_rows: int) -> jax.Array:
+    """Oracle for the block-gathered stage-0 kernel.
+
+    q_sign: (B, D) int8 {+1, -1}; sign_plane: (N, D//8); block_ids:
+    (B, J) int32 clamped block ids. Returns (B, J * block_rows) int32.
+    Rows past the plane's end gather ZERO BYTES (bitplanar.gather_blocks,
+    shared with the kernel's zero-padded plane), which unpack to all-+1
+    rows scoring ``sum_k sign(q_k)`` — identical on both backends and
+    masked downstream by membership."""
+    from repro.core.bitplanar import gather_blocks, unpack_sign_pm1
+    gathered, _ = gather_blocks(sign_plane, block_ids, block_rows)
+    docs = unpack_sign_pm1(gathered).astype(jnp.int32)        # (B, R, D)
+    return jnp.einsum("bd,brd->br", q_sign.astype(jnp.int32), docs)
+
+
+def stage0_sign_gather_resident_ref(q_sign: jax.Array, sign_plane: jax.Array,
+                                    block_ids: jax.Array,
+                                    block_rows: int) -> jax.Array:
+    """Oracle for the stage-0 gather over a RESIDENT pre-validated sign
+    plane (the serving runtime's combined plane+slab sign array — every
+    block id live, plane a whole number of blocks, no clamp/zero-byte
+    convention: pure gather + sign dot)."""
+    from repro.core.bitplanar import expand_block_rows, unpack_sign_pm1
+    rows = expand_block_rows(block_ids, block_rows)
+    docs = unpack_sign_pm1(jnp.take(sign_plane, rows, axis=0))
+    return jnp.einsum("bd,brd->br", q_sign.astype(jnp.int32),
+                      docs.astype(jnp.int32))
+
+
 def stage2_scores_batched_ref(q_eo8: jax.Array, msb_rows: jax.Array,
                               lsb_rows: jax.Array) -> jax.Array:
     """Oracle for the batched stage-2 rescoring kernel.

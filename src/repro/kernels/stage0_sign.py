@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: stage-0 sign-plane (1-bit) prescreen, query-stationary.
+
+The adaptive-precision cascade's cheapest stage: score sign AGREEMENT over
+the packed 1-bit sign plane (`bitplanar.pack_sign_plane` — 8 dims/byte,
+4x fewer HBM bytes than the stage-1 MSB nibble plane) and keep only the
+top-C0 survivors per lane for the INT4 scan. The classical formulation is
+an XNOR + popcount; on the MXU the monotone-equivalent form is cheaper:
+
+    agreement-score = sum_k sign(q_k) * sign(d_k) = 2 * agreements - D
+
+so the kernel unpacks each packed doc byte to eight {+1, -1} int8 lanes
+in-register (bit set = negative = -1, `bitplanar.unpack_sign_pm1`'s
+convention) and runs a plain int8 x int8 -> int32 dot on the MXU. The
+query operand arrives PRE-UNPACKED as (B, D) {+1, -1} int8 (`ops.
+pack_query_signs`): it is tiny, stays pinned in VMEM across the whole
+grid (query-stationary, exactly like the stage-1 kernels), and keeping it
+dense sidesteps a second in-kernel unpack.
+
+Two variants mirror the stage-1 pair:
+
+  * `stage0_sign_batched_pallas` — dense batched matmul over the whole
+    plane, grid (num_blocks,), doc sign blocks streamed HBM->VMEM once
+    per BATCH (the shape `stage1_int4_batched_pallas` uses);
+  * `stage0_sign_gather_pallas` — scalar-prefetch block gather driven by
+    the SAME per-lane block-id table as the stage-1 gather (the cluster
+    prune's output), so only selected clusters' sign blocks ever stream.
+
+Zero bytes (the plane's padding rows and tombstoned rows) unpack to all
++1 dims and score ``sum_k sign(q_k)`` — NOT zero. That is the shared
+convention with the jnp reference (`bitplanar.gather_blocks` zeroes the
+BYTES, both backends unpack them identically), and every such row is
+masked out downstream by the membership mask before any top-k.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Same fallback block shape as the stage-1 kernels: a sign block is 4x
+# fewer bytes at equal rows, so 1024 rows x D/8 bytes is comfortably
+# VMEM-resident; the measured autotuner ("stage0_sign" family) owns the
+# per-device choice.
+DEFAULT_BLOCK_N = 1024
+
+
+def unpack_block_pm1(block_u8: jax.Array) -> jax.Array:
+    """(BN, D8) packed uint8 -> (BN, D8*8) int8 in {+1, -1}, in-kernel.
+
+    Dim k = 8 * (k // 8) + k % 8 (byte-major then bit), matching
+    `bitplanar.pack_sign_plane`. Shift counts use a 2D+ broadcasted iota
+    (TPU Pallas disallows 1D iota)."""
+    bn, d8 = block_u8.shape
+    shifts = jax.lax.broadcasted_iota(jnp.int32, (1, 1, 8), 2)
+    bits = (block_u8[:, :, None].astype(jnp.int32) >> shifts) & 1
+    return (1 - 2 * bits).astype(jnp.int8).reshape(bn, d8 * 8)
+
+
+def _stage0_batched_kernel(q_ref, plane_ref, out_ref):
+    """q_ref: (B, D) int8 {+1,-1} pinned; plane_ref: (BN, D8) uint8 packed
+    sign bytes; out: (B, BN). True matmul — each doc sign block is
+    unpacked (and fetched from HBM) once per BATCH."""
+    docs = unpack_block_pm1(plane_ref[...])
+    dn = (((1,), (1,)), ((), ()))
+    out_ref[...] = jax.lax.dot_general(q_ref[...], docs, dn,
+                                       preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def stage0_sign_batched_pallas(q_sign: jax.Array, sign_plane: jax.Array, *,
+                               block_n: int = DEFAULT_BLOCK_N,
+                               interpret: bool = True) -> jax.Array:
+    """Batch-native stage 0: q_sign (B, D) int8 in {+1, -1}, sign_plane
+    (N, D//8) uint8 packed sign bits, N % block_n == 0. Returns (B, N)
+    int32 sign-agreement scores (2 * agreements - D). The query panel is
+    grid-invariant (stationary in VMEM); every sign block streams
+    HBM->VMEM exactly once for the whole batch."""
+    n, d8 = sign_plane.shape
+    b = q_sign.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    out = pl.pallas_call(
+        _stage0_batched_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((b, d8 * 8), lambda i: (0, 0)),    # queries: pinned
+            pl.BlockSpec((block_n, d8), lambda i: (i, 0)),  # docs: streamed
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )(q_sign, sign_plane)
+    return out
+
+
+def _stage0_gather_kernel(ids_ref, q_ref, plane_ref, out_ref):
+    """ids_ref: (B, J) int32 prefetched block ids (consumed by the
+    BlockSpec index_maps); q_ref: (1, D) int8 lane signs; plane_ref:
+    (BR, D8) uint8 — the sign block the index_map selected; out:
+    (1, 1, BR)."""
+    del ids_ref  # only read by the BlockSpec index_maps
+    docs = unpack_block_pm1(plane_ref[...])
+    dn = (((1,), (0,)), ((), ()))
+    s = jax.lax.dot_general(docs, q_ref[0], dn,
+                            preferred_element_type=jnp.int32)
+    out_ref[0, 0, :] = s
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def stage0_sign_gather_pallas(q_sign: jax.Array, sign_plane: jax.Array,
+                              block_ids: jax.Array, *,
+                              block_rows: int,
+                              interpret: bool = True) -> jax.Array:
+    """Block-gathered stage 0: q_sign (B, D) int8 in {+1, -1}; sign_plane
+    (N, D//8) uint8 with N % block_rows == 0 (zero-padded); block_ids
+    (B, J) int32 ids in [0, N / block_rows) — the SAME clamped per-lane
+    table the stage-1 gather consumes, so the prescreen's view geometry
+    can never drift from the scan it is pruning. Returns (B, J *
+    block_rows) int32 sign-agreement scores in block-table order. ONE
+    launch, grid (B, J), scalar-prefetched ids: only selected blocks
+    ever stream from HBM."""
+    n, d8 = sign_plane.shape
+    b, j = block_ids.shape
+    assert n % block_rows == 0, (n, block_rows)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, j),
+        in_specs=[
+            pl.BlockSpec((1, d8 * 8), lambda i, jj, ids: (i, 0)),
+            pl.BlockSpec((block_rows, d8),
+                         lambda i, jj, ids: (ids[i, jj], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_rows),
+                               lambda i, jj, ids: (i, 0, jj)),
+    )
+    out = pl.pallas_call(
+        _stage0_gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, j * block_rows), jnp.int32),
+        interpret=interpret,
+    )(block_ids, q_sign, sign_plane)
+    return out[:, 0, :]

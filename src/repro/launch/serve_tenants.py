@@ -57,6 +57,18 @@ def main(argv=None):
                     help="hot-cluster cache budget in KiB — the size of "
                          "the device-resident slab carved next to the "
                          "arena plane (0 = off; needs --clusters)")
+    ap.add_argument("--prescreen-c0", type=int, default=0,
+                    help="1-bit sign-plane stage-0 prescreen: keep this "
+                         "many survivor rows per lane before the nibble "
+                         "gather (0 = off; needs --clusters). Cuts "
+                         "stage-0+1 bytes by 4V/(V+4*C0) for a V-row "
+                         "probe view")
+    ap.add_argument("--precision-tiers", action="store_true",
+                    help="per-cluster precision tiers in the hot-cluster "
+                         "cache: cold clusters are admitted at the 1-bit "
+                         "SIGN tier (sign bytes only, no slab rows) and "
+                         "promoted to the full nibble slab on re-probe; "
+                         "needs --cache-kb")
     ap.add_argument("--no-preload", action="store_true",
                     help="disable the EdgeRAG-style hot preload (pin a "
                          "session's clusters into the slab when the "
@@ -100,6 +112,13 @@ def main(argv=None):
         ap.error("--cache-kb caches CLUSTER views: it needs --clusters > 0 "
                  "(without clustering every flush scans windows/masks and "
                  "the cache would silently never be consulted)")
+    if args.prescreen_c0 and not args.clusters:
+        ap.error("--prescreen-c0 gates the CASCADE's nibble gather: it "
+                 "needs --clusters > 0 (the two-stage full scan has no "
+                 "stage-0)")
+    if args.precision_tiers and not args.cache_kb:
+        ap.error("--precision-tiers tiers the hot-cluster cache: it needs "
+                 "--cache-kb > 0")
 
     rng = np.random.default_rng(args.seed)
     _maybe_autotune(args)
@@ -115,7 +134,9 @@ def main(argv=None):
     pipe = MultiTenantRAGPipeline.create(
         ecfg, eparams, gen_api, gen_params, capacity=args.capacity,
         doc_len=args.doc_len,
-        retrieval_cfg=RetrievalConfig(k=args.topk, metric="cosine"),
+        retrieval_cfg=RetrievalConfig(k=args.topk, metric="cosine",
+                                      prescreen_c0=(args.prescreen_c0
+                                                    or None)),
         clusters=(ClusterParams(num_clusters=args.clusters,
                                 nprobe=args.nprobe, block_rows=32)
                   if args.clusters else None))
@@ -129,7 +150,8 @@ def main(argv=None):
         max_batch=args.batch, max_wait=args.max_wait_ms / 1e3,
         cache_bytes=args.cache_kb * 1024,
         preload=args.cache_kb > 0 and not args.no_preload,
-        auto_flush=False, async_depth=args.async_depth),
+        auto_flush=False, async_depth=args.async_depth,
+        precision_tiers=args.precision_tiers),
         registry=registry, tracer=tracer)
 
     docs_of: dict[int, list[tuple[int, np.ndarray]]] = {
@@ -201,6 +223,11 @@ def main(argv=None):
               f"hits, {runtime.stage1_bytes_sram:,}/{max(served, 1):,} "
               f"stage-1 bytes from cache "
               f"({cs['stale_evictions']} stale evictions)")
+        if args.precision_tiers:
+            print(f"[cache ] precision tiers: {cs['demotions']} demotions "
+                  f"-> SIGN, {cs['promotions']} promotions -> FULL, "
+                  f"resident full/sign {cs['full_entries']}/"
+                  f"{cs['sign_entries']}")
     # Per-query energy from the ACTUAL served trace: every launch priced
     # its measured SchedulePlan into the registry's µJ/query histogram
     # (weighted by real batch occupancy), so the medians below describe
@@ -212,6 +239,20 @@ def main(argv=None):
         ep = ehist.percentiles((50, 99))
         print(f"[energy] {ep['p50']:.2f} uJ/query median "
               f"(p99 {ep['p99']:.2f}, {ehist.count} queries served)")
+        # Stage split (from the per-stage ledger histogram): how much of
+        # each query went to the 1-bit stage-0 prescreen vs the nibble
+        # stage-1 gather it gates.
+        s0 = registry.get("histogram", "energy_uj_per_query_stage",
+                          stage="prescreen")
+        s1 = registry.get("histogram", "energy_uj_per_query_stage",
+                          stage="approx")
+        if s0 is not None and s0.count and s1 is not None and s1.count:
+            m0 = s0.percentiles((50,))["p50"]
+            m1 = s1.percentiles((50,))["p50"]
+            print(f"[energy] stage-0 sign prescreen {m0:.3f} uJ/query vs "
+                  f"stage-1 nibble gather {m1:.3f} uJ/query (medians; "
+                  f"the 1-bit pass costs {m0 / max(m1, 1e-12):.1%} of the "
+                  f"stage it gates)")
     else:
         ledger = energy.cost_hierarchical(pipe.index.capacity,
                                           ecfg.pooled_dim)
@@ -353,6 +394,14 @@ def _obs_report(args, registry, tracer) -> None:
         pc = h.percentiles((50, 95, 99))
         rows.append((label, h.count, pc["p50"] * scale, pc["p95"] * scale,
                      pc["p99"] * scale, unit))
+    for stage, label in (("prescreen", "energy stage-0"),
+                         ("approx", "energy stage-1")):
+        h = registry.get("histogram", "energy_uj_per_query_stage",
+                         stage=stage)
+        if h is None or not h.count:
+            continue
+        pc = h.percentiles((50, 95, 99))
+        rows.append((label, h.count, pc["p50"], pc["p95"], pc["p99"], "uJ"))
     if rows:
         print(f"[obs   ] {'metric':<16} {'count':>7} {'p50':>9} "
               f"{'p95':>9} {'p99':>9}")

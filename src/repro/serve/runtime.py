@@ -83,7 +83,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, engine
+from repro.core import bitplanar, energy, engine
 from repro.core.retrieval import NO_TENANT, RetrievalResult
 from repro.obs.metrics import MetricsRegistry, NULL_REGISTRY
 from repro.obs.tracing import NULL_TRACER
@@ -120,6 +120,16 @@ class RuntimeConfig:
         dispatches batch k+1 while the device scores batch k. 0 restores
         the legacy synchronous contract — every launch is resolved
         before `_launch` returns (the open-loop bench's baseline).
+    precision_tiers: per-cluster ADAPTIVE PRECISION in the hot-cluster
+        cache (the stage-0 prescreen's serving-side half). Hot clusters
+        stay FULL tier (nibble plane rows slab-resident, stage-1 hits
+        serve on-chip); under slot/byte pressure the LRU full entry is
+        DEMOTED to the sign tier — its slab slots are freed but its
+        1-bit sign bytes stay charged to the budget (stage-0 still
+        serves on-chip; stage-1 re-streams the plane) — and cold misses
+        are admitted at the sign tier first, promoted back to full on a
+        re-probe. False (default) is the PR 5 cache unchanged: every
+        entry full-tier, eviction drops entries outright.
     """
 
     max_batch: int = 16
@@ -130,6 +140,7 @@ class RuntimeConfig:
     preload: bool = False
     auto_flush: bool = True
     async_depth: int = 2
+    precision_tiers: bool = False
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -146,6 +157,10 @@ class RuntimeConfig:
             raise ValueError("preload=True pins clusters into the "
                              "hot-cluster cache slab: it needs a "
                              "cache_bytes budget > 0")
+        if self.precision_tiers and self.cache_bytes == 0:
+            raise ValueError("precision_tiers=True tiers the hot-cluster "
+                             "cache's entries: it needs a cache_bytes "
+                             "budget > 0")
 
 
 class RequestHandle:
@@ -264,11 +279,26 @@ class _InFlight:
         return True if probe is None else bool(probe())
 
 
+# Per-cluster precision tiers (the adaptive-precision cascade's
+# serving-side half). A combined block belongs to exactly one tier:
+TIER_PLANE = 0   # arena plane block (not cache-managed)
+TIER_SIGN = 1    # resident at 1-bit precision: only the cluster's sign
+#                  bytes are budget-charged; stage-0 serves on-chip,
+#                  stage-1 re-streams the nibble plane from HBM
+TIER_FULL = 2    # resident at full nibble precision: slab slots hold the
+#                  4-bit msb rows; stage-0 AND stage-1 serve on-chip
+
+
 @dataclasses.dataclass
 class _SlabEntry:
     slab_blocks: np.ndarray       # (nblk,) int32 slab-region block ids
     n_rows: int                   # live rows packed into those blocks
-    nbytes: int                   # nblk * block_rows * bytes_per_row
+    nbytes: int                   # budget charge: nblk*block_rows*
+    #                               bytes_per_row (full tier) or the
+    #                               cluster's 1-bit sign bytes (sign tier)
+    tier: int = TIER_FULL         # TIER_SIGN or TIER_FULL
+    plane_blocks: np.ndarray | None = None  # the cluster's plane block
+    #                               ids (sign-tier routing + tier sidecar)
 
 
 def _pow2(n: int) -> int:
@@ -299,6 +329,14 @@ def _apply_fills(plane, inv_norms, block_gid0, block_count,
 @functools.partial(jax.jit, static_argnames=("num_clusters",))
 def _packed_sidecar(owner, labels, *, num_clusters):
     return engine.packed_membership(owner, labels, num_clusters)
+
+
+@jax.jit
+def _sign_sidecar(msb_plane):
+    """Combined 1-bit sign plane from the combined msb plane — one tiny
+    device op per plane change (slab fill / rebuild); see
+    bitplanar.sign_plane_from_msb for the bit-layout identity."""
+    return bitplanar.sign_plane_from_msb(msb_plane)
 
 
 @jax.jit
@@ -343,9 +381,11 @@ class HotClusterCache:
     zero-slot entries so their repeat probes are hits, not fresh misses.
     """
 
-    def __init__(self, budget_bytes: int, *, registry=None):
+    def __init__(self, budget_bytes: int, *, registry=None,
+                 precision_tiers: bool = False):
         if budget_bytes < 0:
             raise ValueError("budget_bytes must be >= 0")
+        self.precision_tiers = precision_tiers
         # Counters live in a metrics registry (the serving runtime's when
         # observability is on, a private one otherwise — a counter update
         # is one int add either way, and hits/misses/... stay readable as
@@ -364,6 +404,8 @@ class HotClusterCache:
         self._fill_bytes = self.registry.counter("cache_fill_bytes")
         self._fill_dispatches = self.registry.counter(
             "cache_fill_dispatches")
+        self._demotions = self.registry.counter("cache_demotions")
+        self._promotions = self.registry.counter("cache_promotions")
         self.budget_bytes = budget_bytes
         self.block_rows: int | None = None
         self.bytes_per_row: int | None = None
@@ -379,6 +421,11 @@ class HotClusterCache:
         self.version = 0
         self._slab_plane = None       # jnp (N + S*block_rows, D//2) uint8
         self._inv_norms = None        # jnp (N + S*block_rows,) f32
+        # Combined 1-bit sign plane + per-slot tier sidecar, both derived
+        # lazily and cached per plane/slot-map state (see the properties).
+        self._plane_version = 0       # bumps whenever _slab_plane changes
+        self._sign_cache: tuple[int, jax.Array] | None = None
+        self._tier_cache: tuple[int, jax.Array] | None = None
         self._packed = None           # jnp (N,) int32 membership sidecar
         self._gid0 = None             # jnp (NB + S,) int32 block origins
         self._cnt = None              # jnp (NB + S,) int32 live-row counts
@@ -423,18 +470,36 @@ class HotClusterCache:
         """Views larger than the whole slab (refused admission)."""
         return self._rejected.value
 
+    @property
+    def demotions(self) -> int:
+        """Full-tier entries squeezed down to the sign tier."""
+        return self._demotions.value
+
+    @property
+    def promotions(self) -> int:
+        """Sign-tier entries re-admitted at full precision on a re-probe."""
+        return self._promotions.value
+
     def snapshot(self) -> dict:
         """Current counter values (cumulative since the last
         `reset_stats`). Pair with `reset_stats` for windowed hit rates:
         ``reset_stats(); <serve a window>; snapshot()`` reads rates for
         exactly that window, not a lifetime average over mixed phases
         (cold fill + steady state)."""
-        return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions,
-                "stale_evictions": self.stale_evictions,
-                "rejected": self.rejected,
-                "fill_bytes": self._fill_bytes.value,
-                "fill_dispatches": self._fill_dispatches.value}
+        out = {"hits": self.hits, "misses": self.misses,
+               "evictions": self.evictions,
+               "stale_evictions": self.stale_evictions,
+               "rejected": self.rejected,
+               "fill_bytes": self._fill_bytes.value,
+               "fill_dispatches": self._fill_dispatches.value}
+        if self.precision_tiers:
+            out["demotions"] = self.demotions
+            out["promotions"] = self.promotions
+            out["sign_entries"] = sum(
+                1 for e in self._entries.values() if e.tier == TIER_SIGN)
+            out["full_entries"] = sum(
+                1 for e in self._entries.values() if e.tier == TIER_FULL)
+        return out
 
     def reset_stats(self) -> None:
         """Zero the event counters (hit/miss/eviction/fill ledgers) —
@@ -442,7 +507,7 @@ class HotClusterCache:
         only re-bases what `snapshot` reports."""
         for c in (self._hits, self._misses, self._evictions,
                   self._stale_evictions, self._rejected, self._fill_bytes,
-                  self._fill_dispatches):
+                  self._fill_dispatches, self._demotions, self._promotions):
             c.reset()
 
     @property
@@ -473,6 +538,7 @@ class HotClusterCache:
         self._fill_blocks.clear()
         self.bytes_used = 0
         self.version += 1
+        self._tier_cache = None
 
     def configure(self, block_rows: int, bytes_per_row: int) -> None:
         """Pin the slot geometry (idempotent; a change re-carves the slab
@@ -480,6 +546,11 @@ class HotClusterCache:
         if (block_rows, bytes_per_row) == (self.block_rows,
                                            self.bytes_per_row):
             return
+        if self.precision_tiers and bytes_per_row % 4:
+            # sign bytes per row = bytes_per_row / 4 (1 bit vs 4 bits per
+            # dim): the tiers' budget arithmetic needs it to be integral.
+            raise ValueError("precision_tiers needs dim % 8 == 0 "
+                             f"(bytes_per_row {bytes_per_row} % 4 != 0)")
         self._stale_evictions.inc(len(self._entries))
         self.block_rows = block_rows
         self.bytes_per_row = bytes_per_row
@@ -541,6 +612,7 @@ class HotClusterCache:
         self._cnt = jnp.concatenate(
             [jnp.full((nb,), self.block_rows, jnp.int32),
              jnp.zeros((self.num_slab_blocks,), jnp.int32)])
+        self._plane_version += 1
 
     @property
     def block_gid0(self):
@@ -549,6 +621,44 @@ class HotClusterCache:
     @property
     def block_count(self):
         return self._cnt
+
+    @property
+    def sign_plane(self):
+        """Combined 1-bit sign plane ``[arena signs | slab signs]``,
+        derived from the combined msb plane (the sign of an INT4 code IS
+        its msb nibble's top bit, so one derivation covers both regions
+        — no second fill pipeline) and cached per plane state: a
+        steady-state warm launch with no pending fills re-serves the
+        same device array. None when the dim doesn't pack 8-per-byte or
+        before `ensure_slab`."""
+        if self._slab_plane is None or (self._slab_plane.shape[1] * 2) % 8:
+            return None
+        if self._sign_cache is None or \
+                self._sign_cache[0] != self._plane_version:
+            self._sign_cache = (self._plane_version,
+                                _sign_sidecar(self._slab_plane))
+        return self._sign_cache[1]
+
+    @property
+    def block_tier(self):
+        """Per-combined-block precision-tier sidecar, (NB + S,) int8:
+        TIER_FULL on slab slots held by full-tier entries, TIER_SIGN on
+        the plane blocks of sign-tier residents, TIER_PLANE elsewhere
+        (including free slots). Diagnostic/ledger metadata — the cascade
+        itself routes through the indirection table, never this array.
+        Cached per slot-map version."""
+        if self._slab_plane is None or self.block_rows is None:
+            return None
+        if self._tier_cache is None or self._tier_cache[0] != self.version:
+            base = self._plane_rows // self.block_rows
+            tier = np.zeros(base + self.num_slab_blocks, np.int8)
+            for e in self._entries.values():
+                if e.tier == TIER_FULL and e.slab_blocks.size:
+                    tier[e.slab_blocks + base] = TIER_FULL
+                elif e.tier == TIER_SIGN and e.plane_blocks is not None:
+                    tier[e.plane_blocks] = TIER_SIGN
+            self._tier_cache = (self.version, jnp.asarray(tier))
+        return self._tier_cache[1]
 
     # -- slot map -----------------------------------------------------------
 
@@ -590,6 +700,40 @@ class HotClusterCache:
         self._misses.inc(len(missing))
         return hit_bytes, missing
 
+    def lookup_lane_tiers(self, tenant: int, clusters
+                          ) -> tuple[int, int, list[int], list[int]]:
+        """`lookup_lane` with the per-tier split the precision-tier
+        ledger needs: (full-tier hit bytes, sign-tier hit bytes,
+        sign-tier-resident cluster ids, missing cluster ids). Sign-tier
+        residents ARE hits (their sign bytes serve stage 0 on-chip and
+        their LRU position refreshes) but their stage-1 plane blocks
+        still stream from HBM — the caller charges those like misses and
+        promotes them back to full tier."""
+        resident = self._by_tenant.get(tenant)
+        if not resident:
+            self._misses.inc(len(clusters))
+            return 0, 0, [], list(clusters)
+        entries = self._entries
+        full_bytes = sign_bytes = nhits = 0
+        sign_hits: list[int] = []
+        missing: list[int] = []
+        for c in clusters:
+            if c in resident:
+                key = (tenant, c)
+                e = entries[key]
+                if e.tier == TIER_FULL:
+                    full_bytes += e.nbytes
+                else:
+                    sign_bytes += e.nbytes
+                    sign_hits.append(c)
+                entries.move_to_end(key)
+                nhits += 1
+            else:
+                missing.append(c)
+        self._hits.inc(nhits)
+        self._misses.inc(len(missing))
+        return full_bytes, sign_bytes, sign_hits, missing
+
     def peek(self, tenant: int, cluster: int) -> bool:
         """Membership check without touching hit/miss counters or LRU."""
         return (tenant, cluster) in self._entries
@@ -619,7 +763,8 @@ class HotClusterCache:
         return cls._pack_plan(np.atleast_1d(np.asarray(rows, np.int64)),
                               block_rows)[1]
 
-    def put(self, tenant: int, cluster: int, rows) -> np.ndarray | None:
+    def put(self, tenant: int, cluster: int, rows, *,
+            tier: int = TIER_FULL) -> np.ndarray | None:
         """Admit one (tenant, cluster)'s rows into the slab.
 
         `rows` are the cluster's global plane row ids for that tenant,
@@ -629,30 +774,46 @@ class HotClusterCache:
         slots; a fragmented one mirrors its whole plane blocks. The row
         copies and origin scalars are queued for the next `flush_fills`.
 
-        Returns the allocated slab slot ids (empty for an empty
-        cluster), or None when the view is larger than the whole slab.
-        The oversized check runs BEFORE any resident entry is replaced:
-        a rejected re-put must leave the existing valid entry (and its
-        accounting) untouched instead of destroying it on the way to
-        nowhere."""
+        `tier` (precision_tiers mode only): TIER_FULL copies the nibble
+        rows into slab slots as always; TIER_SIGN admits the cluster at
+        1-bit precision — NO slots, no fills, only its sign bytes
+        charged to the budget, with the indirection table left routing
+        to the plane blocks (stage-1 streams HBM; stage-0 serves the
+        sign bytes on-chip). Under tiers, slot pressure DEMOTES the LRU
+        full entry to the sign tier instead of dropping it, and byte
+        pressure drops sign-tier entries last.
+
+        Returns the allocated slab slot ids (empty for an empty or
+        sign-tier cluster), or None when the view is larger than the
+        whole slab/budget. The oversized check runs BEFORE any resident
+        entry is replaced: a rejected re-put must leave the existing
+        valid entry (and its accounting) untouched instead of
+        destroying it on the way to nowhere."""
         if self.block_rows is None:
             raise RuntimeError("configure() the slot geometry first")
+        if tier == TIER_SIGN and not self.precision_tiers:
+            raise ValueError("sign-tier admission needs precision_tiers")
         br = self.block_rows
         rows = np.atleast_1d(np.asarray(rows, np.int64)).astype(np.int32)
         n_rows = int(rows.size)
+        if n_rows == 0:
+            tier = TIER_FULL        # zero-slot memo: tiers are moot
         packed, nblk = self._pack_plan(rows, br)
+        plane_blocks = np.unique(rows // br).astype(np.int32)
+        sign_bytes = nblk * br * (self.bytes_per_row // 4)
         if packed:
             src = rows
             gid0s = [int(rows[0]) + i * br for i in range(nblk)] if n_rows \
                 else []
             cnts = [min(br, n_rows - i * br) for i in range(nblk)]
         else:
-            blocks = np.unique(rows // br)
+            blocks = plane_blocks.astype(np.int64)
             src = (blocks[:, None] * br
                    + np.arange(br, dtype=np.int64)).reshape(-1)
             gid0s = (blocks * br).tolist()
             cnts = [br] * nblk
-        if nblk > self.num_slab_blocks:
+        if (nblk > self.num_slab_blocks if tier == TIER_FULL
+                else sign_bytes > self.budget_bytes):
             # Refuse admission outright: squeezing one oversized view in
             # would first flush EVERY other tenant's warm entries and
             # then evict the new entry itself — an empty cache for
@@ -663,7 +824,8 @@ class HotClusterCache:
         old = self._entries.pop(key, None)
         if old is not None:
             self._drop_entry(key, old)
-        while len(self._free) < nblk:
+        nslots = nblk if tier == TIER_FULL else 0
+        while len(self._free) < nslots:
             # LRU scan skipping zero-slot entries: evicting an
             # empty-cluster memo frees nothing — it would only destroy
             # the memoization and inflate the eviction counter.
@@ -671,32 +833,93 @@ class HotClusterCache:
                            if e.slab_blocks.size), None)
             if victim is None:
                 break
-            self._drop_entry(victim, self._entries.pop(victim))
-            self._evictions.inc()
-        dst = np.asarray([self._free.pop() for _ in range(nblk)], np.int32)
-        nbytes = nblk * br * self.bytes_per_row
+            if self.precision_tiers:
+                self._demote(victim)    # free the slots, keep the signs
+            else:
+                self._drop_entry(victim, self._entries.pop(victim))
+                self._evictions.inc()
+        nbytes = (nblk * br * self.bytes_per_row if tier == TIER_FULL
+                  else sign_bytes)
+        if self.precision_tiers:
+            # Byte pressure (sign charges consume budget without holding
+            # slots): demote LRU full entries first, then drop LRU
+            # sign-tier entries — full precision degrades before any
+            # residency is lost outright.
+            while self.bytes_used + nbytes > self.budget_bytes:
+                vic = next((k for k, e in self._entries.items()
+                            if e.tier == TIER_FULL and e.slab_blocks.size),
+                           None)
+                if vic is not None:
+                    self._demote(vic)
+                    continue
+                vic = next((k for k, e in self._entries.items()
+                            if e.nbytes), None)
+                if vic is None:
+                    break
+                self._drop_entry(vic, self._entries.pop(vic))
+                self._evictions.inc()
+        dst = np.asarray([self._free.pop() for _ in range(nslots)],
+                         np.int32)
         self._entries[key] = _SlabEntry(slab_blocks=dst, n_rows=n_rows,
-                                        nbytes=nbytes)
+                                        nbytes=nbytes, tier=tier,
+                                        plane_blocks=plane_blocks)
         self.bytes_used += nbytes
-        self._fill_bytes.inc(nbytes)
         self._by_tenant.setdefault(tenant, set()).add(cluster)
-        if n_rows:
+        if n_rows and tier == TIER_FULL:
             self._nonempty[tenant] = self._nonempty.get(tenant, 0) + 1
-        # Queue the admission fills: row copies land at the slots' rows
-        # in packed order; scalar writes record each slot's origin.
-        for i, slot in enumerate(dst.tolist()):
-            self._fill_blocks[slot] = (gid0s[i], cnts[i])
-            seg = src[i * br:(i + 1) * br].tolist()
-            slot_row0 = slot * br
-            for j, s in enumerate(seg):
-                self._fill_rows[slot_row0 + j] = int(s)
         row = self._tenant_rows.get(tenant)
-        if row is not None:
-            base = self._plane_rows // br
-            row[2][cluster, :nblk] = dst + base
-            row[2][cluster, nblk:] = -1
+        if tier == TIER_FULL:
+            self._fill_bytes.inc(nbytes)
+            # Queue the admission fills: row copies land at the slots'
+            # rows in packed order; scalar writes record each slot's
+            # origin.
+            for i, slot in enumerate(dst.tolist()):
+                self._fill_blocks[slot] = (gid0s[i], cnts[i])
+                seg = src[i * br:(i + 1) * br].tolist()
+                slot_row0 = slot * br
+                for j, s in enumerate(seg):
+                    self._fill_rows[slot_row0 + j] = int(s)
+            if row is not None:
+                base = self._plane_rows // br
+                row[2][cluster, :nblk] = dst + base
+                row[2][cluster, nblk:] = -1
+        elif row is not None:
+            # Sign tier holds no slab rows: stage-1 keeps streaming the
+            # cluster's plane blocks, so the combined row stays the
+            # host plane row.
+            row[2][cluster] = row[1][cluster]
         self.version += 1
         return dst
+
+    def _demote(self, key: tuple[int, int]) -> None:
+        """Squeeze a full-tier entry down to the sign tier IN PLACE:
+        free its slab slots and shrink its budget charge to the
+        cluster's 1-bit sign bytes, keeping its LRU position and
+        residency. The incremental indirection row rolls back to the
+        plane blocks (stage-1 re-streams; stage-0 stays on-chip)."""
+        tenant, cluster = key
+        e = self._entries[key]
+        self.bytes_used -= e.nbytes
+        self._free.extend(int(b) for b in e.slab_blocks)
+        if e.n_rows:
+            self._nonempty[tenant] = self._nonempty.get(tenant, 1) - 1
+        sign_bytes = (e.slab_blocks.size * self.block_rows
+                      * (self.bytes_per_row // 4))
+        self._entries[key] = dataclasses.replace(
+            e, slab_blocks=np.empty(0, np.int32), nbytes=sign_bytes,
+            tier=TIER_SIGN)
+        self.bytes_used += sign_bytes
+        row = self._tenant_rows.get(tenant)
+        if row is not None:
+            row[2][cluster] = row[1][cluster]
+        self._demotions.inc()
+        self.version += 1
+
+    def promote(self, tenant: int, cluster: int, rows) -> np.ndarray | None:
+        """Re-admit a sign-tier resident at full precision (re-probe =
+        the cluster is hot again)."""
+        self._promotions.inc()
+        return self.put(tenant, cluster, rows, tier=TIER_FULL)
 
     def _drop_entry(self, key: tuple[int, int], entry: _SlabEntry) -> None:
         """Return an entry's slots and roll its tenant's combined row back
@@ -710,7 +933,10 @@ class HotClusterCache:
         tenant, cluster = key
         self.bytes_used -= entry.nbytes
         self._free.extend(int(b) for b in entry.slab_blocks)
-        if entry.n_rows:
+        if entry.n_rows and entry.tier == TIER_FULL:
+            # `fully_resident` (the compact-table precondition) counts
+            # FULL-tier views only: a sign-tier resident has no slab rows
+            # to serve a compact launch from.
             self._nonempty[tenant] = self._nonempty.get(tenant, 1) - 1
         clusters = self._by_tenant.get(tenant)
         if clusters is not None:
@@ -757,6 +983,7 @@ class HotClusterCache:
             self._slab_plane, self._inv_norms, self._gid0, self._cnt,
             jnp.asarray(src_dst), jnp.asarray(ids), jnp.asarray(g0),
             jnp.asarray(cn))
+        self._plane_version += 1
 
     def _tenant_row(self, tenant: int, host_row: np.ndarray) -> np.ndarray:
         """The tenant's (K, MB) combined-space row: its host plane row
@@ -879,6 +1106,14 @@ class ServingRuntime:
         self._m_launch_wall = reg.histogram("serve_launch_wall_seconds")
         self._m_inflight = reg.gauge("serve_inflight_depth")
         self._m_resolve_lag = reg.histogram("serve_resolve_lag_seconds")
+        # Per-stage energy split: handles held per stage name (like the
+        # gauges above) and SAMPLED every 8th launch — the split is a
+        # steady-state distribution, not a per-launch ledger, and keeping
+        # it off the per-launch path holds the metrics-enabled runtime
+        # inside the <=2% observability overhead contract. The headline
+        # energy_uj_per_query histogram stays per-launch exact.
+        self._m_stage_uj: dict[str, object] = {}
+        self._stage_energy_tick = 0
         # Clock discipline: `now` is injectable everywhere (simulated
         # clocks in tests); once any caller supplies one, implicit
         # clocks (flush() via result()) reuse the last seen value so
@@ -887,7 +1122,9 @@ class ServingRuntime:
         self._simulated = False
         self.cache = (HotClusterCache(self.cfg.cache_bytes,
                                       registry=(reg if reg.enabled
-                                                else None))
+                                                else None),
+                                      precision_tiers=(
+                                          self.cfg.precision_tiers))
                       if self.cfg.cache_bytes > 0 else None)
         self._queues: "collections.OrderedDict[int, collections.deque[_Pending]]" = (
             collections.OrderedDict())
@@ -1221,10 +1458,22 @@ class ServingRuntime:
             # pricing) only when someone is listening: keeps the
             # metrics-off launch path byte-identical to pre-obs.
             plan.publish(self.registry)
+            dim = self.index.arena.dim
             energy.observe_cost(
                 self.registry,
-                energy.cost_cascade(plan.stages, self.index.arena.dim,
-                                    batch=plan.batch), queries=b)
+                energy.cost_cascade(plan.stages, dim, batch=plan.batch),
+                queries=b)
+            # Sampled per-stage split (see __init__): every 8th launch,
+            # priced by the linear fast path on held handles.
+            self._stage_energy_tick += 1
+            if (self._stage_energy_tick - 1) % 8 == 0:
+                for s in plan.stages:
+                    h = self._m_stage_uj.get(s.name)
+                    if h is None:
+                        h = self._m_stage_uj[s.name] = self.registry.histogram(
+                            "energy_uj_per_query_stage", stage=s.name)
+                    h.observe(energy.stage_cost_uj(s, dim, batch=plan.batch),
+                              b)
 
     def _execute(self, queries: np.ndarray, tids: np.ndarray
                  ) -> tuple[RetrievalResult, engine.SchedulePlan | None,
@@ -1397,6 +1646,12 @@ class ServingRuntime:
                 compact = False     # view too narrow to hold k: full width
         if not compact:
             slab_blocks = cache.combined_table(tids, host_table)
+        # Stage-0 prescreen operand: the combined sign plane (derived
+        # from the combined msb plane, cached per plane state) rides
+        # along whenever the config prescreens — resident clusters'
+        # sign bytes then serve stage 0 from the slab region.
+        prescreen = (index.cfg.prescreen_c0 is not None
+                     and index.arena.dim % 8 == 0)
         spolicy = engine.SlabPolicy(
             packed_labels=cache.packed_labels,
             tenant_ids=policy.tenant_ids, centroid_msb=policy.centroid_msb,
@@ -1404,7 +1659,10 @@ class ServingRuntime:
             cluster_valid=self._cluster_valid(tids, host_table),
             slab_blocks=slab_blocks, block_gid0=cache.block_gid0,
             block_count=cache.block_count, slab_plane=cache.slab_plane,
-            inv_norms=cache.inv_norms, nprobe=policy.nprobe, block_rows=br)
+            inv_norms=cache.inv_norms, nprobe=policy.nprobe, block_rows=br,
+            sign_plane=(cache.sign_plane if prescreen else None),
+            block_tier=(cache.block_tier if cache.precision_tiers
+                        else None))
         res, top_clusters = index.engine.retrieve_with_clusters(
             jnp.asarray(queries), db, spolicy)
         # Dispatch done. Everything below needs the (B, nprobe) selection
@@ -1415,6 +1673,9 @@ class ServingRuntime:
         b_real = int((tids >= 0).sum())
         probe_rows = engine.probe_rows(spolicy)
 
+        c0 = (index.cfg.prescreen_budget(probe_rows) if prescreen
+              else None)
+
         def book() -> None:
             # Admissions still run AFTER the whole hit/miss loop, so the
             # ledger reflects the slot-map snapshot at retire time; a
@@ -1423,30 +1684,62 @@ class ServingRuntime:
             tc = np.asarray(top_clusters)
             bsz = tc.shape[0]
             block_bytes = br * d2
+            sign_block_bytes = br * (d2 // 4)   # 1-bit vs 4-bit rows
+            tiers = cache.precision_tiers
             hit_bytes = miss_bytes = 0
+            ps_sram = ps_hbm = 0      # stage-0 sign-byte split
             # A mutation between dispatch and retire means cluster_rows
             # now describes a DIFFERENT arena: admitting those rows into
             # this launch's (old-generation) slot map would be wrong,
             # and the next cached dispatch invalidates the slab anyway.
             stale = index.arena.generation != arena_gen
             to_admit: dict[tuple[int, int], int] = {}
+            to_promote: dict[tuple[int, int], int] = {}
             for i in range(bsz):
                 t = int(tids[i])
                 if t < 0:
                     continue                  # padding lane: all holes
                 row_table = host_table[i]
-                lane_hit, missing = cache.lookup_lane(t, tc[i].tolist())
-                hit_bytes += lane_hit
+                probes = tc[i].tolist()
+                if tiers:
+                    (lane_full, lane_sign, sign_hits,
+                     missing) = cache.lookup_lane_tiers(t, probes)
+                    hit_bytes += lane_full
+                    if c0 is not None:
+                        # Resident probes serve stage 0 on-chip: full
+                        # tier mirrors the slab's sign bytes (1/4 of its
+                        # nibble charge), sign tier is the tier's whole
+                        # point.
+                        ps_sram += lane_full // 4 + lane_sign
+                    for c in sign_hits:
+                        key = (t, c)
+                        if key not in to_promote:
+                            to_promote[key] = int((row_table[c] >= 0).sum())
+                        # sign tier holds no slab rows: stage 1 streamed
+                        # the cluster's PLANE blocks from HBM
+                        miss_bytes += to_promote[key] * block_bytes
+                else:
+                    lane_hit, missing = cache.lookup_lane(t, probes)
+                    hit_bytes += lane_hit
+                    if c0 is not None:
+                        ps_sram += lane_hit // 4
                 for c in missing:
                     key = (t, c)
                     if key not in to_admit:
                         to_admit[key] = int((row_table[c] >= 0).sum())
                     # a miss streamed the cluster's PLANE blocks from HBM
                     miss_bytes += to_admit[key] * block_bytes
-            if to_admit and not stale:
-                self._m_deferred_fills.inc(len(to_admit))
+                    if c0 is not None:
+                        ps_hbm += to_admit[key] * sign_block_bytes
+            if (to_admit or to_promote) and not stale:
+                self._m_deferred_fills.inc(len(to_admit) + len(to_promote))
                 for (t, c) in to_admit:
-                    cache.put(t, c, index.cluster_rows(t).get(c, ()))
+                    # Under tiers, first contact admits at 1-bit
+                    # precision; a re-probe promotes to full.
+                    cache.put(t, c, index.cluster_rows(t).get(c, ()),
+                              tier=(TIER_SIGN if tiers else TIER_FULL))
+                for (t, c) in to_promote:
+                    cache.promote(t, c, index.cluster_rows(t).get(c, ()))
                     # fills applied by the NEXT launch's flush
             # Ledger: the analytic cluster plan with the approx stage
             # split into measured HBM misses (+ warming prefetches) vs
@@ -1463,9 +1756,23 @@ class ServingRuntime:
                                    num_clusters=k_clusters,
                                    view_rows=probe_rows)
                 self._plan_cache[pkey] = base
-            plan = engine.cache_split_plan(base,
-                                           hbm_bytes=miss_bytes + prefetched,
-                                           sram_bytes=hit_bytes)
+            approx_hbm = miss_bytes + prefetched
+            approx_sram = hit_bytes
+            if c0 is not None and probe_rows:
+                # A prescreened stage 1 gathers only the C0 survivors,
+                # not the whole view: prorate the measured cluster-level
+                # split by the survivor fraction (survivors spread
+                # across probed clusters; an exact per-row residency
+                # split would need a second selection readback).
+                # Warming prefetches are real whole-cluster plane
+                # copies — charged unprorated.
+                frac = min(1.0, c0 / probe_rows)
+                approx_hbm = int(miss_bytes * frac) + prefetched
+                approx_sram = int(hit_bytes * frac)
+            plan = engine.cache_split_plan(
+                base, hbm_bytes=approx_hbm, sram_bytes=approx_sram,
+                prescreen_hbm=(ps_hbm if c0 is not None else None),
+                prescreen_sram=ps_sram)
             self.prefetch_bytes += prefetched
             self._m_prefetch_bytes.inc(prefetched)
             index.last_plan = plan

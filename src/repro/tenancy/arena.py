@@ -59,6 +59,11 @@ class Arena:
                                  else quantization.unit_norm_scale(dim))
         self.msb_plane = jnp.zeros((capacity, dim // 2), jnp.uint8)
         self.lsb_plane = jnp.zeros((capacity, dim // 2), jnp.uint8)
+        # 1-bit sign plane (stage-0 prescreen operand), maintained in
+        # lockstep with the nibble planes; dims that don't pack 8-per-byte
+        # simply don't get one (the prescreen requires dim % 8 == 0).
+        self.sign_plane = (jnp.zeros((capacity, dim // 8), jnp.uint8)
+                           if dim % 8 == 0 else None)
         self.norms_sq = jnp.zeros((capacity,), jnp.int32)
         self.owner = jnp.full((capacity,), FREE, jnp.int32)
         # slot -> cluster label (host-side; -1 = unassigned/free). The
@@ -91,7 +96,8 @@ class Arena:
         if self._db_cache is None or self._db_cache[0] != self.generation:
             self._db_cache = (self.generation, bitplanar.BitPlanarDB(
                 msb_plane=self.msb_plane, lsb_plane=self.lsb_plane,
-                norms_sq=self.norms_sq, scale=self.scale))
+                norms_sq=self.norms_sq, scale=self.scale,
+                sign_plane=self.sign_plane))
         return self._db_cache[1]
 
     # -- online mutation -----------------------------------------------------
@@ -128,6 +134,9 @@ class Arena:
         norms = jnp.sum(codes.astype(jnp.int32) ** 2, axis=-1)
         self.msb_plane = self.msb_plane.at[idx].set(msb)
         self.lsb_plane = self.lsb_plane.at[idx].set(lsb)
+        if self.sign_plane is not None:
+            self.sign_plane = self.sign_plane.at[idx].set(
+                bitplanar.pack_sign_plane(codes))
         self.norms_sq = self.norms_sq.at[idx].set(norms)
         self.owner = self.owner.at[idx].set(jnp.int32(owner_id))
         self.generation += 1
@@ -176,6 +185,10 @@ class Arena:
         newly_dead = int(jnp.sum(jnp.take(self.owner, idx) >= 0))
         self.msb_plane = self.msb_plane.at[idx].set(0)
         self.lsb_plane = self.lsb_plane.at[idx].set(0)
+        if self.sign_plane is not None:
+            # A zero sign byte is the packed form of all-positive dims —
+            # consistent with the zeroed nibble planes (code 0 -> bit 0).
+            self.sign_plane = self.sign_plane.at[idx].set(0)
         self.norms_sq = self.norms_sq.at[idx].set(0)
         self.owner = self.owner.at[idx].set(FREE)
         self.cluster_labels[slots] = -1
@@ -209,6 +222,8 @@ class Arena:
 
         self.msb_plane = repack(self.msb_plane, 0)
         self.lsb_plane = repack(self.lsb_plane, 0)
+        if self.sign_plane is not None:
+            self.sign_plane = repack(self.sign_plane, 0)
         self.norms_sq = repack(self.norms_sq, 0)
         self.owner = repack(self.owner, FREE)
         new_labels = np.full_like(self.cluster_labels, -1)

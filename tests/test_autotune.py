@@ -125,7 +125,8 @@ def test_autotune_speedup_vs_default_at_least_one():
     bench gate relies on exactly this."""
     table = autotune.autotune(n=256, d=32, batches=(1, 4),
                               candidates=(64, 256), reps=1,
-                              kernels=("stage1_batched", "fused_topk"))
+                              kernels=("stage1_batched", "fused_topk",
+                                       "stage0_sign"))
     assert table.entries, "search produced no entries"
     for e in table.entries.values():
         assert e["speedup_vs_default"] >= 1.0

@@ -120,3 +120,62 @@ def test_cache_hits_charged_at_sram_not_dram_rates():
         bits * en.PAPER_28NM.dram)
     assert cold.sram_pj - warm.sram_pj == pytest.approx(
         bits * en.PAPER_28NM.sram)       # 2x streamed vs 1x cached read
+
+
+def test_per_stage_split_matches_fused_cascade():
+    """The per-stage export (satellite of the adaptive-precision PR) must
+    stay consistent with the fused launch price: each stage's breakdown
+    equals the single-stage cascade, the fast linear path `stage_cost_uj`
+    prices identically (to round-off), and the stage sum exceeds the
+    fused total by exactly the (len-1) duplicated query-load SRAM term."""
+    from repro.core import engine
+    from repro.core.retrieval import RetrievalConfig
+    cfg = RetrievalConfig(k=5, metric="cosine", prescreen_c0=256)
+    plan = engine.plan(cfg, num_docs=16384, dim=256, batch=8,
+                       kind="cluster", num_clusters=64, view_rows=1024)
+    split = engine.cache_split_plan(plan, hbm_bytes=4096, sram_bytes=8192)
+    names = [s.name for s in split.stages]
+    assert names == ["prune", "prescreen", "approx", "exact"]
+    per = en.cost_per_stage(split.stages, 256, batch=split.batch)
+    assert set(per) == set(names)
+    for s in split.stages:
+        assert per[s.name].total_uj == pytest.approx(
+            en.cost_cascade((s,), 256, batch=split.batch).total_uj)
+        assert en.stage_cost_uj(s, 256, batch=split.batch) == pytest.approx(
+            per[s.name].total_uj, rel=1e-12)
+    fused = en.cost_cascade(split.stages, 256, batch=split.batch)
+    dup_query_loads = (len(names) - 1) * 256 * 8 * en.PAPER_28NM.sram
+    assert sum(c.total_pj for c in per.values()) == pytest.approx(
+        fused.total_pj + dup_query_loads)
+    # the 1-bit prescreen must cost less than the 4-bit full-view scan
+    # it replaces (the no-prescreen plan's approx stage): 4x fewer plane
+    # bits over the same rows, and DRAM dominates the stage price
+    no_ps = engine.plan(RetrievalConfig(k=5, metric="cosine"),
+                        num_docs=16384, dim=256, batch=8, kind="cluster",
+                        num_clusters=64, view_rows=1024)
+    full_view_scan = en.cost_per_stage(no_ps.stages, 256,
+                                       batch=no_ps.batch)["approx"]
+    assert per["prescreen"].total_uj < 0.5 * full_view_scan.total_uj
+
+
+def test_per_stage_export_observes_every_ledger_stage():
+    """observe_cost(stages=...) lands one labelled histogram sample per
+    ledger stage, weighted by the launch's query count — and prices it
+    exactly like the fast path (which test above pins to the exact
+    single-stage cascade)."""
+    pytest.importorskip("repro.obs")
+    from repro.core import engine
+    from repro.core.retrieval import RetrievalConfig
+    from repro.obs import MetricsRegistry
+    cfg = RetrievalConfig(k=5, metric="cosine", prescreen_c0=128)
+    plan = engine.plan(cfg, num_docs=16384, dim=256, batch=4,
+                       kind="cluster", num_clusters=64, view_rows=512)
+    reg = MetricsRegistry()
+    fused = en.cost_cascade(plan.stages, 256, batch=plan.batch)
+    en.observe_cost(reg, fused, queries=3, stages=plan.stages, dim=256,
+                    batch=plan.batch)
+    for s in plan.stages:
+        h = reg.get("histogram", "energy_uj_per_query_stage", stage=s.name)
+        assert h is not None and h.count == 3
+        assert h.total == pytest.approx(
+            3 * en.stage_cost_uj(s, 256, batch=plan.batch))

@@ -538,3 +538,154 @@ def test_masked_score_floor_is_comparator_safe():
     s = int(engine_mod.MASKED_SCORE)
     assert s * s * 1 < 2 ** 62
     assert s < -(512 * 128 * 128)       # below any D<=512 INT8 dot product
+
+
+# ---------------------------------------------------------------------------
+# Stage-0 sign prescreen (the adaptive-precision cascade)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+@pytest.mark.parametrize("policy_kind", ["cluster", "slab"])
+def test_prescreen_c0_full_view_is_bit_identical_to_no_prescreen(
+        metric, policy_kind):
+    """The parity anchor: with c0 >= the probe view the prescreen deletes
+    nothing and re-sorts survivors into view order, so the WHOLE cascade
+    is bit-identical to the prescreen-off schedule — on both backends,
+    for both metrics, through both the cluster and the slab policy."""
+    idx, policy, table, tids, q = make_slab_setup(metric)
+    db = idx.arena.db()
+    view = policy.nprobe * table.shape[2] * policy.block_rows
+    cfg_on = dataclasses.replace(idx.cfg, prescreen_c0=view)
+    slab = make_slab_policy(idx, policy, table, tids, 0.5)
+    pol = policy if policy_kind == "cluster" else slab
+    ref = RetrievalEngine(idx.cfg).retrieve(q, db, pol)
+    for backend in ("jnp", "pallas"):
+        eng = RetrievalEngine(dataclasses.replace(cfg_on, backend=backend))
+        assert_results_equal(ref, eng.retrieve(q, db, pol))
+
+
+@pytest.mark.parametrize("metric", ["cosine", "mips"])
+def test_prescreen_backend_parity_and_isolation_at_small_c0(metric):
+    """A thinning prescreen (c0 = view/4) changes the candidate set, so
+    the anchor is cross-backend bit-parity plus the isolation contract:
+    no lane ever surfaces another tenant's rows or a padding result."""
+    idx, policy, table, tids, q = make_slab_setup(metric)
+    db = idx.arena.db()
+    view = policy.nprobe * table.shape[2] * policy.block_rows
+    cfg = dataclasses.replace(idx.cfg, prescreen_c0=view // 4)
+    slab = make_slab_policy(idx, policy, table, tids, 0.5)
+    for pol in (policy, slab):
+        rj, rp = run_both_backends(
+            lambda c, p=pol: RetrievalEngine(c).retrieve(q, db, p), cfg)
+        assert_results_equal(rj, rp)
+        owner = np.asarray(idx.arena.owner)
+        ids = np.asarray(rj.indices)
+        for i, t in enumerate(tids.tolist()):
+            live = ids[i][ids[i] >= 0]
+            if t < 0:
+                assert live.size == 0
+            else:
+                assert (owner[live] == t).all()
+
+
+def _check_prescreen_survivors(seed: int, c0: int, deletes: int) -> None:
+    """The stage-level property: run CentroidPrune + SignPrescreen in
+    isolation on an arena with tombstones and verify every survivor the
+    prescreen marks visible (member=True) is a live row of the lane's
+    own tenant — stage 0 can never leak a foreign or tombstoned row
+    into stage 1's candidate view."""
+    from repro.core.bitplanar import sign_pm1
+    from repro.core.quantization import msb_nibble
+    rng = np.random.default_rng(seed)
+    idx = MultiTenantIndex(
+        512, DIM, RetrievalConfig(k=3, prescreen_c0=c0),
+        clusters=ClusterParams(num_clusters=8, nprobe=3, block_rows=32))
+    for t in range(3):
+        idx.ingest(t, jnp.asarray(
+            rng.normal(size=(96, DIM)).astype(np.float32)))
+    idx.compact()
+    if deletes:
+        live = np.nonzero(np.asarray(idx.arena.owner) >= 0)[0]
+        idx.arena.delete(rng.choice(live, size=deletes, replace=False))
+    tids = np.asarray([0, 1, 1, 2], np.int32)
+    policy, _ = idx.cluster_layout(tids)
+    q, _ = quantize_int8(jnp.asarray(
+        rng.normal(size=(4, DIM)).astype(np.float32)), per_vector=True)
+    ctx = engine_mod._CascadeCtx(
+        query_codes=q, q_msb=msb_nibble(q), db=idx.arena.db(),
+        policy=policy, cfg=idx.cfg, fns=engine_mod.stage_fns("jnp"),
+        q_sign=sign_pm1(q))
+    state = engine_mod._CascadeState()
+    state = engine_mod.CentroidPrune(policy.nprobe).run(state, ctx)
+    state = engine_mod.SignPrescreen(idx.cfg.prescreen_c0).run(state, ctx)
+    rows = np.asarray(state.rows)
+    member = np.asarray(state.member)
+    # the view really was thinned to the clamped budget
+    assert rows.shape[1] <= max(idx.cfg.k, c0)
+    owner = np.asarray(idx.arena.owner)
+    for i, t in enumerate(tids.tolist()):
+        surv = rows[i][member[i]]
+        assert (surv >= 0).all()
+        assert (owner[surv] == t).all()     # same tenant AND live
+    # ...and the full cascade agrees end-to-end
+    res = idx.retrieve(q, tids)
+    ids = np.asarray(res.indices)
+    for i, t in enumerate(tids.tolist()):
+        live_ids = ids[i][ids[i] >= 0]
+        assert (owner[live_ids] == t).all()
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dependency
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), c0=st.integers(3, 512),
+           deletes=st.integers(0, 60))
+    def test_prescreen_never_surfaces_foreign_or_dead_rows(seed, c0,
+                                                           deletes):
+        _check_prescreen_survivors(seed, c0, deletes)
+else:
+    @pytest.mark.parametrize("seed,c0,deletes",
+                             [(0, 3, 0), (1, 16, 30), (2, 64, 60),
+                              (3, 100, 17), (4, 512, 45)])
+    def test_prescreen_never_surfaces_foreign_or_dead_rows(seed, c0,
+                                                           deletes):
+        """Seeded fallback for the hypothesis property when hypothesis
+        is not installed: same check, fixed corpus of cases."""
+        _check_prescreen_survivors(seed, c0, deletes)
+
+
+def test_prescreen_schedule_plan_ledger():
+    """The prescreen's StagePlan entry: bits=1, whole view streamed at
+    D/8 bytes per row, and the downstream approx stage shrunk to the C0
+    survivor budget — all exact arithmetic."""
+    db, codebook, table, labels, q = make_clustered_db(
+        n=512, k_clusters=16, block_rows=32)
+    cfg = RetrievalConfig(k=5, prescreen_c0=128)
+    eng = RetrievalEngine(cfg)
+    policy = engine_mod.ClusterPolicy(
+        owner=jnp.zeros(512, jnp.int32), tenant_ids=jnp.zeros(4, jnp.int32),
+        labels=jnp.asarray(labels), centroid_msb=codebook.msb_plane,
+        centroid_norms=codebook.norms_sq,
+        cluster_blocks=jnp.asarray(table), nprobe=2, block_rows=32)
+    plan = eng.plan_for(db, 4, policy)
+    assert [s.name for s in plan.stages] == ["prune", "prescreen",
+                                             "approx", "exact"]
+    view = 2 * table.shape[1] * 32
+    prune, pre, approx, exact = plan.stages
+    assert pre.rows == view and pre.bits == 1
+    assert pre.bytes_hbm == 4 * view * (DIM // 8)     # sign plane, per lane
+    assert pre.compares == view
+    assert approx.rows == 128                          # C0 survivors only
+    assert approx.bytes_hbm == 4 * 128 * (DIM // 2)
+    assert plan.stage1_bytes == approx.bytes_hbm
+    # the cascade's total stage-0+stage-1 traffic beats the no-prescreen
+    # schedule's stage-1 bytes (same policy, prescreen-off config)
+    base = RetrievalEngine(RetrievalConfig(k=5)).plan_for(db, 4, policy)
+    base_s1 = [s for s in base.stages if s.name == "approx"][0].bytes_hbm
+    assert pre.bytes_hbm + approx.bytes_hbm < base_s1

@@ -246,3 +246,87 @@ def test_stage1_gather_resident_rejects_partial_plane():
     with pytest.raises(ValueError, match="block multiple"):
         ops.stage1_scores_gather_resident(msb_nibble(q), bp.msb_plane, ids,
                                           block_rows=64)
+
+
+# ---------------------------------------------------------------------------
+# Stage-0 sign-plane kernels (the 1-bit prescreen)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,b,block", [(256, 512, 8, 64), (512, 256, 1, 256),
+                                         (96, 128, 32, 32), (250, 512, 4, 64)])
+def test_stage0_sign_batched_kernel(n, d, b, block):
+    """The 1-bit sign-agreement kernel == oracle == the int8 ground
+    truth ``sum_k sign(q_k) sign(d_k)`` recomputed from the raw codes
+    (all exact integer arithmetic — bit-for-bit, zero-padded tail
+    blocks included via n=250)."""
+    db, bp, q = make_batch(n, d, b, seed=n + d + b)
+    assert bp.sign_plane is not None
+    q_sign = ops.pack_query_signs(q)
+    got = ops.stage0_sign_scores_batched(q_sign, bp.sign_plane,
+                                         block_n=block)
+    want = ref.stage0_sign_batched_ref(q_sign, bp.sign_plane)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # ground truth from the raw int8 codes (0 counts as +1 on both sides)
+    sq = np.where(np.asarray(q) < 0, -1, 1).astype(np.int64)
+    sd = np.where(np.asarray(db.values) < 0, -1, 1).astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), sq @ sd.T)
+
+
+@pytest.mark.parametrize("n,d,b,j,br", [(256, 256, 4, 6, 32),
+                                        (512, 128, 8, 4, 64),
+                                        (250, 512, 2, 8, 32)])
+def test_stage0_sign_gather_kernels_two_region_slab(n, d, b, j, br):
+    """The stage-0 scalar-prefetch gather (clamped/zero-pad convention,
+    n=250 forces a zero-padded tail) and its resident two-region variant:
+    slab-region sign blocks mirroring plane blocks score bit-equal to
+    the plain-plane gather — region-indifferent like stage 1."""
+    _, bp, q = make_batch(n, d, b, seed=n + b)
+    q_sign = ops.pack_query_signs(q)
+    rng = np.random.default_rng(j)
+    nb = -(-n // br)
+    ids = jnp.asarray(rng.integers(0, nb, (b, j)).astype(np.int32))
+    got = ops.stage0_sign_scores_gather(q_sign, bp.sign_plane, ids,
+                                        block_rows=br)
+    want = ref.stage0_sign_gather_ref(q_sign, bp.sign_plane, ids, br)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # two-region slab: pad to a block multiple, extend, remap hot blocks
+    pad = (-n) % br
+    plane = jnp.pad(bp.sign_plane, ((0, pad), (0, 0)))
+    uniq = np.unique(np.asarray(ids))
+    hot = uniq[: max(1, len(uniq) // 2)]
+    slab = jnp.concatenate(
+        [plane, jnp.zeros((len(hot) * br, d // 8), jnp.uint8)])
+    remap = {int(pb): nb + s for s, pb in enumerate(hot)}
+    rows_s = (hot[:, None] * br + np.arange(br)).reshape(-1)
+    rows_d = np.arange(len(hot) * br) + nb * br
+    slab = slab.at[jnp.asarray(rows_d)].set(slab[jnp.asarray(rows_s)])
+    sids = jnp.asarray(np.vectorize(lambda x: remap.get(int(x), int(x)))(
+        np.asarray(ids)).astype(np.int32))
+    got_slab = ops.stage0_sign_scores_gather_resident(q_sign, slab, sids,
+                                                      block_rows=br)
+    want_slab = ref.stage0_sign_gather_resident_ref(q_sign, slab, sids, br)
+    np.testing.assert_array_equal(np.asarray(got_slab),
+                                  np.asarray(want_slab))
+    np.testing.assert_array_equal(np.asarray(got_slab), np.asarray(got))
+    # the engine's lean jnp backends agree too
+    from repro.core.engine import (stage0_sign_gather_batched_jnp,
+                                   stage0_sign_gather_resident_jnp)
+    lean = stage0_sign_gather_batched_jnp(q_sign, bp.sign_plane, ids,
+                                          block_rows=br)
+    np.testing.assert_array_equal(np.asarray(lean), np.asarray(got))
+    lean_r = stage0_sign_gather_resident_jnp(q_sign, slab, sids,
+                                             block_rows=br)
+    np.testing.assert_array_equal(np.asarray(lean_r), np.asarray(got))
+
+
+def test_stage0_sign_plane_matches_msb_derivation():
+    """pack_sign_plane(codes) == sign_plane_from_msb(pack_nibble_planes'
+    msb): the identity that lets the serving slab derive its combined
+    sign plane from the combined msb plane with no second fill path."""
+    from repro.core.bitplanar import (pack_nibble_planes, pack_sign_plane,
+                                      sign_plane_from_msb)
+    rng = np.random.default_rng(29)
+    codes = jnp.asarray(rng.integers(-128, 128, (96, 64)).astype(np.int8))
+    msb, _ = pack_nibble_planes(codes)
+    np.testing.assert_array_equal(np.asarray(pack_sign_plane(codes)),
+                                  np.asarray(sign_plane_from_msb(msb)))

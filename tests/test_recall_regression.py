@@ -107,3 +107,66 @@ def test_cascade_recall_pinned(corpus):
         GOLDEN_CASCADE_INDEX_SUM
     assert int(np.asarray(res.scores, np.int64).sum()) == \
         GOLDEN_CASCADE_SCORE_SUM
+
+
+# -- the stage-0 sign prescreen on the same golden protocol ----------------
+#
+# The probe view at this operating point is NPROBE * 1 block * BLOCK_ROWS
+# = 512 rows. The sweep pins recall@5 at every prescreen budget down to
+# C0 = view/8, and the stronger property actually measured: down to
+# C0 = view/8 = 64 survivors the 1-bit prescreen admits the exact same
+# winners — results are BIT-IDENTICAL to the no-prescreen cascade, not
+# merely recall-neutral. C0 = view/4 = 128 is the bench's frontier point
+# (2x stage-0+stage-1 bytes vs no-prescreen at unchanged results).
+PRESCREEN_VIEW = NPROBE * BLOCK_ROWS                      # 512 probe rows
+GOLDEN_PRESCREEN_HITS = {512: 80, 256: 80, 128: 80, 64: 80, 32: 80}
+PRESCREEN_BIT_IDENTICAL_DOWN_TO = 64
+
+
+@pytest.fixture(scope="module")
+def cascade_setup(corpus):
+    docs, db, q, gold, cfg = corpus
+    labels = (np.arange(N) // CSIZE).astype(np.int32)
+    nc = int(labels[-1]) + 1
+    centers = np.stack([docs[labels == c].mean(axis=0) for c in range(nc)])
+    cents, _ = quantize_int8(jnp.asarray(centers.astype(np.float32)))
+    codebook = clustering.ClusterCodebook.from_codes(cents)
+    table = clustering.block_table(labels, nc, BLOCK_ROWS)
+
+    def run(run_cfg):
+        return cluster_pruned_retrieve(q, db, codebook, table, labels,
+                                       run_cfg, nprobe=NPROBE,
+                                       block_rows=BLOCK_ROWS)
+    return run, gold, cfg
+
+
+@pytest.mark.parametrize("c0", sorted(GOLDEN_PRESCREEN_HITS))
+def test_prescreen_recall_sweep_pinned(cascade_setup, c0):
+    import dataclasses
+    run, gold, cfg = cascade_setup
+    res = run(dataclasses.replace(cfg, prescreen_c0=c0))
+    assert _hits(res.indices, gold) == GOLDEN_PRESCREEN_HITS[c0]
+    if c0 >= PRESCREEN_BIT_IDENTICAL_DOWN_TO:
+        # not just recall-neutral: the exact golden fingerprints
+        assert int(np.asarray(res.indices, np.int64).sum()) == \
+            GOLDEN_CASCADE_INDEX_SUM
+        assert int(np.asarray(res.scores, np.int64).sum()) == \
+            GOLDEN_CASCADE_SCORE_SUM
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_prescreen_c0_full_view_bit_identical_on_golden_corpus(
+        cascade_setup, backend):
+    """C0 >= the whole probe view deletes nothing: the prescreened
+    cascade must reproduce the pinned no-prescreen results bit-for-bit
+    on BOTH backends — the golden-corpus anchor of the identity the
+    engine suite checks on small shapes."""
+    import dataclasses
+    run, gold, cfg = cascade_setup
+    res = run(dataclasses.replace(cfg, prescreen_c0=PRESCREEN_VIEW,
+                                  backend=backend))
+    assert _hits(res.indices, gold) == GOLDEN_HITS["cascade"]
+    assert int(np.asarray(res.indices, np.int64).sum()) == \
+        GOLDEN_CASCADE_INDEX_SUM
+    assert int(np.asarray(res.scores, np.int64).sum()) == \
+        GOLDEN_CASCADE_SCORE_SUM

@@ -22,9 +22,10 @@ DIM = 64
 
 def make_clustered_index(tenants=4, docs_per_tenant=96, k=3, seed=0,
                          num_clusters=8, nprobe=2, block_rows=32,
-                         capacity=1024):
+                         capacity=1024, prescreen_c0=None):
     rng = np.random.default_rng(seed)
-    idx = MultiTenantIndex(capacity, DIM, RetrievalConfig(k=k),
+    idx = MultiTenantIndex(capacity, DIM,
+                           RetrievalConfig(k=k, prescreen_c0=prescreen_c0),
                            clusters=ClusterParams(num_clusters=num_clusters,
                                                   nprobe=nprobe,
                                                   block_rows=block_rows))
@@ -791,3 +792,79 @@ def test_handles_are_single_assignment():
     assert h.result() is first                      # stable after resolve
     assert isinstance(h, RequestHandle)
     assert dataclasses.is_dataclass(rt.cfg)
+
+
+# ---------------------------------------------------------------------------
+# Per-cluster precision tiers (adaptive-precision cascade, serving side)
+# ---------------------------------------------------------------------------
+
+def _tier_reference(idx, q, tenants):
+    tids = np.asarray([t for t in tenants for _ in range(2)], np.int32)
+    Q = jnp.asarray(np.stack([q[t][i] for t in tenants for i in range(2)]))
+    return idx.retrieve(Q, tids)
+
+
+def _assert_lanes_match(handles, ref):
+    for lane, h in enumerate(handles):
+        res = h.result()
+        assert jnp.array_equal(res.indices, ref.indices[lane])
+        assert jnp.array_equal(res.scores, ref.scores[lane])
+        assert jnp.array_equal(res.candidate_indices,
+                               ref.candidate_indices[lane])
+
+
+def test_precision_tiers_admit_sign_promote_on_reprobe():
+    """Tier lifecycle under an AMPLE budget: misses admit at the SIGN
+    tier (no slab slots), a re-probe promotes to FULL (plane bytes
+    charged once, as the miss they replace), and the third pass serves
+    full-tier hits with ZERO stage-1 HBM bytes — every pass bit-identical
+    to the uncached prescreen cascade."""
+    idx, q = make_clustered_index(prescreen_c0=32)
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=1 << 20,
+                                           precision_tiers=True,
+                                           auto_flush=False))
+    ref = _tier_reference(idx, q, range(4))
+
+    _assert_lanes_match(run_batch(rt, q, range(4)), ref)   # pass 1: cold
+    s1 = rt.cache.snapshot()
+    assert s1["sign_entries"] > 0 and s1["full_entries"] == 0
+    assert s1["promotions"] == 0
+
+    _assert_lanes_match(run_batch(rt, q, range(4)), ref)   # pass 2: promote
+    s2 = rt.cache.snapshot()
+    assert s2["promotions"] > 0 and s2["full_entries"] > 0
+
+    hbm_before = rt.stage1_bytes_streamed
+    _assert_lanes_match(run_batch(rt, q, range(4)), ref)   # pass 3: warm
+    assert rt.stage1_bytes_streamed == hbm_before    # full-tier hits: 0 HBM
+    assert rt.last_plan.stage1_bytes == 0
+    assert rt.last_plan.stage1_bytes_sram > 0
+    s3 = rt.cache.snapshot()
+    assert s3["hits"] > s2["hits"]
+
+
+def test_precision_tiers_demote_under_pressure_bit_identical():
+    """A slab budget far below the working set forces FULL->SIGN
+    demotions instead of outright evictions; results must stay
+    bit-identical to the uncached cascade and to a full-precision-cache
+    runtime serving the same trace, and the sign tier (which holds no
+    slab slots) must retain more residents than the slab could."""
+    idx, q = make_clustered_index(prescreen_c0=32)
+    tight = 4 * 32 * (DIM // 2)      # 4 slab slots; working set is ~8+
+    rt = ServingRuntime(idx, RuntimeConfig(max_batch=8, cache_bytes=tight,
+                                           precision_tiers=True,
+                                           auto_flush=False))
+    rt_full = ServingRuntime(idx, RuntimeConfig(max_batch=8,
+                                                cache_bytes=tight,
+                                                auto_flush=False))
+    ref = _tier_reference(idx, q, range(4))
+    for _ in range(3):
+        _assert_lanes_match(run_batch(rt, q, range(4)), ref)
+        _assert_lanes_match(run_batch(rt_full, q, range(4)), ref)
+    snap = rt.cache.snapshot()
+    assert snap["demotions"] > 0
+    assert snap["sign_entries"] + snap["full_entries"] > rt.cache.num_slab_blocks
+    # sign residency prescreens without slab slots, so the tiered cache
+    # must not stream MORE stage-1 plane bytes than the thrashing
+    # full-precision cache on the same trace
+    assert rt.stage1_bytes_streamed <= rt_full.stage1_bytes_streamed
