@@ -38,8 +38,11 @@ from repro.core.retrieval import RetrievalConfig, RetrievalResult
 def pad_database(db: bitplanar.BitPlanarDB, num_shards: int) -> bitplanar.BitPlanarDB:
     """Pad row count to a multiple of num_shards with all-zero docs.
 
-    Zero docs have norm 0 => cosine similarity 0 and MIPS score 0, so they
-    never displace real results (ids >= N are also filterable downstream).
+    Zero docs have norm 0 => cosine similarity 0 and MIPS score 0. A score
+    of 0 is NOT a floor — it beats every real document whenever all true
+    scores are negative (MIPS over anti-correlated queries) — so
+    `_tournament_retrieve` masks pad rows (gid >= n_global) out of both
+    scoring stages explicitly instead of relying on their zero score.
     """
     n = db.num_docs
     pad = (-n) % num_shards
@@ -87,6 +90,13 @@ def _tournament_retrieve(q: jax.Array, msb_plane: jax.Array,
         key1 = similarity.cosine_key_f32(approx, norms_sq[None, :])
     else:
         key1 = approx.astype(jnp.float32)
+    # Pad rows (gid >= n_global, appended by pad_database) score 0, which
+    # WINS whenever every real score is negative. -inf removes them from
+    # the proposal ranking outright: each shard always holds enough real
+    # rows (sum over shards of min(c_local, real rows) >= C, since every
+    # shard has the same n_local), so the global top-C is pad-free.
+    real = (jnp.arange(n_local, dtype=jnp.int32) + offset) < n_global
+    key1 = jnp.where(real[None, :], key1, -jnp.inf)
     loc_key, loc_idx = jax.lax.top_k(key1, c_local)      # (B, c_local)
     loc_gid = (loc_idx + offset).astype(jnp.int32)
 
@@ -110,6 +120,13 @@ def _tournament_retrieve(q: jax.Array, msb_plane: jax.Array,
     nrm = jnp.take(norms_sq, local_rows, axis=0)
     exact = jax.lax.psum(jnp.where(owned, exact, 0), axis)
     cand_norms = jax.lax.psum(jnp.where(owned, nrm, 0), axis)
+    # Defense in depth for the final rerank: should a pad gid ever reach
+    # the candidate set, its exact score must not be the winning 0.
+    # (INT8 dots are bounded by 127^2 * D << 2^31, so INT32_MIN is a true
+    # floor; norm 1 keeps the non-division cosine comparator well-posed.)
+    pad_cand = cand_gid >= n_global
+    exact = jnp.where(pad_cand, jnp.iinfo(jnp.int32).min, exact)
+    cand_norms = jnp.where(pad_cand, 1, cand_norms)
 
     # ---- Replicated final rerank per lane.
     if cfg.metric == "cosine":

@@ -26,7 +26,23 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey, GetAttrKey, SequenceKey
 
+from repro.compat import mesh_from_device_array
 from repro.models.common import ModelConfig
+
+
+def serving_shard_mesh(devices) -> Mesh:
+    """1-D ("shard",) mesh over the serving shards' devices.
+
+    The sharded serving runtime's topology object: one axis, one device
+    per shard slot (devices may repeat when shards co-locate on a small
+    host — jax meshes require distinct devices, so repeats are dropped
+    and the runtime keeps its own shard->device map for dispatch). On
+    elastic shrink the runtime rebuilds this mesh from the survivors —
+    the same degrade-don't-fail posture as the training rules above."""
+    devs = list(dict.fromkeys(devices))     # de-dupe, order-preserving
+    if not devs:
+        raise ValueError("need at least one device")
+    return mesh_from_device_array(np.asarray(devs), ("shard",))
 
 
 def mesh_axes(mesh: Mesh) -> tuple[tuple[str, ...], str]:

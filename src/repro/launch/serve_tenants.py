@@ -98,6 +98,20 @@ def main(argv=None):
                     help="autotuner artifact path: load it if valid for "
                          "this device, else (with --autotune) save the "
                          "fresh search there")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="after the main trace, run the SHARDED serving "
+                         "phase: the tenants' corpora placed over this "
+                         "many shards (rendezvous-hashed placement, one "
+                         "ServingRuntime per shard, host-side tournament "
+                         "merge), parity-checked bit-for-bit against a "
+                         "single-shard baseline (0 = off)")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject an elastic failover in the sharded "
+                         "phase: kill one shard before request #N of the "
+                         "sharded trace — its tenants re-place onto the "
+                         "survivors, in-flight requests resubmit, and "
+                         "the exactly-once ledger is asserted (needs "
+                         "--shards >= 2)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", type=str, default=None,
                     help="write the end-of-run metrics registry here in "
@@ -119,6 +133,9 @@ def main(argv=None):
     if args.precision_tiers and not args.cache_kb:
         ap.error("--precision-tiers tiers the hot-cluster cache: it needs "
                  "--cache-kb > 0")
+    if args.fail_at >= 0 and args.shards < 2:
+        ap.error("--fail-at injects a shard loss: it needs --shards >= 2 "
+                 "(there must be a survivor to re-place onto)")
 
     rng = np.random.default_rng(args.seed)
     _maybe_autotune(args)
@@ -260,6 +277,7 @@ def main(argv=None):
               f"full-corpus estimate; no query was served)")
     if args.arrival != "closed":
         _openloop_phase(args, pipe, runtime, docs_of, rng)
+    sharded_ok = _sharded_phase(args, rng) if args.shards else True
     _obs_report(args, registry, tracer)
 
     if args.generate and queries:
@@ -269,7 +287,80 @@ def main(argv=None):
         out, ids, _ = pipe.answer(tids, qtoks, max_new=8)
         print(f"[gen   ] answered {out.shape[0]} users, "
               f"{out.shape[1]} tokens each")
-    return 1 if leaks else 0
+    return 1 if (leaks or not sharded_ok) else 0
+
+
+def _sharded_phase(args, rng) -> bool:
+    """--shards: pod-scale sharded serving over the elastic failover path.
+
+    A synthetic per-tenant INT8 corpus (codes are what the placement
+    layer moves; the embedding front end is exercised by the main trace
+    above) is placed over --shards rendezvous-hashed shards and serves a
+    mixed trace; the SAME trace on a single shard is the parity
+    baseline — results must be bit-identical, since placement may never
+    change answers. --fail-at N kills a shard mid-trace: its tenants
+    re-place onto the survivors from the host-side corpus log, in-flight
+    requests resubmit under the new placement, and the ledger must prove
+    zero dropped / duplicated."""
+    from repro.core.retrieval import RetrievalConfig
+    from repro.serve.sharded import (ShardedRuntimeConfig,
+                                     ShardedServingRuntime)
+    tenants, dpt, dim = args.tenants, max(args.burst, 8), 64
+    docs = {t: rng.integers(-40, 41, (dpt, dim), dtype=np.int8)
+            for t in range(tenants)}
+    trace = [(t, rng.integers(-40, 41, (dim,), dtype=np.int8))
+             for t in list(range(tenants)) * max(2, args.steps // tenants)]
+    rcfg = RetrievalConfig(k=args.topk, metric="mips", candidate_frac=1.0,
+                           max_candidates=max(50, dpt))
+
+    def build(s):
+        rt = ShardedServingRuntime(ShardedRuntimeConfig(
+            num_shards=s, capacity_per_shard=tenants * dpt, dim=dim,
+            retrieval=rcfg,
+            runtime=RuntimeConfig(max_batch=args.batch, max_wait=1.0,
+                                  cache_bytes=0, auto_flush=False)))
+        for t in range(tenants):
+            rt.ingest_codes(t, docs[t])
+        return rt
+
+    def drive(rt, fail_at=-1):
+        handles, now, report = [], 0.0, None
+        for i, (t, q) in enumerate(trace):
+            if i == fail_at:
+                # kill the shard owning THIS request's tenant, so the
+                # failover demonstrably moves tenants and re-routes work
+                report = rt.fail_shard(rt.placement.shard_of(t), now=now)
+            now += 1e-3
+            handles.append(rt.submit(t, q, now=now))
+            if i % args.batch == args.batch - 1:
+                rt.poll(now=now)
+        rt.flush(now=now + 1)
+        return [(np.asarray(h.result().indices),
+                 np.asarray(h.result().scores)) for h in handles], report
+
+    t0 = time.perf_counter()
+    base, _ = drive(build(1))
+    rt = build(args.shards)
+    got, report = drive(rt, fail_at=args.fail_at)
+    wall = time.perf_counter() - t0
+    led = rt.ledger()
+    parity = all(np.array_equal(s1, s2) and (args.fail_at >= 0
+                                             or np.array_equal(i1, i2))
+                 for (i1, s1), (i2, s2) in zip(base, got))
+    once = (led["submitted"] == led["resolved"] == len(trace)
+            and led["dropped"] == 0 and led["duplicated"] == 0)
+    print(f"[shard ] {args.shards} shards, {tenants} tenants x {dpt} docs, "
+          f"{len(trace)} requests in {wall:.2f}s   placement "
+          f"{ {t: rt.placement.shard_of(t) for t in range(tenants)} }")
+    if report is not None:
+        print(f"[shard ] failover at request {args.fail_at}: lost shard "
+              f"{report['shard']}, moved tenants {report['moved_tenants']}, "
+              f"restored {report['docs_restored']} docs, resubmitted "
+              f"{report['requests_resubmitted']} in-flight")
+    print(f"[shard ] parity vs single shard: {parity}   exactly-once: "
+          f"{once} ({led['resolved']}/{led['submitted']} resolved, "
+          f"dropped {led['dropped']}, duplicated {led['duplicated']})")
+    return parity and once
 
 
 def _maybe_autotune(args) -> None:

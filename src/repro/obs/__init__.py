@@ -7,8 +7,8 @@ never inside jitted code — and zero-cost when disabled via
 .export for the pieces, and the README's "Observability" section for
 the architecture and overhead contract.
 """
-from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               NullRegistry, NULL_REGISTRY)
+from repro.obs.metrics import (Counter, Gauge, Histogram, LabeledRegistry,
+                               MetricsRegistry, NullRegistry, NULL_REGISTRY)
 from repro.obs.tracing import (NullTracer, NULL_TRACER, TraceEvent, Tracer)
 from repro.obs.export import (chrome_trace, metrics_jsonl_records,
                               parse_prometheus, prometheus_text,
@@ -16,7 +16,8 @@ from repro.obs.export import (chrome_trace, metrics_jsonl_records,
                               write_jsonl)
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NullRegistry",
+    "Counter", "Gauge", "Histogram", "LabeledRegistry", "MetricsRegistry",
+    "NullRegistry",
     "NULL_REGISTRY", "NullTracer", "NULL_TRACER", "TraceEvent", "Tracer",
     "chrome_trace", "metrics_jsonl_records", "parse_prometheus",
     "prometheus_text", "trace_jsonl_records", "write_chrome_trace",

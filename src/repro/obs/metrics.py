@@ -309,6 +309,62 @@ class MetricsRegistry:
         for m in self._metrics.values():
             m.reset()
 
+    def labeled(self, **labels) -> "LabeledRegistry":
+        """A view of this registry that stamps `labels` onto every metric
+        it creates (e.g. `registry.labeled(shard="3")`): per-shard serving
+        runtimes instrument themselves normally and their series land
+        side by side in ONE registry, distinguished by label."""
+        return LabeledRegistry(self, labels)
+
+
+class LabeledRegistry:
+    """A label-injecting facade over a MetricsRegistry (same API).
+
+    Caller-supplied labels win on collision, so a site can still
+    sub-divide a labeled view's series."""
+
+    enabled = True
+
+    def __init__(self, parent, labels: dict):
+        self._parent = parent
+        self._labels = dict(labels)
+
+    def _merged(self, labels: dict) -> dict:
+        return {**self._labels, **labels}
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._parent.counter(name, **self._merged(labels))
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._parent.gauge(name, **self._merged(labels))
+
+    def histogram(self, name: str, *, buckets_per_doubling: int = 16,
+                  **labels) -> Histogram:
+        return self._parent.histogram(
+            name, buckets_per_doubling=buckets_per_doubling,
+            **self._merged(labels))
+
+    def inc(self, name: str, n: int | float = 1, **labels) -> None:
+        self.counter(name, **labels).inc(n)
+
+    def set_gauge(self, name: str, v: float, **labels) -> None:
+        self.gauge(name, **labels).set(v)
+
+    def observe(self, name: str, v: float, **labels) -> None:
+        self.histogram(name, **labels).observe(v)
+
+    def get(self, kind: str, name: str, **labels):
+        return self._parent.get(kind, name, **self._merged(labels))
+
+    def labeled(self, **labels) -> "LabeledRegistry":
+        return LabeledRegistry(self._parent, self._merged(labels))
+
+    def metrics(self):
+        return self._parent.metrics()
+
+    def snapshot(self) -> dict:
+        return self._parent.snapshot()
+
 
 class _NullMetric:
     """One no-op object behind every NullRegistry handle."""
@@ -388,6 +444,11 @@ class NullRegistry:
 
     def reset(self):
         pass
+
+    def labeled(self, **labels):
+        """Labels on nothing are nothing: the null view is its own
+        labeled view (keeps `registry.labeled(...)` unconditional)."""
+        return self
 
 
 NULL_REGISTRY = NullRegistry()

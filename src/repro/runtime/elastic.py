@@ -95,8 +95,17 @@ class ElasticTrainer:
                 (params, opt_state), latest = self.ckpt.restore_latest(
                     (params, opt_state), shardings)
                 step = latest
+                # Steps latest..failure-1 are about to re-run; their
+                # pre-failure losses would otherwise stay as duplicates
+                # (history[i] is step i's loss, appended before step += 1).
+                del history[latest:]
             except FileNotFoundError:
                 pass
+            # Monitor exactly the mesh's devices: build_mesh_from takes
+            # devices[:dp*mp], and heartbeats/step-times recorded for a
+            # device OUTSIDE the mesh would keep reporting it as a live
+            # (or straggling) worker it no longer is.
+            in_mesh = devices[:mesh.devices.size]
 
             try:
                 while step < num_steps:
@@ -107,7 +116,7 @@ class ElasticTrainer:
                     params, opt_state, metrics = step_fn(
                         params, opt_state, batch, mesh)
                     dt = time.monotonic() - t0
-                    for d in devices:
+                    for d in in_mesh:
                         monitor.beat(str(d.id))
                         stragglers.record(str(d.id), dt)
                     history.append(float(metrics["loss"]))
@@ -120,10 +129,17 @@ class ElasticTrainer:
                 self.ckpt.wait()
                 dead = set(wf.workers)
                 devices = [d for d in devices if str(d.id) not in dead]
+                # Dead workers leave the monitors too: a restart must not
+                # carry their stale heartbeats/step-times into the shrunk
+                # mesh's failure or straggler reports.
+                for w in dead:
+                    monitor.remove(w)
+                    stragglers.remove(w)
                 if not devices:
                     raise
                 continue
 
         return {"losses": history, "restarts": restarts,
                 "final_devices": len(devices),
+                "monitored": monitor.workers(),
                 "stragglers": stragglers.stragglers()}

@@ -66,6 +66,10 @@ class StragglerDetector:
         if len(hist) > self.window:
             del hist[0]
 
+    def remove(self, worker: str) -> None:
+        """Forget a worker (dropped from the mesh after a failure)."""
+        self._times.pop(worker, None)
+
     def _mean(self, xs):
         return sum(xs) / len(xs)
 

@@ -2,4 +2,6 @@ from repro.serve.sampler import generate, sample_tokens
 from repro.serve.rag import MultiTenantRAGPipeline, RAGPipeline
 from repro.serve.runtime import (HotClusterCache, RequestHandle,
                                  RuntimeConfig, ServingRuntime)
+from repro.serve.sharded import (ShardedHandle, ShardedRuntimeConfig,
+                                 ShardedServingRuntime)
 from repro.serve import sparse_kv

@@ -111,8 +111,19 @@ def sparse_decode_attention(q: jax.Array, cache: QuantKVCache,
     v_sel = cache.v.transpose(0, 2, 1, 3)[bidx, hidx, sel].astype(jnp.float32)
     s2 = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32), k_sel) * scale
     sel_valid = sel < jnp.reshape(length, (-1, 1, 1)).astype(jnp.int32)
-    s2 = jnp.where(sel_valid[:, :, None, :], s2, NEG_INF)
-    p = jax.nn.softmax(s2, axis=-1)
+    mask = sel_valid[:, :, None, :]
+    s2 = jnp.where(mask, s2, NEG_INF)
+    # Masked softmax with a zero-output fallback: when length < top_k the
+    # top_k over NEG_INF-masked stage-1 scores selects invalid positions,
+    # and at length == 0 EVERY selected position is invalid — a plain
+    # softmax over the all-NEG_INF row then emits NaNs (exp(0)/sum == 1/k
+    # of garbage rows at best, 0/0 after masking at worst). For non-empty
+    # rows this is bit-identical to jax.nn.softmax: masked entries
+    # contribute exp(NEG_INF - max) == 0 either way.
+    e = jnp.where(mask, jnp.exp(s2 - jnp.max(s2, axis=-1, keepdims=True)),
+                  0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.where(denom > 0, denom, 1.0)
     out = jnp.einsum("bkgt,bktd->bkgd", p, v_sel)
     return out.reshape(b, 1, h, hd).astype(q.dtype)
 

@@ -8,3 +8,4 @@ mixed batch of users' queries into a single vmapped kernel launch.
 from repro.tenancy.arena import Arena, ArenaFull, ArenaStats, FREE
 from repro.tenancy.tenants import MultiTenantIndex, TenantTable
 from repro.tenancy.scheduler import CrossTenantBatchScheduler
+from repro.tenancy.placement import PlacementTable

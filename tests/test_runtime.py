@@ -33,6 +33,44 @@ def test_straggler_detection():
     assert det.stragglers() == ["slow"]
 
 
+def test_straggler_detector_remove_forgets_worker():
+    det = StragglerDetector(k_sigma=2.0, min_steps=5)
+    for i in range(10):
+        for w in ("w0", "w1", "w2", "w3"):
+            det.record(w, 1.0 + 0.01 * i)
+        det.record("slow", 3.0)
+    det.remove("slow")
+    assert det.stragglers() == []
+
+
+def test_elastic_trainer_monitors_only_in_mesh_devices(tmp_path):
+    """A device the mesh never included (fakes beyond the real mesh size)
+    must not appear in the heartbeat monitor's worker set."""
+    cfg = get_config("qwen2-0.5b", smoke=True).with_(vocab_size=64)
+    api = get_model(cfg)
+    opt = adamw(lr=1e-3)
+    toks = np.random.default_rng(0).integers(0, 64, (4, 16)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+    trainer = ElasticTrainer(
+        make_state=_make_state_factory(cfg, api, opt),
+        ckpt=CheckpointManager(str(tmp_path)), save_every=4)
+
+    class FakeDev:
+        def __init__(self, i):
+            self.id = i
+
+    import repro.runtime.elastic as el
+    orig = el.build_mesh_from
+    el.build_mesh_from = lambda d, mp: orig(jax.devices(), 1)
+    try:
+        out = trainer.run(itertools.repeat(batch), num_steps=4,
+                          devices=[FakeDev(0), FakeDev(7)])
+    finally:
+        el.build_mesh_from = orig
+    n_mesh = min(len(jax.devices()), 2)
+    assert out["monitored"] == ["0", "7"][:n_mesh]
+
+
 def test_build_mesh_from_survivors():
     devs = jax.devices()
     mesh = build_mesh_from(devs, model_parallel=1)
@@ -84,8 +122,14 @@ def test_elastic_trainer_restarts_after_failure(tmp_path):
         el.build_mesh_from = orig
     assert out["restarts"] == 1
     assert out["final_devices"] == 1
-    # steps 10..20 re-run after restore: total recorded >= 20
-    assert len(out["losses"]) >= 20
+    # Steps 10..11 ran, failed at 12, restored to 10 and re-ran: the
+    # replayed steps' pre-failure losses must be truncated at restore, so
+    # the history holds EXACTLY one loss per step (22 pre-fix).
+    assert len(out["losses"]) == 20
+    # The dead worker must be dropped from the heartbeat monitor on
+    # restart — a restarted driver reporting device 1 as a live worker
+    # would mask the very failure it just survived.
+    assert "1" not in out["monitored"]
 
 
 def test_elastic_trainer_no_failure(tmp_path):

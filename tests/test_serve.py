@@ -93,6 +93,42 @@ def test_sparse_kv_topk_approximation_quality():
     assert err < 0.25
 
 
+def test_sparse_kv_empty_cache_returns_zeros_not_nan():
+    """length == 0: every stage-1 score is NEG_INF-masked, so every
+    selected position is invalid. The masked softmax must fall back to a
+    zero output — the pre-fix plain softmax over an all-NEG_INF row emits
+    NaNs."""
+    b, t, kh, hd, h = 2, 16, 2, 16, 4
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, t, kh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (b, t, kh, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, 1, h, hd))
+    cache = sparse_kv.build_quant_cache(k, v)
+    out = sparse_kv.sparse_decode_attention(
+        q, cache, jnp.zeros((b,), jnp.int32), top_k=8)
+    assert out.shape == q.shape
+    assert np.array_equal(np.asarray(out, np.float32),
+                          np.zeros(q.shape, np.float32))
+
+
+def test_sparse_kv_short_cache_matches_full_attention():
+    """length < top_k: top_k over the masked stage-1 scores necessarily
+    selects invalid positions; they must carry zero attention weight, so
+    the result equals full attention over the `length` valid positions
+    (pre-fix: NaN for the all-invalid rows, polluted weights otherwise)."""
+    from repro.models import attention as A
+    b, t, kh, hd, h = 2, 32, 2, 16, 4
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, t, kh, hd)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(1), (b, t, kh, hd))
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, 1, h, hd))
+    length = jnp.asarray([3, 5], jnp.int32)       # both < top_k=16
+    cache = sparse_kv.build_quant_cache(k, v)
+    got = sparse_kv.sparse_decode_attention(q, cache, length, top_k=16)
+    want = A.decode_attention(q, k, v, length)
+    assert not np.any(np.isnan(np.asarray(got, np.float32)))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=0.05)
+
+
 def test_sparse_kv_traffic_model():
     dense = sparse_kv.dense_bytes_per_step(32768, 128)
     sparse = sparse_kv.sparse_bytes_per_step(32768, 128, top_k=256)
