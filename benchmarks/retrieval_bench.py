@@ -152,6 +152,23 @@ SHARDED_FAILOVER_CHECK = ("sharded serving: mid-trace shard loss "
 SHARDED_RESTORE_CHECK = ("sharded serving: failover re-placed every "
                          "lost document and post-failure scores match "
                          "the baseline")
+# Cascade-powered decode: the KV cache served as an engine corpus. The
+# parity gate is structural (the engine-backed path must reproduce the
+# legacy sparse-KV implementation bit-for-bit, including the empty/short
+# cache edge cases, on both backends); the byte gate is the measured
+# StagePlan ledger — per (layer, kv-head) per step the cascade streams
+# T*hd/2 + 4T + k*(hd+4) + 2*k*hd bytes vs 4*T*hd dense, > 4x at
+# k << T — analytic, so it gates in smoke too.
+DECODE_PARITY_CHECK = ("decode: engine KV cascade bit-identical to legacy "
+                       "sparse_decode_attention (lengths 0/<k/>=k, both "
+                       "backends)")
+DECODE_BYTES_CHECK = ("decode: dense-vs-sparse HBM bytes/step >= 4x at "
+                      "k << T (measured ledger)")
+DECODE_BYTES_RATIO = 4.0
+DECODE_LEDGER_CHECK = ("decode: kv_plan StagePlan ledger reconciles with "
+                       "sparse_bytes_per_step")
+DECODE_TURN_CHECK = ("decode: end-to-end agent turn lands per-turn "
+                     "uJ/token (and uJ/query) in one registry")
 
 
 def _build(n, d, bmax, seed=0):
@@ -251,6 +268,7 @@ def run(verbose=True, smoke=False):
     precision = _precision_section(records, smoke=smoke, verbose=verbose,
                                    serving=serving)
     sharded = _sharded_section(records, smoke=smoke, verbose=verbose)
+    decode = _decode_section(records, smoke=smoke, verbose=verbose)
 
     mid = f"stage1_kernel_B{32 if not smoke else batches[0]}"
     checks = {
@@ -310,6 +328,10 @@ def run(verbose=True, smoke=False):
             else 1.0 if openloop["overlap_capable"]
             else OPENLOOP_WALL_SINGLE_CORE),
         OPENLOOP_TAIL_CHECK: openloop["tail_ratio"] <= OPENLOOP_TAIL_BOUND,
+        DECODE_PARITY_CHECK: decode["parity"],
+        DECODE_BYTES_CHECK: decode["ratio"] >= DECODE_BYTES_RATIO,
+        DECODE_LEDGER_CHECK: decode["ledger_ok"],
+        DECODE_TURN_CHECK: decode["turn_ok"],
     }
     checks.update(_sharded_checks(sharded))
     return {"records": records, "checks": checks}
@@ -321,6 +343,143 @@ def _sharded_checks(sec: dict) -> dict:
         SHARDED_FAILOVER_CHECK: sec["exactly_once"],
         SHARDED_RESTORE_CHECK: sec["restore_ok"],
     }
+
+
+def _decode_section(records, *, smoke, verbose):
+    """Cascade-powered decode: the KV cache behind RetrievalEngine.
+
+    Three sub-checks, mirroring the retrieval sections' discipline:
+    (1) bit parity — the engine-backed `sparse_decode_attention` vs the
+    legacy hand-rolled implementation across the edge-case lengths and
+    both backends (paged full coverage must DEGENERATE to the same
+    selection); (2) the measured byte ledger — `engine.kv_plan` priced by
+    the same `energy.cost_cascade` as retrieval, reconciling with
+    `sparse_bytes_per_step` and clearing the >= 4x dense-vs-sparse gate
+    at k << T; (3) an end-to-end agent turn (tiny models) where ONE
+    ServingRuntime schedules the retrieval launch and charges the decode
+    cascade, landing per-turn uJ/token next to uJ/query in one registry.
+    """
+    from repro.core import energy as energy_mod
+    from repro.core import engine as engine_mod
+    from repro.models import embedder as emb_mod
+    from repro.models.common import ModelConfig
+    from repro.models.registry import get_model
+    from repro.obs import MetricsRegistry
+    from repro.serve import (MultiTenantRAGPipeline, RAGAgent,
+                             RuntimeConfig, ServingRuntime, sparse_kv)
+
+    # ---- (1) bit parity: engine cascade vs legacy implementation.
+    rng = np.random.default_rng(11)
+    b, t, kh, h, hd = 2, 64, 2, 4, 32
+    kx = jnp.asarray(rng.normal(size=(b, t, kh, hd)), jnp.float32)
+    vx = jnp.asarray(rng.normal(size=(b, t, kh, hd)), jnp.float32)
+    qx = jnp.asarray(rng.normal(size=(b, 1, h, hd)), jnp.float32)
+    cache = sparse_kv.build_quant_cache(kx, vx)
+    l_full = jnp.full((b,), t, jnp.int32)
+    cache_p = sparse_kv.build_page_centroids(cache, l_full, page_rows=8)
+    parity = True
+    ref_full = sparse_kv.sparse_decode_attention_ref(qx, cache, l_full, 16)
+    for length in (0, 3, t):                    # empty / short / full
+        ll = jnp.full((b,), length, jnp.int32)
+        ref = sparse_kv.sparse_decode_attention_ref(qx, cache, ll, 16)
+        got = sparse_kv.sparse_decode_attention(qx, cache, ll, 16)
+        parity &= bool(jnp.array_equal(ref, got))
+    for backend in ("jnp", "pallas"):
+        paged = sparse_kv.sparse_decode_attention(
+            qx, cache_p, l_full, 16, npages=t // 8, backend=backend)
+        parity &= bool(jnp.array_equal(paged, ref_full))
+        # pruned schedules have no legacy twin: gate backend agreement
+        pr_j = sparse_kv.sparse_decode_attention(
+            qx, cache_p, l_full, 8, npages=4, prescreen_c0=24,
+            backend="jnp")
+        pr_p = sparse_kv.sparse_decode_attention(
+            qx, cache_p, l_full, 8, npages=4, prescreen_c0=24,
+            backend="pallas")
+        parity &= bool(jnp.array_equal(pr_j, pr_p))
+
+    # ---- (2) measured byte ledger at a real decode shape.
+    dt, dhd, dk, dkh, dqh, dlayers = ((2048, 128, 256, 8, 32, 4) if smoke
+                                      else (32768, 128, 256, 8, 32, 16))
+    flat_plan = engine_mod.kv_plan(
+        engine_mod.KVCascadeConfig(top_k=dk), batch=4, kv_heads=dkh,
+        q_heads=dqh, seq_len=dt, head_dim=dhd, layers=dlayers)
+    lanes = 4 * dkh * dlayers
+    sparse_lane = sum(s.bytes_hbm for s in flat_plan.stages) / lanes
+    ledger_ok = sparse_lane == sparse_kv.sparse_bytes_per_step(dt, dhd, dk)
+    dense_lane = sparse_kv.dense_bytes_per_step(dt, dhd)
+    ratio = dense_lane / sparse_lane
+    paged_plan = engine_mod.kv_plan(
+        engine_mod.KVCascadeConfig(top_k=dk, npages=dt // 16 // 8,
+                                   page_rows=16),
+        batch=4, kv_heads=dkh, q_heads=dqh, seq_len=dt, head_dim=dhd,
+        layers=dlayers)
+    paged_lane = sum(s.bytes_hbm for s in paged_plan.stages) / lanes
+    uj_tok = energy_mod.cost_cascade(flat_plan.stages, dhd,
+                                     batch=flat_plan.batch).total_uj
+    uj_tok_paged = energy_mod.cost_cascade(paged_plan.stages, dhd,
+                                           batch=paged_plan.batch).total_uj
+    records[f"decode_T{dt}"] = {
+        "seq_len": dt, "head_dim": dhd, "top_k": dk, "layers": dlayers,
+        "dense_bytes_per_step": dense_lane,
+        "sparse_bytes_per_step": int(sparse_lane),
+        "paged_bytes_per_step": int(paged_lane),
+        "bytes_ratio": ratio,
+        "paged_bytes_ratio": dense_lane / paged_lane,
+        "uj_per_token": uj_tok,
+        "uj_per_token_paged": uj_tok_paged,
+        "parity": bool(parity),
+        "ledger_reconciles": bool(ledger_ok),
+    }
+
+    # ---- (3) end-to-end agent turn through one runtime.
+    emb_cfg = ModelConfig(name="bench-emb", family="dense", num_layers=1,
+                          d_model=32, num_heads=2, num_kv_heads=2,
+                          d_ff=64, vocab_size=64, pooled_dim=32)
+    emb_params = emb_mod.init_params(emb_cfg, jax.random.PRNGKey(7))
+    gen_cfg = ModelConfig(name="bench-gen", family="dense", num_layers=2,
+                          d_model=64, num_heads=4, num_kv_heads=2,
+                          d_ff=96, vocab_size=64)
+    api = get_model(gen_cfg)
+    gen_params = api.init(jax.random.PRNGKey(1))
+    pipe = MultiTenantRAGPipeline.create(emb_cfg, emb_params, api,
+                                         gen_params, capacity=64,
+                                         doc_len=4)
+    for tid in range(2):
+        pipe.ingest(tid, rng.integers(0, 64, size=(6, 4)))
+    reg = MetricsRegistry()
+    rt = ServingRuntime(pipe.index,
+                        RuntimeConfig(max_batch=2, auto_flush=False),
+                        registry=reg)
+    agent = RAGAgent(pipeline=pipe, runtime=rt, top_k=16, npages=4,
+                     prescreen_c0=24, page_rows=8)
+    qtok = jnp.asarray(rng.integers(0, 64, size=(2, 4)))
+    rep = agent.turn(np.array([0, 1]), qtok, max_new=6, now=0.0)
+    hist = reg.snapshot()["histograms"]
+    turn_ok = (rep.uj_per_token > 0 and rep.uj_per_query > 0
+               and hist.get("energy_uj_per_token", {}).get("count", 0) == 6
+               and hist.get("energy_uj_per_query", {}).get("count", 0) >= 2)
+    records["agent_turn"] = {
+        "uj_per_query": rep.uj_per_query,
+        "uj_per_token": rep.uj_per_token,
+        "decode_bytes_per_token": rep.decode_bytes_per_token,
+        "dense_bytes_per_token": rep.dense_bytes_per_token,
+        "tokens_decoded": int(rt.decode_steps),
+        "decode_bytes_hbm_total": int(rt.decode_bytes_hbm),
+    }
+
+    if verbose:
+        print("== cascade-powered decode (KV cache as engine corpus) ==")
+        print(f"  parity vs legacy (0/<k/>=k, both backends): {parity}")
+        print(f"  decode_T{dt}: dense {dense_lane:,} B/step vs cascade "
+              f"{int(sparse_lane):,} ({ratio:.2f}x) vs paged "
+              f"{int(paged_lane):,} ({dense_lane / paged_lane:.2f}x) "
+              f"per (layer, kv-head)")
+        print(f"  uJ/token: flat {uj_tok:.2f}  paged {uj_tok_paged:.2f} "
+              f"(B=4, {dlayers} layers)")
+        print(f"  agent turn: {rep.uj_per_query:.3f} uJ/query + "
+              f"{rep.uj_per_token:.3f} uJ/token through one runtime")
+    return {"parity": bool(parity), "ratio": ratio,
+            "ledger_ok": bool(ledger_ok), "turn_ok": bool(turn_ok)}
 
 
 def _autotune_section(records, *, smoke, verbose):

@@ -268,6 +268,27 @@ def observe_cost(registry, cost: CostBreakdown, *, queries: int = 1,
                                stage=s.name).observe(
                 stage_cost_uj(s, dim, batch=batch, consts=consts), queries)
 
+
+def observe_decode_cost(registry, cost: CostBreakdown, *,
+                        tokens: int = 1) -> None:
+    """Record a decode launch's priced PER-TOKEN cost.
+
+    The decode-side sibling of `observe_cost`: the KV cascade's
+    `kv_plan` ledger priced through the SAME `cost_cascade` model lands
+    in `energy_uj_per_token`, so a serving trace exposes whole-turn
+    µJ/token next to retrieval's µJ/query from one registry. `cost` must
+    already be per token (one decode step); `tokens` weights the sample
+    by the number of steps the launch covered."""
+    if not getattr(registry, "enabled", False):
+        return
+    registry.histogram("energy_uj_per_token").observe(cost.total_uj,
+                                                      tokens)
+    for module, pj in (("dram", cost.dram_pj), ("sram", cost.sram_pj),
+                       ("pe", cost.pe_pj), ("simcalc", cost.simcalc_pj),
+                       ("rerank", cost.rerank_pj)):
+        registry.histogram("energy_uj_per_token_module",
+                           module=module).observe(pj * 1e-6, tokens)
+
 # ---------------------------------------------------------------------------
 # Paper-figure helpers
 # ---------------------------------------------------------------------------

@@ -1057,7 +1057,7 @@ class SchedulePlan:
     path streamed for the same work.
     """
 
-    kind: Literal["plain", "masked", "windowed", "cluster", "view"]
+    kind: Literal["plain", "masked", "windowed", "cluster", "view", "decode"]
     batch: int
     rows_scanned: int          # stage-1 rows per lane (N, window, or probe)
     candidates: int            # stage-2 budget C per lane
@@ -1257,3 +1257,443 @@ class RetrievalEngine:
         return plan(self.cfg, num_docs=db.num_docs, dim=db.dim, batch=batch,
                     kind=kind, window=window, num_clusters=num_clusters,
                     view_rows=view_rows)
+
+
+# ---------------------------------------------------------------------------
+# The KV-cache corpus adapter: decode-step attention as a cascade
+# ---------------------------------------------------------------------------
+#
+# A decode-step KV lookup is the same memory-bound shape as retrieval —
+# score a query against N stored rows, keep k, touch full precision only
+# for survivors — so it runs as the same staged cascade. The corpus is a
+# KVCachePolicy (nibble-planar quantized K cache + bf16 V), the lanes are
+# (batch, kv-head) pairs instead of queries, and the terminal stage is
+# exact softmax ATTENTION over the survivors instead of a rerank:
+#
+#   KVPagePrune     — CentroidPrune over `page_rows`-sized key pages
+#                     (Quest-style page selection: per-page INT8 mean-key
+#                     centroids scored with the per-lane rows kernel)
+#   KVSignPrescreen — SignPrescreen over the pruned pages' 1-bit sign
+#                     plane via the scalar-prefetch stage-0 gather kernel
+#   KVApproxTopK    — ApproxScan: f32 query x MSB-nibble keys (x per-row
+#                     scale), GQA group-max, per-(batch, kv-head) top-k
+#   KVExactAttend   — ExactRescore-shaped terminal: reconstruct INT8 keys
+#                     for the k survivors, exact masked softmax attention
+#
+# With npages/prescreen off the cascade degenerates to the two-stage
+# schedule serve.sparse_kv shipped originally, and is BIT-IDENTICAL to it
+# (the parity suite pins this, including empty/short caches). `kv_plan`
+# emits the same StagePlan ledger shape as `plan`, so energy.cost_cascade
+# prices decode bytes exactly like retrieval bytes.
+
+KV_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCascadeConfig:
+    """Static schedule knobs for one decode-attention cascade.
+
+    top_k: exact-attention budget per (batch, kv-head) lane.
+    npages: pages kept by KVPagePrune (None = no prune: every position
+        enters the approx scan — the original two-stage schedule).
+    page_rows: rows per key page (the prune/prescreen block size; the
+        cache length T must be a multiple when either stage is on).
+    prescreen_c0: survivors kept by the 1-bit sign prescreen (None = off;
+        requires npages — the sign gather runs over the pruned pages).
+    backend: "jnp" | "pallas" for the integer stages (the f32 approx and
+        exact-attend stages are shared verbatim between backends).
+    scale: softmax scale (None = hd ** -0.5).
+    """
+
+    top_k: int
+    npages: int | None = None
+    page_rows: int = 8
+    prescreen_c0: int | None = None
+    backend: Literal["jnp", "pallas"] = "jnp"
+    scale: float | None = None
+
+    def __post_init__(self):
+        if self.top_k < 1:
+            raise ValueError("top_k must be >= 1")
+        if self.prescreen_c0 is not None and self.npages is None:
+            raise ValueError("prescreen_c0 gates the PRUNED pages' sign "
+                             "gather: it needs npages")
+        if self.npages is not None and self.page_rows < 1:
+            raise ValueError("page_rows must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCachePolicy:
+    """The decode corpus: one layer's quantized KV cache presented to the
+    engine. Pure data (a pytree); the schedule is selected by the static
+    KVCascadeConfig, mirroring how retrieval policies pair with
+    RetrievalConfig.
+
+    k_msb / k_lsb: (B, T, KH, hd//2) uint8 nibble planes of INT8 keys.
+    k_scale: (B, T, KH) f32 per-(position, head) quant scales.
+    v: (B, T, KH, hd) compute-dtype values.
+    length: (B,) int32 valid positions per sequence.
+    cent_msb / cent_scale: optional (B, P, KH, hd//2) / (B, P, KH) page
+        centroids (P = T // page_rows) — required when npages is set.
+    k_sign: optional (B, T, KH, hd//8) packed sign sidecar; the prescreen
+        derives it from k_msb in-graph when absent (pure bit extraction,
+        identical bytes — see bitplanar.sign_plane_from_msb).
+    """
+
+    k_msb: jax.Array
+    k_lsb: jax.Array
+    k_scale: jax.Array
+    v: jax.Array
+    length: jax.Array
+    cent_msb: jax.Array | None = None
+    cent_scale: jax.Array | None = None
+    k_sign: jax.Array | None = None
+
+
+jax.tree_util.register_pytree_node(
+    KVCachePolicy,
+    lambda p: ((p.k_msb, p.k_lsb, p.k_scale, p.v, p.length, p.cent_msb,
+                p.cent_scale, p.k_sign), None),
+    lambda _, l: KVCachePolicy(*l))
+
+
+@dataclasses.dataclass
+class _KVState:
+    """The currency KV stages refine: WHICH cache positions are alive.
+
+    rows:   (B, KH, R) cache position ids of the current view (None =
+            implicit full view, the no-prune schedule).
+    member: (B, KH, R) bool — position < length, gathered alongside rows.
+    pages:  (B, KH, npages) selected page ids (ascending), kept so the
+            prescreen can address the flat sign plane by block.
+    out:    the (B, 1, H, hd) attention output, set by KVExactAttend.
+    """
+
+    rows: jax.Array | None = None
+    member: jax.Array | None = None
+    pages: jax.Array | None = None
+    out: jax.Array | None = None
+
+
+@dataclasses.dataclass
+class _KVCtx:
+    """Per-step invariants every KV stage reads. qg is the f32 grouped
+    query (B, KH, G, hd); q_codes/q_scale are its per-head-vector INT8
+    quantization (built only when a prune/prescreen stage needs integer
+    query operands for the kernels)."""
+
+    q: jax.Array
+    qg: jax.Array
+    policy: KVCachePolicy
+    cfg: KVCascadeConfig
+    fns: StageFns
+    q_codes: jax.Array | None = None
+    q_scale: jax.Array | None = None
+
+
+def _kv_flat(x: jax.Array) -> jax.Array:
+    """(B, T, KH, C) cache plane -> (B*KH*T, C) flat engine plane.
+
+    Row (b*KH + kh)*T + t holds position t of lane (b, kh) — the layout
+    that lets the existing scalar-prefetch gather kernels treat the whole
+    batched cache as ONE corpus with per-lane block ids."""
+    b, t, kh = x.shape[:3]
+    return x.transpose(0, 2, 1, 3).reshape(b * kh * t, *x.shape[3:])
+
+
+def _kv_flat_rows(rows: jax.Array, t: int) -> jax.Array:
+    """(B, KH, R) cache positions -> flat plane row ids."""
+    b, kh = rows.shape[:2]
+    lane = (jnp.arange(b, dtype=jnp.int32)[:, None, None] * kh
+            + jnp.arange(kh, dtype=jnp.int32)[None, :, None])
+    return lane * t + rows
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPagePrune:
+    """Stage 0: score the per-page centroids, keep each (batch, kv-head)
+    lane's top-`npages` valid pages, expand to an explicit position view.
+
+    Selection mirrors CentroidPrune/select_clusters: integer centroid
+    scores (per-lane rows kernel over the centroid nibble rows) scaled to
+    f32 by the query and centroid scales, GQA group-max across the G
+    query heads sharing the lane, invalid pages (entirely past `length`)
+    masked to -inf before the top-k, and the selected pages re-sorted
+    ASCENDING (the SignPrescreen convention: pruning deletes positions
+    from the view, it never reorders it — so at full page coverage the
+    view is the identity and the cascade converges to the unpruned
+    schedule)."""
+
+    npages: int
+
+    def run(self, state: _KVState, ctx: _KVCtx) -> _KVState:
+        pol, cfg = ctx.policy, ctx.cfg
+        if pol.cent_msb is None or pol.cent_scale is None:
+            raise ValueError("npages needs page centroids on the policy "
+                             "(cent_msb/cent_scale — see "
+                             "serve.sparse_kv.build_page_centroids)")
+        b, t, kh, hd = pol.v.shape
+        pr = cfg.page_rows
+        if t % pr:
+            raise ValueError(f"cache length {t} is not a multiple of "
+                             f"page_rows={pr}")
+        p = t // pr
+        if pol.cent_msb.shape[1] != p:
+            raise ValueError(f"centroid table holds {pol.cent_msb.shape[1]} "
+                             f"pages, cache has {p}")
+        npages = min(self.npages, p)
+        g = ctx.qg.shape[2]
+        q_nib = quantization.msb_nibble(ctx.q_codes).reshape(b * kh * g, hd)
+        # Per-lane centroid rows, replicated across the lane's G query
+        # heads (the codebook is tiny: P rows of hd/2 bytes).
+        cent_rows = jnp.broadcast_to(
+            pol.cent_msb.transpose(0, 2, 1, 3)[:, :, None],
+            (b, kh, g, p, hd // 2)).reshape(b * kh * g, p, hd // 2)
+        scores = ctx.fns.rows(q_nib, cent_rows)              # (B', P) int32
+        key = (scores.astype(jnp.float32).reshape(b, kh, g, p)
+               * ctx.q_scale.reshape(b, kh, g)[..., None]
+               * pol.cent_scale.transpose(0, 2, 1)[:, :, None, :])
+        key = jnp.max(key, axis=2)                           # (B, KH, P)
+        first_row = jnp.arange(p, dtype=jnp.int32) * pr
+        valid = first_row[None, None, :] < jnp.reshape(
+            pol.length, (-1, 1, 1)).astype(jnp.int32)
+        key = jnp.where(valid, key, -jnp.inf)
+        _, pages = jax.lax.top_k(key, npages)                # (B, KH, NP)
+        pages = jnp.sort(pages, axis=-1)     # pages keep cache order
+        offs = jnp.arange(pr, dtype=jnp.int32)
+        rows = (pages[..., None] * pr + offs).reshape(b, kh, npages * pr)
+        member = rows < jnp.reshape(pol.length, (-1, 1, 1)).astype(jnp.int32)
+        return dataclasses.replace(state, rows=rows, member=member,
+                                   pages=pages)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVSignPrescreen:
+    """Stage 0.5: 1-bit sign-agreement prescreen of the pruned page view.
+
+    Streams only the packed sign plane of the selected pages (hd/8 bytes
+    per position — 4x fewer than the MSB nibble stage) through the
+    stage-0 block-gather primitive over the FLAT cache plane (per-lane
+    block ids address (lane, page) pairs), group-maxes the ±1-dot
+    agreement across the lane's G query heads, and keeps the top-`c0`
+    members. Survivors are re-sorted into view order, so at
+    c0 >= view_rows the cascade is bit-identical to the no-prescreen
+    schedule — the same parity anchor the retrieval SignPrescreen pins.
+    """
+
+    c0: int
+
+    def run(self, state: _KVState, ctx: _KVCtx) -> _KVState:
+        pol, cfg = ctx.policy, ctx.cfg
+        b, t, kh, hd = pol.v.shape
+        if hd % 8:
+            raise ValueError(f"sign prescreen needs head_dim % 8 == 0, "
+                             f"got {hd}")
+        pr = cfg.page_rows
+        g = ctx.qg.shape[2]
+        r = state.rows.shape[2]
+        c0 = min(self.c0, r)
+        sign = pol.k_sign
+        flat_sign = (bitplanar.sign_plane_from_msb(_kv_flat(pol.k_msb))
+                     if sign is None else _kv_flat(sign))
+        q_sign = bitplanar.sign_pm1(ctx.q_codes).reshape(b * kh * g, hd)
+        lane = (jnp.arange(b, dtype=jnp.int32)[:, None, None] * kh
+                + jnp.arange(kh, dtype=jnp.int32)[None, :, None])
+        flat_pages = lane * (t // pr) + state.pages          # (B, KH, NP)
+        blk = jnp.broadcast_to(flat_pages[:, :, None, :],
+                               (b, kh, g, flat_pages.shape[-1]))
+        scores = ctx.fns.sign_gather(q_sign, flat_sign,
+                                     blk.reshape(b * kh * g, -1),
+                                     block_rows=pr)          # (B', R) int32
+        key = jnp.max(scores.reshape(b, kh, g, r), axis=2)   # (B, KH, R)
+        key = jnp.where(state.member, key, INT32_MIN)
+        _, sel = jax.lax.top_k(key, c0)                      # (B, KH, C0)
+        sel = jnp.sort(sel, axis=-1)         # survivors keep view order
+        rows = jnp.take_along_axis(state.rows, sel, axis=2)
+        member = jnp.take_along_axis(state.member, sel, axis=2)
+        return dataclasses.replace(state, rows=rows, member=member)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVApproxTopK:
+    """Stage 1: f32 query x MSB-nibble keys (x per-position scale), GQA
+    group-max, NEG_INF masking of dead positions, per-lane top-k.
+
+    The full-view branch is VERBATIM the original sparse_kv stage 1 (same
+    einsum on the same operands), and the gathered branch reshapes its
+    gathered rows into the same (B, R, KH, hd) layout before the same
+    einsum — so at full page coverage both branches produce bit-identical
+    scores and the selected positions match the legacy path's exactly."""
+
+    top_k: int
+
+    def run(self, state: _KVState, ctx: _KVCtx) -> _KVState:
+        pol = ctx.policy
+        b, t, kh, hd = pol.v.shape
+        if state.rows is None:
+            # Full view: every cached position scored from the MSB plane.
+            k_msb = bitplanar.unpack_nibble_plane_signed(
+                pol.k_msb.reshape(-1, hd // 2)).reshape(b, t, kh, hd)
+            s1 = jnp.einsum("bkgd,btkd->bkgt", ctx.qg,
+                            k_msb.astype(jnp.float32))
+            s1 = s1 * pol.k_scale.transpose(0, 2, 1)[:, :, None, :]
+            s1 = jnp.max(s1, axis=2)                         # (B, KH, T)
+            valid = jnp.arange(t)[None, None, :] < jnp.reshape(
+                pol.length, (-1, 1, 1)).astype(jnp.int32)
+            s1 = jnp.where(valid, s1, KV_NEG_INF)
+            k_eff = min(self.top_k, t)
+            _, sel = jax.lax.top_k(s1, k_eff)                # (B, KH, k)
+            member = sel < jnp.reshape(pol.length,
+                                       (-1, 1, 1)).astype(jnp.int32)
+            return dataclasses.replace(state, rows=sel, member=member)
+        # Gathered view: stream only the surviving positions' nibble rows
+        # from the flat plane, reshaped to the full branch's (B, R, KH, hd)
+        # layout so the scoring expression is literally the same.
+        r = state.rows.shape[2]
+        fr = _kv_flat_rows(state.rows, t)
+        g_msb = jnp.take(_kv_flat(pol.k_msb), fr.reshape(-1),
+                         axis=0).reshape(b, kh, r, hd // 2)
+        k_msb = bitplanar.unpack_nibble_plane_signed(
+            g_msb.reshape(-1, hd // 2)).reshape(b, kh, r, hd)
+        k_msb = k_msb.transpose(0, 2, 1, 3)                  # (B, R, KH, hd)
+        scale_sel = jnp.take(_kv_flat(pol.k_scale[..., None])[:, 0],
+                             fr.reshape(-1), axis=0).reshape(b, kh, r)
+        s1 = jnp.einsum("bkgd,btkd->bkgt", ctx.qg,
+                        k_msb.astype(jnp.float32))
+        s1 = s1 * scale_sel[:, :, None, :]
+        s1 = jnp.max(s1, axis=2)                             # (B, KH, R)
+        s1 = jnp.where(state.member, s1, KV_NEG_INF)
+        k_eff = min(self.top_k, r)
+        _, sel = jax.lax.top_k(s1, k_eff)                    # view-local
+        rows = jnp.take_along_axis(state.rows, sel, axis=2)
+        member = jnp.take_along_axis(state.member, sel, axis=2)
+        return dataclasses.replace(state, rows=rows, member=member)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVExactAttend:
+    """Terminal stage: gather the survivors' full nibble planes,
+    reconstruct INT8 keys, exact masked softmax attention over them.
+
+    Verbatim the original sparse_kv stage 2, including the masked-softmax
+    zero-output fallback: when length < top_k the top-k necessarily
+    selects invalid positions, and at length == 0 EVERY selected position
+    is invalid — a plain softmax over the all-NEG_INF row would emit
+    NaNs, so masked entries contribute exp 0 and an all-masked row
+    divides by 1 and outputs exact zeros."""
+
+    def run(self, state: _KVState, ctx: _KVCtx) -> _KVState:
+        pol, cfg = ctx.policy, ctx.cfg
+        b, t, kh, hd = pol.v.shape
+        h = ctx.q.shape[2]
+        k_eff = state.rows.shape[2]
+        scale = cfg.scale or hd ** -0.5
+        sel = state.rows
+        bidx = jnp.arange(b)[:, None, None]
+        hidx = jnp.arange(kh)[None, :, None]
+        msb_sel = pol.k_msb.transpose(0, 2, 1, 3)[bidx, hidx, sel]
+        lsb_sel = pol.k_lsb.transpose(0, 2, 1, 3)[bidx, hidx, sel]
+        scale_sel = jnp.take_along_axis(
+            pol.k_scale.transpose(0, 2, 1), sel, axis=-1)    # (B, KH, k)
+        k_int = bitplanar.reconstruct_int8(
+            msb_sel.reshape(-1, hd // 2),
+            lsb_sel.reshape(-1, hd // 2)).reshape(b, kh, k_eff, hd)
+        k_sel = k_int.astype(jnp.float32) * scale_sel[..., None]
+        v_sel = pol.v.transpose(0, 2, 1, 3)[bidx, hidx,
+                                            sel].astype(jnp.float32)
+        s2 = jnp.einsum("bkgd,bktd->bkgt", ctx.qg, k_sel) * scale
+        mask = state.member[:, :, None, :]
+        s2 = jnp.where(mask, s2, KV_NEG_INF)
+        e = jnp.where(mask,
+                      jnp.exp(s2 - jnp.max(s2, axis=-1, keepdims=True)),
+                      0.0)
+        denom = jnp.sum(e, axis=-1, keepdims=True)
+        p = e / jnp.where(denom > 0, denom, 1.0)
+        out = jnp.einsum("bkgt,bktd->bkgd", p, v_sel)
+        out = out.reshape(b, 1, h, hd).astype(ctx.q.dtype)
+        return dataclasses.replace(state, out=out)
+
+
+def kv_cascade_stages(cfg: KVCascadeConfig) -> tuple:
+    """The stage specs one decode step runs, selected by the config."""
+    stages: tuple = ()
+    if cfg.npages is not None:
+        stages += (KVPagePrune(cfg.npages),)
+    if cfg.prescreen_c0 is not None:
+        stages += (KVSignPrescreen(cfg.prescreen_c0),)
+    return stages + (KVApproxTopK(cfg.top_k), KVExactAttend())
+
+
+def _kv_cascade(q: jax.Array, policy: KVCachePolicy,
+                cfg: KVCascadeConfig) -> jax.Array:
+    """One decode step's staged KV attention.
+
+    q (B, 1, H, hd) against the policy's cache; returns (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    kh = policy.v.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    q_codes = q_scale = None
+    if cfg.npages is not None or cfg.prescreen_c0 is not None:
+        # Integer query operands for the kernel stages: per-head-vector
+        # INT8 quantization (a per-lane positive scale — re-applied to the
+        # centroid key before group-max so heads compare on equal terms).
+        q_codes, q_scale = quantization.quantize_int8(
+            qg.reshape(b * kh * g, hd), per_vector=True)
+    ctx = _KVCtx(q=q, qg=qg, policy=policy, cfg=cfg,
+                 fns=stage_fns(cfg.backend), q_codes=q_codes,
+                 q_scale=q_scale)
+    state = _KVState()
+    for stage in kv_cascade_stages(cfg):
+        state = stage.run(state, ctx)
+    return state.out
+
+
+kv_decode_batched = jax.jit(_kv_cascade, static_argnames=("cfg",))
+
+
+def kv_plan(cfg: KVCascadeConfig, *, batch: int, kv_heads: int,
+            q_heads: int, seq_len: int, head_dim: int,
+            layers: int = 1) -> SchedulePlan:
+    """Analytic StagePlan ledger for ONE decode step (all `layers`).
+
+    Same currency as `plan`: `rows` is per LANE — here a lane is one
+    SEQUENCE, so rows count every (layer, kv-head, query-head) MAC row
+    the step scores for it — and `bytes_hbm` is what the whole batched
+    step streams. Feed `.stages` to energy.cost_cascade with
+    batch=`batch` to price µJ per TOKEN per sequence. The no-prune plan
+    reconciles exactly with serve.sparse_kv.sparse_bytes_per_step (the
+    pruned plans differ only by gather-block padding of the final
+    partial page)."""
+    t, hd, g = seq_len, head_dim, q_heads // kv_heads
+    lanes = layers * kv_heads          # per sequence
+    stages: tuple = ()
+    r = t
+    if cfg.npages is not None:
+        p = -(-t // cfg.page_rows)
+        npages = min(cfg.npages, p)
+        stages += (StagePlan(
+            name="prune", rows=lanes * g * p, bits=4,
+            bytes_hbm=batch * lanes * p * (hd // 2 + 4),
+            compares=lanes * p),)
+        r = npages * cfg.page_rows
+    if cfg.prescreen_c0 is not None:
+        stages += (StagePlan(
+            name="prescreen", rows=lanes * g * r, bits=1,
+            bytes_hbm=batch * lanes * r * (hd // 8),
+            compares=lanes * r),)
+        r = min(cfg.prescreen_c0, r)
+    k_eff = min(cfg.top_k, r)
+    s1 = batch * lanes * r * (hd // 2 + 4)     # MSB plane + f32 scales
+    # Exact stage: both nibble planes (hd bytes) + scales for the k
+    # surviving keys, plus their bf16 V rows — K is reconstructed INT8,
+    # V streams at compute precision.
+    s2 = batch * lanes * k_eff * (hd + 4 + 2 * hd)
+    stages += (StagePlan(name="approx", rows=lanes * g * r, bits=4,
+                         bytes_hbm=s1, compares=lanes * r),
+               StagePlan(name="exact", rows=lanes * g * 2 * k_eff, bits=8,
+                         bytes_hbm=s2, compares=0))
+    return SchedulePlan(kind="decode", batch=batch, rows_scanned=r,
+                        candidates=k_eff, stage1_bytes=s1,
+                        stage1_bytes_vmapped=s1, stage2_bytes=s2,
+                        stages=stages)

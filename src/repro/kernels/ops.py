@@ -293,6 +293,19 @@ def centroid_scores_batched(q_msb: jax.Array, centroid_msb: jax.Array,
     return stage1_scores_batched(q_msb, centroid_msb, block_n=block_k)
 
 
+def centroid_scores_rows(q_msb: jax.Array, centroid_rows: jax.Array,
+                         block_p: int | None = None) -> jax.Array:
+    """Per-lane centroid scoring for the KV-decode page prune.
+
+    Unlike the shared-codebook `centroid_scores_batched`, each query lane
+    carries its OWN codebook — the page centroids of one (batch, kv-head)
+    cache lane, `(B, P, D//2)` packed MSB nibbles — so this is the
+    per-lane-rows stage-1 kernel applied to centroid planes:
+    q_msb (B, D) int8 nibbles -> (B, P) int32. P (pages per lane) is
+    small, so the codebook block is VMEM-resident per lane."""
+    return stage1_scores_rows(q_msb, centroid_rows, block_w=block_p)
+
+
 @functools.partial(jax.jit, static_argnames=("block_c",))
 def stage2_scores_batched(q: jax.Array, msb_rows: jax.Array,
                           lsb_rows: jax.Array,

@@ -77,6 +77,16 @@ def stage1_rows_batched_ref(q_eo: jax.Array, msb_rows: jax.Array) -> jax.Array:
                       for i in range(msb_rows.shape[0])])
 
 
+def centroid_scores_rows_ref(q_eo: jax.Array,
+                             centroid_rows: jax.Array) -> jax.Array:
+    """Oracle for the per-lane centroid-rows kernel (KV page prune).
+
+    Each lane scores its own page-centroid codebook; numerically this IS
+    the per-lane-rows oracle with W = pages. q_eo: (B, 2, D//2);
+    centroid_rows: (B, P, D//2). Returns (B, P) int32."""
+    return stage1_rows_batched_ref(q_eo, centroid_rows)
+
+
 def stage1_gather_batched_ref(q_eo: jax.Array, msb_plane: jax.Array,
                               block_ids: jax.Array,
                               block_rows: int) -> jax.Array:

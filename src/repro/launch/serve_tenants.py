@@ -275,6 +275,22 @@ def main(argv=None):
                                           ecfg.pooled_dim)
         print(f"[energy] {ledger.total_uj:.2f} uJ/query (analytic "
               f"full-corpus estimate; no query was served)")
+    # Decode-side energy at the deployment's reference context: the same
+    # cost_cascade pricing applied to the KV cascade's StagePlan ledger,
+    # so the generator's per-token HBM bill prints next to the
+    # retrieval-side per-query bill it shares a runtime with.
+    from repro.core import engine as engine_mod
+    from repro.serve import sparse_kv as skv
+    dt, dhd, dk = 4096, 64, 256
+    dplan = engine_mod.kv_plan(
+        engine_mod.KVCascadeConfig(top_k=dk), batch=1, kv_heads=4,
+        q_heads=8, seq_len=dt, head_dim=dhd, layers=4)
+    dcost = energy.cost_cascade(dplan.stages, dhd, batch=dplan.batch)
+    dbytes = sum(st.bytes_hbm for st in dplan.stages)
+    dense_b = skv.dense_bytes_per_step(dt, dhd) * 4 * 4   # x layers x kv-heads
+    print(f"[decode] {dcost.total_uj:.3f} uJ/token at T={dt} "
+          f"(top-{dk} cascade: {dbytes:,} B/step vs "
+          f"{dense_b:,} dense, {dense_b / max(dbytes, 1):.1f}x cut)")
     if args.arrival != "closed":
         _openloop_phase(args, pipe, runtime, docs_of, rng)
     sharded_ok = _sharded_phase(args, rng) if args.shards else True

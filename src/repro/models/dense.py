@@ -245,32 +245,86 @@ class QuantCache:
     k_scale: jax.Array  # (L, B, T, KH) f32
     v: jax.Array        # (L, B, T, KH, hd)
     length: jax.Array   # (B,)
+    # Optional Quest-style page-centroid sidecars (P = T // page_rows),
+    # maintained incrementally by decode_step_quant — enable the engine's
+    # KVPagePrune stage so the stage-1 scan reads npages*page_rows rows
+    # instead of T.
+    cent_msb: jax.Array | None = None    # (L, B, P, KH, hd//2) uint8
+    cent_scale: jax.Array | None = None  # (L, B, P, KH) f32
+    page_rows: int = 8
 
 
 jax.tree_util.register_dataclass(
-    QuantCache, data_fields=["k_msb", "k_lsb", "k_scale", "v", "length"],
-    meta_fields=[])
+    QuantCache, data_fields=["k_msb", "k_lsb", "k_scale", "v", "length",
+                             "cent_msb", "cent_scale"],
+    meta_fields=["page_rows"])
 
 
-def init_quant_cache(cfg: ModelConfig, batch: int, max_len: int) -> QuantCache:
+def init_quant_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     page_rows: int | None = None) -> QuantCache:
     l, kh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    cent_msb = cent_scale = None
+    if page_rows is not None:
+        if max_len % page_rows:
+            raise ValueError(f"max_len={max_len} not a multiple of "
+                             f"page_rows={page_rows}")
+        p = max_len // page_rows
+        cent_msb = jnp.zeros((l, batch, p, kh, hd // 2), jnp.uint8)
+        cent_scale = jnp.zeros((l, batch, p, kh), jnp.float32)
     return QuantCache(
         k_msb=jnp.zeros((l, batch, max_len, kh, hd // 2), jnp.uint8),
         k_lsb=jnp.zeros((l, batch, max_len, kh, hd // 2), jnp.uint8),
         k_scale=jnp.zeros((l, batch, max_len, kh), jnp.float32),
         v=jnp.zeros((l, batch, max_len, kh, hd), cfg.cdtype),
-        length=jnp.zeros((batch,), jnp.int32))
+        length=jnp.zeros((batch,), jnp.int32),
+        cent_msb=cent_msb, cent_scale=cent_scale,
+        page_rows=page_rows or 8)
+
+
+def quantize_cache(cache: KVCache, page_rows: int | None = None
+                   ) -> QuantCache:
+    """Convert a prefill's bf16 KVCache into the nibble-planar QuantCache
+    (keys re-quantized per (position, head); V shared by reference).
+    With `page_rows` the page-centroid sidecars are built too, so the
+    very first decode step can run the paged cascade over the prompt."""
+    from repro.serve import sparse_kv
+
+    ms, ls, ss = jax.vmap(sparse_kv.quantize_keys)(cache.k)
+    cm = cs = None
+    if page_rows is not None:
+        def _cent(m, l, s, v):
+            c = sparse_kv.build_page_centroids(
+                sparse_kv.QuantKVCache(k_msb=m, k_lsb=l, k_scale=s, v=v),
+                cache.length, page_rows)
+            return c.cent_msb, c.cent_scale
+        cm, cs = jax.vmap(_cent)(ms, ls, ss, cache.v)
+    return QuantCache(k_msb=ms, k_lsb=ls, k_scale=ss, v=cache.v,
+                      length=cache.length, cent_msb=cm, cent_scale=cs,
+                      page_rows=page_rows or 8)
 
 
 def decode_step_quant(params: Params, cache: QuantCache, tokens: jax.Array,
-                      cfg: ModelConfig, top_k: int = 256
+                      cfg: ModelConfig, top_k: int = 256,
+                      npages: int | None = None,
+                      prescreen_c0: int | None = None,
+                      backend: str = "jnp"
                       ) -> tuple[jax.Array, QuantCache]:
-    """Decode against the INT8 nibble-planar K cache with two-stage
-    hierarchical attention. Per step per layer, HBM reads are the MSB
-    plane (T*hd/2 B) + scales + top_k exact rows instead of the full
-    2*T*hd*2 B of bf16 K+V."""
+    """Decode against the INT8 nibble-planar K cache via the engine's KV
+    cascade. Per step per layer, HBM reads are the MSB plane (T*hd/2 B)
+    + scales + top_k exact rows instead of the full 2*T*hd*2 B of bf16
+    K+V; with `npages` (cache built by init_quant_cache(page_rows=...))
+    the scan itself shrinks to npages*page_rows rows behind the
+    Quest-style page prune, and `prescreen_c0` inserts the 1-bit
+    sign-plane prescreen between prune and scan. Page centroids are
+    maintained incrementally — only the appended-to page is re-averaged
+    each step (EdgeRAG's online-index discipline applied to the cache)."""
     from repro.serve import sparse_kv
 
+    has_pages = cache.cent_msb is not None
+    if npages is not None and not has_pages:
+        raise ValueError("npages requires a paged cache — build it with "
+                         "init_quant_cache(page_rows=...)")
+    page_rows = cache.page_rows
     x = embed_tokens(params, tokens, cfg)
     length = cache.length + 1
     pos = (length - 1).astype(jnp.int32)[:, None]
@@ -279,7 +333,7 @@ def decode_step_quant(params: Params, cache: QuantCache, tokens: jax.Array,
     rows = jnp.arange(b)
     idx = (length - 1).astype(jnp.int32)
 
-    def step(h, p, msb, lsb, scl, vc):
+    def step(h, p, msb, lsb, scl, vc, *cent):
         hn = rmsnorm(h, p["ln1"], cfg.norm_eps)
         q, k, v = _qkv(p, hn, cfg)
         q = apply_rope(q, cos, sin)
@@ -289,18 +343,31 @@ def decode_step_quant(params: Params, cache: QuantCache, tokens: jax.Array,
         lsb = lsb.at[rows, idx].set(nl[:, 0])
         scl = scl.at[rows, idx].set(nsc[:, 0])
         vc = vc.at[rows, idx].set(v[:, 0])
-        layer = sparse_kv.QuantKVCache(k_msb=msb, k_lsb=lsb, k_scale=scl,
-                                       v=vc)
-        o = sparse_kv.sparse_decode_attention(q, layer, length, top_k)
+        if cent:
+            cm, cs = sparse_kv.update_page_centroids(
+                msb, lsb, scl, cent[0], cent[1], length, page_rows)
+            cent = (cm, cs)
+        layer = sparse_kv.QuantKVCache(
+            k_msb=msb, k_lsb=lsb, k_scale=scl, v=vc,
+            cent_msb=cent[0] if cent else None,
+            cent_scale=cent[1] if cent else None)
+        o = sparse_kv.sparse_decode_attention(
+            q, layer, length, top_k, npages=npages,
+            prescreen_c0=prescreen_c0, page_rows=page_rows,
+            backend=backend)
         o = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, -1),
                        p["wo"].astype(h.dtype))
         h = h + o
         hn = rmsnorm(h, p["ln2"], cfg.norm_eps)
         h = h + swiglu(hn, p["w_gate"], p["w_up"], p["w_down"])
-        return h, (msb, lsb, scl, vc)
+        return h, (msb, lsb, scl, vc, *cent)
 
-    x, (ms, ls, scs, vs) = _scan_blocks(
-        params["blocks"], x, step, cfg,
-        extra_xs=(cache.k_msb, cache.k_lsb, cache.k_scale, cache.v))
+    extra = (cache.k_msb, cache.k_lsb, cache.k_scale, cache.v)
+    if has_pages:
+        extra = extra + (cache.cent_msb, cache.cent_scale)
+    x, ys = _scan_blocks(params["blocks"], x, step, cfg, extra_xs=extra)
+    ms, ls, scs, vs = ys[:4]
+    cm, cs = (ys[4], ys[5]) if has_pages else (None, None)
     return _logits(params, x, cfg), QuantCache(
-        k_msb=ms, k_lsb=ls, k_scale=scs, v=vs, length=length)
+        k_msb=ms, k_lsb=ls, k_scale=scs, v=vs, length=length,
+        cent_msb=cm, cent_scale=cs, page_rows=page_rows)

@@ -1,5 +1,6 @@
-from repro.serve.sampler import generate, sample_tokens
-from repro.serve.rag import MultiTenantRAGPipeline, RAGPipeline
+from repro.serve.sampler import generate, jitted_fns, sample_tokens
+from repro.serve.rag import (AgentTurnReport, MultiTenantRAGPipeline,
+                             RAGAgent, RAGPipeline)
 from repro.serve.runtime import (HotClusterCache, RequestHandle,
                                  RuntimeConfig, ServingRuntime)
 from repro.serve.sharded import (ShardedHandle, ShardedRuntimeConfig,

@@ -27,11 +27,12 @@ import numpy as np
 
 from repro.core import (BitPlanarDB, RetrievalConfig, RetrievalEngine,
                         build_database, energy, quantize_int8)
+from repro.core import engine as engine_mod
 from repro.core.index import ShardedIndex
 from repro.models import embedder as emb_mod
 from repro.models.common import ModelConfig
 from repro.models.registry import ModelApi
-from repro.serve.sampler import generate
+from repro.serve.sampler import generate, jitted_fns, sample_tokens
 from repro.tenancy import MultiTenantIndex
 
 
@@ -97,7 +98,16 @@ class RAGPipeline:
                                                                self.db)
             n_docs = self.db.num_docs
         dim = q_emb.shape[-1]
-        ledger = energy.cost_hierarchical(n_docs, dim)
+        # Charge what the engine's schedule actually streams — the
+        # launch's per-stage ledger (shared-plane stage-1 bytes amortized
+        # over the batch, exact stage sized by the candidate budget) —
+        # not the analytic full-scan cost_hierarchical, which ignored the
+        # batch amortization entirely and overcharged every multi-query
+        # launch. Same pattern as MultiTenantRAGPipeline.retrieve.
+        b = int(q_codes.shape[0])
+        plan = engine_mod.plan(self.retrieval_cfg, num_docs=n_docs,
+                               dim=dim, batch=b, kind="plain")
+        ledger = energy.cost_cascade(plan.stages, dim, batch=plan.batch)
         return res, ledger
 
     # -- generation --------------------------------------------------------
@@ -119,6 +129,145 @@ class RAGPipeline:
         out, _ = generate(self.gen_api, self.gen_params, {"tokens": prompt},
                           max_new=max_new, temperature=temperature, key=key)
         return out, ids, ledger
+
+
+@dataclasses.dataclass
+class AgentTurnReport:
+    """Accounting for one end-to-end agent turn (retrieve + decode)."""
+    tokens: jax.Array            # (B, max_new) generated ids
+    retrieved: np.ndarray        # (B, k) arena slot ids (-1 = no hit)
+    retrieval_cost: Any          # energy.CostBreakdown, PER QUERY
+    decode_cost: Any             # energy.CostBreakdown, PER TOKEN
+    decode_plan: Any             # engine.SchedulePlan (kind="decode")
+    uj_per_query: float
+    uj_per_token: float
+    decode_bytes_per_token: int      # measured ledger, whole batch
+    dense_bytes_per_token: int       # dense-decode baseline, whole batch
+
+
+@dataclasses.dataclass
+class RAGAgent:
+    """End-to-end agent turn: ONE `ServingRuntime` schedules both the
+    retrieval launch and the decode-step KV cascade.
+
+    The two memory-bound lookups of a wearable agent turn — corpus
+    retrieval and per-step cache attention — run through the same engine
+    cascade machinery and land in the same registry: retrieval publishes
+    its measured `SchedulePlan` and µJ/query (as before), decode charges
+    its `kv_plan` ledger via `runtime.account_decode` into µJ/token. The
+    generator must be a dense-family model (the quantized-KV decode path
+    lives in models/dense)."""
+
+    pipeline: "MultiTenantRAGPipeline"
+    runtime: Any                      # serve.runtime.ServingRuntime
+    # decode cascade knobs (see sparse_kv.sparse_decode_attention)
+    top_k: int = 64
+    npages: int | None = None
+    prescreen_c0: int | None = None
+    page_rows: int = 8
+    backend: str = "jnp"
+    _decode_jit: Any = dataclasses.field(default=None, repr=False,
+                                         compare=False)
+
+    def __post_init__(self):
+        api = self.pipeline.gen_api
+        if api is None or api.cfg.family != "dense":
+            raise ValueError("RAGAgent needs a dense-family generator "
+                             "(quantized-KV decode lives in models/dense)")
+        if self.runtime.index is not self.pipeline.index:
+            raise ValueError("runtime must serve the pipeline's index — "
+                             "one runtime schedules retrieval AND decode")
+
+    # -- decode plumbing ---------------------------------------------------
+
+    def _decode_step(self):
+        if self._decode_jit is None:
+            from repro.models import dense
+            cfg = self.pipeline.gen_api.cfg
+            knobs = dict(top_k=self.top_k, npages=self.npages,
+                         prescreen_c0=self.prescreen_c0,
+                         backend=self.backend)
+            self._decode_jit = jax.jit(
+                lambda p, c, t: dense.decode_step_quant(p, c, t, cfg,
+                                                        **knobs))
+        return self._decode_jit
+
+    def _total_len(self, prompt_len: int, max_new: int) -> int:
+        total = prompt_len + max_new
+        if self.npages is not None:
+            total = -(-total // self.page_rows) * self.page_rows
+        return total
+
+    # -- the turn ----------------------------------------------------------
+
+    def turn(self, tenant_ids, query_tokens: jax.Array, *,
+             max_new: int = 16, temperature: float = 0.0, key=None,
+             now: float | None = None) -> AgentTurnReport:
+        """Retrieve through the runtime, generate with the KV cascade,
+        charge both against one registry. Returns an AgentTurnReport."""
+        from repro.models import dense
+
+        pipe = self.pipeline
+        api, cfg = pipe.gen_api, pipe.gen_api.cfg
+        # 1. retrieval: per-request admission through the runtime (the
+        # scheduler batches the tenants into one segment-masked launch).
+        q_emb = pipe._embed(jnp.asarray(query_tokens))
+        q_codes, _ = quantize_int8(q_emb, per_vector=True)
+        codes = np.asarray(q_codes)
+        handles = [self.runtime.submit(int(t), codes[i], now=now)
+                   for i, t in enumerate(np.asarray(tenant_ids))]
+        self.runtime.flush(now=now)
+        ids = np.stack([np.asarray(h.result().indices) for h in handles])
+        retrieval_cost = self.runtime.energy_ledger(q_emb.shape[-1])
+        # 2. prompt assembly (invalid hits contribute zero tokens).
+        b, k = ids.shape
+        flat = ids.reshape(-1)
+        docs = np.where((flat >= 0)[:, None],
+                        pipe.doc_tokens[np.maximum(flat, 0)], 0)
+        docs = jnp.asarray(docs.reshape(b, k * pipe.doc_tokens.shape[1]))
+        prompt = jnp.concatenate([docs, jnp.asarray(query_tokens)], axis=1)
+        prompt = jnp.clip(prompt, 0, cfg.vocab_size - 1)
+        # 3. prefill (cached jit — no per-turn recompiles), then convert
+        # the bf16 cache to the nibble-planar QuantCache once.
+        total = self._total_len(prompt.shape[1], max_new)
+        prefill_fn, _ = jitted_fns(api)
+        logits, cache = prefill_fn(self.pipeline.gen_params,
+                                   {"tokens": prompt}, max_len=total)
+        qcache = dense.quantize_cache(
+            cache, page_rows=self.page_rows if self.npages else None)
+        # 4. decode loop: every step's attention is the engine cascade.
+        key = key if key is not None else jax.random.PRNGKey(0)
+        step = self._decode_step()
+        tok = sample_tokens(logits[:, -1:], key, temperature)
+        outs = [tok]
+        for i in range(max_new - 1):
+            key = jax.random.fold_in(key, i)
+            logits, qcache = step(pipe.gen_params, qcache, tok)
+            tok = sample_tokens(logits, key, temperature)
+            outs.append(tok)
+        toks = jnp.concatenate(outs, axis=1)
+        # 5. decode accounting: one kv_plan prices the run (the stage
+        # geometry is fixed at the cache's allocated length), charged
+        # through the SAME runtime as the retrieval launch.
+        kv_cfg = engine_mod.KVCascadeConfig(
+            top_k=self.top_k, npages=self.npages, page_rows=self.page_rows,
+            prescreen_c0=self.prescreen_c0, backend=self.backend)
+        plan = engine_mod.kv_plan(kv_cfg, batch=b,
+                                  kv_heads=cfg.num_kv_heads,
+                                  q_heads=cfg.num_heads, seq_len=total,
+                                  head_dim=cfg.hd, layers=cfg.num_layers)
+        decode_cost = self.runtime.account_decode(plan, dim=cfg.hd,
+                                                  tokens=max_new)
+        from repro.serve import sparse_kv
+        dense_bytes = (b * cfg.num_layers * cfg.num_kv_heads
+                       * sparse_kv.dense_bytes_per_step(total, cfg.hd))
+        return AgentTurnReport(
+            tokens=toks, retrieved=ids, retrieval_cost=retrieval_cost,
+            decode_cost=decode_cost, decode_plan=plan,
+            uj_per_query=retrieval_cost.total_uj,
+            uj_per_token=decode_cost.total_uj,
+            decode_bytes_per_token=sum(s.bytes_hbm for s in plan.stages),
+            dense_bytes_per_token=dense_bytes)
 
 
 @dataclasses.dataclass

@@ -1156,6 +1156,10 @@ class ServingRuntime:
         self.stage_bytes: dict[str, int] = {}       # per-stage HBM
         self.stage_bytes_sram: dict[str, int] = {}  # per-stage cache-SRAM
         self.last_plan: engine.SchedulePlan | None = None
+        # -- decode-side ledger (engine.kv_plan units) ---------------------
+        self.decode_steps = 0
+        self.decode_bytes_hbm = 0
+        self.last_decode_plan: engine.SchedulePlan | None = None
 
     # -- admission ----------------------------------------------------------
 
@@ -1817,3 +1821,39 @@ class ServingRuntime:
         return energy.cost_cascade(self.last_plan.stages,
                                    dim or self.index.arena.dim,
                                    batch=self.last_plan.batch)
+
+    # -- decode accounting --------------------------------------------------
+
+    def account_decode(self, plan: engine.SchedulePlan, *, dim: int,
+                       tokens: int = 1):
+        """Charge a decode run's KV-cascade ledger through this runtime.
+
+        `plan` is ONE decode step's `engine.kv_plan` (kind="decode");
+        `tokens` scales it to the whole run — the stage geometry is
+        identical every step at a fixed cache length, so one plan prices
+        the run the way one launch plan prices a retrieval batch. The
+        scaled ledger fans out through the same `SchedulePlan.publish`
+        counters as retrieval launches (stage_rows / stage_bytes_hbm per
+        stage name), and the priced per-token cost lands in the
+        `energy_uj_per_token` histogram — one runtime, one registry, two
+        memory-bound workloads. Returns the per-token CostBreakdown."""
+        if plan.kind != "decode":
+            raise ValueError(f"account_decode wants a kind='decode' plan, "
+                             f"got {plan.kind!r}")
+        scaled = dataclasses.replace(
+            plan,
+            stages=tuple(dataclasses.replace(
+                s, bytes_hbm=s.bytes_hbm * tokens,
+                bytes_sram=s.bytes_sram * tokens,
+                compares=s.compares * tokens) for s in plan.stages),
+            stage1_bytes=plan.stage1_bytes * tokens,
+            stage1_bytes_vmapped=plan.stage1_bytes_vmapped * tokens,
+            stage2_bytes=plan.stage2_bytes * tokens)
+        self.decode_steps += tokens
+        self.decode_bytes_hbm += sum(s.bytes_hbm for s in scaled.stages)
+        self.last_decode_plan = plan
+        cost = energy.cost_cascade(plan.stages, dim, batch=plan.batch)
+        if self.registry.enabled:
+            scaled.publish(self.registry)
+            energy.observe_decode_cost(self.registry, cost, tokens=tokens)
+        return cost

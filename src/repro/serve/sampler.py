@@ -1,12 +1,36 @@
 """Batched autoregressive sampling loop over any ModelApi."""
 from __future__ import annotations
 
+import weakref
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.registry import ModelApi
+
+# Jitted (prefill, decode_step) per ModelApi instance. Keyed on id() with
+# a weakref staleness guard (ModelApi instances may not be hashable /
+# weak-hashable as dict keys across registries): if a new object reuses a
+# dead id, the guard misses and we re-wrap. Without this cache every
+# generate() call wrapped api.prefill/api.decode_step in a FRESH jax.jit,
+# whose per-wrapper trace cache made every request recompile the model.
+_JIT_CACHE: dict[int, tuple] = {}
+
+
+def jitted_fns(api: ModelApi):
+    """The per-api cached (jitted_prefill, jitted_decode_step) pair."""
+    ent = _JIT_CACHE.get(id(api))
+    if ent is not None and ent[0]() is api:
+        return ent[1]
+    fns = (jax.jit(api.prefill, static_argnames=("max_len",)),
+           jax.jit(api.decode_step))
+    try:
+        ref = weakref.ref(api)
+    except TypeError:           # non-weakrefable api: pin it alive instead
+        ref = (lambda a: (lambda: a))(api)
+    _JIT_CACHE[id(api)] = (ref, fns)
+    return fns
 
 
 def sample_tokens(logits: jax.Array, key, temperature: float = 0.0
@@ -30,9 +54,10 @@ def generate(api: ModelApi, params: Any, batch: dict, *, max_new: int,
     prompt_len = batch["tokens"].shape[1]
     total = max_len or (prompt_len + max_new)
 
-    prefill = jax.jit(api.prefill, static_argnames=("max_len",)) if jit \
-        else api.prefill
-    decode = jax.jit(api.decode_step) if jit else api.decode_step
+    if jit:
+        prefill, decode = jitted_fns(api)
+    else:
+        prefill, decode = api.prefill, api.decode_step
 
     logits, cache = prefill(params, batch, max_len=total)
     tok = sample_tokens(logits[:, -1:], key, temperature)

@@ -3,10 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import RetrievalConfig
+from repro.core import RetrievalConfig, energy
 from repro.models import embedder, get_model
 from repro.models.common import ModelConfig
-from repro.serve import RAGPipeline, generate, sparse_kv
+from repro.serve import RAGPipeline, generate, jitted_fns, sparse_kv
 
 
 def tiny_gen():
@@ -56,6 +56,48 @@ def test_rag_pipeline_end_to_end():
     assert ledger.total_uj > 0
     out, ids, _ = pipe.answer(q, max_new=4)
     assert out.shape == (2, 4)
+
+
+def test_generate_zero_extra_compiles_on_repeat_calls():
+    """generate() must reuse the per-ModelApi cached jits: the second
+    call at the same shapes adds ZERO compile-cache entries (pre-fix it
+    wrapped api.prefill/api.decode_step in a fresh jax.jit per call,
+    recompiling the model every request)."""
+    api, params = tiny_gen()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 128)
+    generate(api, params, {"tokens": toks}, max_new=3)       # warm
+    prefill_jit, decode_jit = jitted_fns(api)
+    before = (prefill_jit._cache_size(), decode_jit._cache_size())
+    o1, _ = generate(api, params, {"tokens": toks}, max_new=3)
+    o2, _ = generate(api, params, {"tokens": toks}, max_new=3)
+    after = (prefill_jit._cache_size(), decode_jit._cache_size())
+    assert after == before, f"recompiled: {before} -> {after}"
+    assert jitted_fns(api) == (prefill_jit, decode_jit)      # stable pair
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_rag_pipeline_energy_charges_measured_cascade():
+    """RAGPipeline.retrieve must price the launch's measured SchedulePlan
+    (stage-1 plane bytes amortized over the query batch), not the
+    analytic full-scan cost_hierarchical. Pin the delta: for B > 1 the
+    cascade ledger is strictly cheaper than the full-scan charge, and it
+    equals cost_cascade of the engine's plain plan exactly."""
+    from repro.core import engine as engine_mod
+    ecfg, eparams = tiny_embedder()
+    api, gparams = tiny_gen()
+    rng = np.random.default_rng(3)
+    doc_tokens = jnp.asarray(rng.integers(0, 128, (40, 12)).astype(np.int32))
+    pipe = RAGPipeline.build(ecfg, eparams, api, gparams, doc_tokens,
+                             RetrievalConfig(k=2))
+    q = doc_tokens[jnp.asarray([5, 17, 23])]                 # B = 3
+    _, ledger = pipe.retrieve(q)
+    dim = ecfg.pooled_dim
+    plan = engine_mod.plan(pipe.retrieval_cfg, num_docs=40, dim=dim,
+                           batch=3, kind="plain")
+    want = energy.cost_cascade(plan.stages, dim, batch=plan.batch)
+    assert ledger.total_uj == want.total_uj
+    full_scan = energy.cost_hierarchical(40, dim)
+    assert ledger.total_uj < full_scan.total_uj
 
 
 def test_sparse_kv_matches_full_attention_when_k_covers_cache():
